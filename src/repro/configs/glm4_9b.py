@@ -1,0 +1,17 @@
+"""glm4-9b [dense] — 40L, d_model 4096, 32H (GQA kv=2), d_ff 13696,
+vocab 151552; RoPE + GQA.  [hf:THUDM/glm-4-9b]"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="glm4-9b",
+    family="dense",
+    num_layers=40,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=2,
+    d_ff=13_696,
+    vocab_size=151_552,
+)
+
+SMOKE = CONFIG.with_(num_layers=4, d_model=64, d_ff=128, vocab_size=512,
+                     num_heads=8, num_kv_heads=2)

@@ -1,0 +1,25 @@
+"""internvl2-1b [vlm] — InternLM2 backbone: 24L, d_model 896, 14H
+(GQA kv=2), d_ff 4864, vocab 151655.  [arXiv:2404.16821]
+
+Per the assignment the InternViT frontend is a STUB: ``input_specs()``
+provides precomputed patch embeddings (B, S, d_model) that bypass the
+token embedding (``frontend="embed"``).  14 heads don't divide the model
+axis -> shard head_dim (64)."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-1b",
+    family="vlm",
+    num_layers=24,
+    d_model=896,
+    num_heads=14,
+    num_kv_heads=2,
+    d_ff=4864,
+    vocab_size=151_655,
+    frontend="embed",
+    sharding_overrides={"heads": None, "kv_heads": None, "head_dim": "model"},
+    serve_sharding_preset="sp_serve",   # see EXPERIMENTS.md §Perf
+)
+
+SMOKE = CONFIG.with_(num_layers=4, d_model=64, d_ff=128, vocab_size=512,
+                     num_heads=4, num_kv_heads=2, head_dim=None)

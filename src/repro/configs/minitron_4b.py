@@ -1,0 +1,23 @@
+"""minitron-4b [dense] — 32L, d_model 3072, 24H (GQA kv=8), d_ff 9216,
+vocab 256000; width-pruned Nemotron.  [arXiv:2407.14679]
+
+24 heads don't divide the 16-way model axis -> shard head_dim (128)."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="minitron-4b",
+    family="dense",
+    num_layers=32,
+    d_model=3072,
+    num_heads=24,
+    num_kv_heads=8,
+    d_ff=9216,
+    vocab_size=256_000,
+    sharding_overrides={"heads": None, "kv_heads": None, "head_dim": "model"},
+    # serving uses sequence parallelism: head_dim TP psums S x S score
+    # tiles (EXPERIMENTS.md §Perf — 22x on prefill_32k)
+    serve_sharding_preset="sp_serve",
+)
+
+SMOKE = CONFIG.with_(num_layers=4, d_model=96, d_ff=192, vocab_size=512,
+                     num_heads=6, num_kv_heads=2)

@@ -1,0 +1,26 @@
+"""mixtral-8x7b [moe] — 32L, d_model 4096, 32H (GQA kv=8), expert
+d_ff 14336, vocab 32000; 8 experts top-2, sliding-window attention
+(4096) on every layer.  [arXiv:2401.04088]
+
+SWA makes decode sub-quadratic, so this arch runs the long_500k cell."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mixtral-8x7b",
+    family="moe",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    d_ff=0,
+    vocab_size=32_000,
+    num_experts=8,
+    top_k=2,
+    expert_d_ff=14_336,
+    local_window=4096,
+    local_ratio=-1,
+)
+
+SMOKE = CONFIG.with_(num_layers=3, d_model=64, vocab_size=512, num_heads=8,
+                     num_kv_heads=2, num_experts=4, top_k=2, expert_d_ff=128,
+                     local_window=16)

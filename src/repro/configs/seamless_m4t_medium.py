@@ -1,0 +1,25 @@
+"""seamless-m4t-medium [audio] — encoder-decoder backbone: 12L encoder +
+12L decoder, d_model 1024, 16H (kv=16), d_ff 4096, vocab 256206.
+[arXiv:2308.11596]
+
+The speech frontend is a STUB: ``input_specs()`` provides precomputed
+frame embeddings (B, S, d_model) for the encoder (``frontend="embed"``).
+Enc-dec: no long_500k cell (encoder position ceiling — DESIGN.md §5);
+decode cells exercise self-KV + precomputed cross-KV."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-medium",
+    family="audio",
+    num_layers=12,
+    encoder_layers=12,
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=4096,
+    vocab_size=256_206,
+    frontend="embed",
+)
+
+SMOKE = CONFIG.with_(num_layers=2, encoder_layers=2, d_model=64, d_ff=128,
+                     vocab_size=512, num_heads=4, num_kv_heads=4)

@@ -1,0 +1,37 @@
+"""ShapeDtypeStruct input stand-ins per (architecture x shape cell) — the
+dry-run's "no allocation" batch construction (shannon/kernels pattern)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig, ShapeCell, SHAPES_BY_NAME
+
+
+def input_specs(cfg: ModelConfig, cell: ShapeCell | str) -> dict:
+    """Abstract model inputs for one shape cell.
+
+    train/prefill: token (or stub-embedding) batch.
+    decode: the single-token step input; the KV/state cache is built from
+    ``model.cache_specs`` separately (it is carried state, not input).
+    """
+    if isinstance(cell, str):
+        cell = SHAPES_BY_NAME[cell]
+    B, S = cell.global_batch, cell.seq_len
+    i32 = jnp.int32
+
+    def tok(shape):
+        return jax.ShapeDtypeStruct(shape, i32)
+
+    def emb(shape):
+        return jax.ShapeDtypeStruct(shape, cfg.compute_dtype)
+
+    if cell.kind in ("train", "prefill"):
+        batch = {"tokens": tok((B, S))}
+        if cfg.frontend == "embed":
+            batch["embeds"] = emb((B, S, cfg.d_model))
+        return batch
+    if cell.kind == "decode":
+        batch = {"token": tok((B, 1))}
+        return batch
+    raise ValueError(cell.kind)

@@ -1,0 +1,21 @@
+"""xlstm-1.3b [ssm] — 48L, d_model 2048, 4 heads, vocab 50304; mLSTM
+blocks with 1-in-8 sLSTM (xLSTM[7:1]); d_ff 0 (blocks carry their own
+pf=2 projections).  [arXiv:2405.04517]
+
+O(1)-state decode -> runs long_500k."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="xlstm-1.3b",
+    family="xlstm",
+    num_layers=48,
+    d_model=2048,
+    num_heads=4,
+    num_kv_heads=4,
+    d_ff=0,
+    vocab_size=50_304,
+    xlstm_slstm_every=8,
+)
+
+SMOKE = CONFIG.with_(num_layers=8, d_model=64, vocab_size=512, num_heads=2,
+                     xlstm_slstm_every=4)

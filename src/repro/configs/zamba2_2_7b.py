@@ -1,0 +1,23 @@
+"""zamba2-2.7b [hybrid] — 54 Mamba2 layers, d_model 2560, ssm_state 64;
+one weight-SHARED (32H MHA attention + MLP d_ff 10240) block applied
+after every 6 Mamba2 layers (9 invocations, each with its own KV cache).
+[arXiv:2411.15242]  Per-invocation LoRA deltas on the shared block are
+omitted (DESIGN.md §2).  Hybrid O(1) SSM state -> runs long_500k."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-2.7b",
+    family="hybrid",
+    num_layers=54,
+    d_model=2560,
+    num_heads=32,
+    num_kv_heads=32,
+    d_ff=10_240,
+    vocab_size=32_000,
+    ssm_state=64,
+    shared_attn_every=6,
+)
+
+SMOKE = CONFIG.with_(num_layers=6, d_model=64, d_ff=128, vocab_size=512,
+                     num_heads=4, num_kv_heads=4, ssm_state=16,
+                     shared_attn_every=3)

@@ -1,0 +1,4 @@
+# The paper's primary contribution: parallel spectral clustering
+# (similarity -> Lanczos eigenvectors -> k-means), distributed over a
+# device mesh via shard_map. See DESIGN.md for the Hadoop -> TPU mapping.
+from repro.core.spectral import SpectralConfig, SpectralResult, fit, fit_dense

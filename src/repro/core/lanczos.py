@@ -1,0 +1,136 @@
+"""Phase 2 of the paper: Lanczos for the k smallest eigenvectors (Alg. 4.3).
+
+The mat-vec ``L @ v`` is the distributed hot spot — the caller passes a
+``matvec`` closure (row-sharded symmetric operator from ``core.similarity`` /
+``core.laplacian``), and the 3-term recurrence itself runs on replicated
+(n,)-vectors, exactly the paper's "move the vector to the data" split.
+
+Deviations from the paper (correctness-driven, DESIGN.md §2):
+  * full reorthogonalization (CGS2) — plain Lanczos loses orthogonality in
+    finite precision and returns wrong small eigenvectors;
+  * the iteration runs on the *shifted* operator A = 2I - L_sym supplied by
+    ``laplacian.make_shifted_operator``, so extremal (largest) Ritz pairs of
+    A are the smallest of L_sym.
+
+The state is an explicit pytree so the launcher can checkpoint/restore the
+iteration mid-run (fault tolerance; the paper gets this from Hadoop task
+re-execution).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass
+class LanczosState:
+    step: jax.Array    # scalar int32: number of completed iterations
+    V: jax.Array       # (m+1, n) basis rows; rows > step are zero
+    alpha: jax.Array   # (m,)
+    beta: jax.Array    # (m+1,); beta[0] == 0
+
+    def tree_flatten(self):
+        return (self.step, self.V, self.alpha, self.beta), None
+
+    @staticmethod
+    def tree_unflatten(aux, children):
+        return LanczosState(*children)
+
+
+def init_state(n: int, num_steps: int, key: jax.Array,
+               v0: jax.Array | None = None, dtype=jnp.float32) -> LanczosState:
+    if v0 is None:
+        v0 = jax.random.normal(key, (n,), dtype)
+    v0 = v0 / jnp.linalg.norm(v0)
+    V = jnp.zeros((num_steps + 1, n), dtype).at[0].set(v0)
+    return LanczosState(
+        step=jnp.zeros((), jnp.int32),
+        V=V,
+        alpha=jnp.zeros((num_steps,), dtype),
+        beta=jnp.zeros((num_steps + 1,), dtype),
+    )
+
+
+def _step_body(matvec: Callable, state: LanczosState) -> LanczosState:
+    j = state.step
+    m1 = state.V.shape[0]
+    vj = state.V[j]
+    v_prev = jnp.where(j > 0, 1.0, 0.0) * state.V[jnp.maximum(j - 1, 0)]
+    w = matvec(vj) - state.beta[j] * v_prev
+    alpha_j = jnp.vdot(w, vj)
+    w = w - alpha_j * vj
+    # Full reorthogonalization, "twice is enough" (CGS2).
+    mask = (jnp.arange(m1) <= j).astype(w.dtype)
+    for _ in range(2):
+        coeffs = (state.V @ w) * mask
+        w = w - state.V.T @ coeffs
+    beta_next = jnp.linalg.norm(w)
+    safe = jnp.maximum(beta_next, jnp.asarray(1e-12, w.dtype))
+    v_next = jnp.where(beta_next > 1e-8, w / safe, jnp.zeros_like(w))
+    return LanczosState(
+        step=j + 1,
+        V=state.V.at[j + 1].set(v_next),
+        alpha=state.alpha.at[j].set(alpha_j.real.astype(state.alpha.dtype)),
+        beta=state.beta.at[j + 1].set(beta_next.astype(state.beta.dtype)),
+    )
+
+
+def run(matvec: Callable, state: LanczosState, num_iters: int) -> LanczosState:
+    """Advance the recurrence ``num_iters`` steps (checkpoint-friendly)."""
+    def body(_, s):
+        return _step_body(matvec, s)
+    return lax.fori_loop(0, num_iters, body, state)
+
+
+def lanczos(matvec: Callable, n: int, num_steps: int, key: jax.Array,
+            dtype=jnp.float32, v0: jax.Array | None = None) -> LanczosState:
+    state = init_state(n, num_steps, key, v0=v0, dtype=dtype)
+    return run(matvec, state, num_steps)
+
+
+def tridiagonal(state: LanczosState) -> jax.Array:
+    """Dense T_mm from (alpha, beta) — m is small, eigh on it is cheap."""
+    m = state.alpha.shape[0]
+    T = jnp.diag(state.alpha)
+    off = state.beta[1:m]
+    T = T + jnp.diag(off, 1) + jnp.diag(off, -1)
+    return T
+
+
+def ritz_pairs(state: LanczosState) -> tuple[jax.Array, jax.Array]:
+    """Ritz values (ascending) and vectors (n, m) of the operator."""
+    T = tridiagonal(state)
+    evals, evecs = jnp.linalg.eigh(T)           # ascending
+    m = state.alpha.shape[0]
+    ritz_vecs = state.V[:m].T @ evecs           # (n, m)
+    return evals, ritz_vecs
+
+
+def topk_of_shifted(state: LanczosState, k: int,
+                    shift: float = 2.0) -> tuple[jax.Array, jax.Array]:
+    """k smallest eigenpairs of L given Lanczos ran on A = shift*I - L.
+
+    Returns (eigvals_of_L ascending (k,), eigvecs (n, k), unit columns).
+    """
+    evals_A, vecs = ritz_pairs(state)
+    # largest of A  <->  smallest of L
+    topk = vecs[:, -k:][:, ::-1]
+    vals_L = (shift - evals_A[-k:])[::-1]
+    norms = jnp.linalg.norm(topk, axis=0, keepdims=True)
+    topk = topk / jnp.maximum(norms, 1e-12)
+    return vals_L, topk
+
+
+def residuals(matvec: Callable, vals: jax.Array, vecs: jax.Array,
+              shift: float | None = None) -> jax.Array:
+    """||Op v - lambda v|| per Ritz pair (convergence diagnostics)."""
+    def one(v, lam):
+        Av = matvec(v)
+        lam_op = (shift - lam) if shift is not None else lam
+        return jnp.linalg.norm(Av - lam_op * v)
+    return jax.vmap(one, in_axes=(1, 0))(vecs, vals)

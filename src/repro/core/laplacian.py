@@ -1,0 +1,61 @@
+"""Normalized Laplacian operators (paper §3.2.2 / Alg. 4.1 steps 2-3).
+
+L_sym = I - D^{-1/2} S D^{-1/2}.  Lanczos converges to *extremal*
+eigenvalues, so to get the k smallest of L_sym (spectrum in [0, 2]) we run
+it on the shifted operator A = 2I - L_sym = I + D^{-1/2} S D^{-1/2}, whose
+largest eigenpairs are exactly L_sym's smallest (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.similarity import UpperSim, sym_matvec
+
+
+def dense_degrees(S: jax.Array) -> jax.Array:
+    return jnp.sum(S, axis=1)
+
+
+def dense_lsym(S: jax.Array) -> jax.Array:
+    d = dense_degrees(S)
+    inv_sqrt = jnp.where(d > 0, 1.0 / jnp.sqrt(jnp.maximum(d, 1e-12)), 0.0)
+    N = S * inv_sqrt[:, None] * inv_sqrt[None, :]
+    return jnp.eye(S.shape[0], dtype=S.dtype) - N
+
+
+def degrees(upper: UpperSim) -> jax.Array:
+    """d_i = sum_j S_ij via one symmetric mat-vec with the ones vector."""
+    ones = upper.diag  # 1.0 on valid (permuted) rows, 0 on padding
+    return sym_matvec(upper, ones)
+
+
+def make_shifted_operator(
+    upper: UpperSim, deg: jax.Array
+) -> Callable[[jax.Array], jax.Array]:
+    """A v = v + D^{-1/2} S D^{-1/2} v, padding rows mapped to 0.
+
+    Padding rows have degree 0; we pin their inv-sqrt to 0 so they stay in
+    the null space of the S-term and contribute nothing.  The identity term
+    is masked to valid rows so pad rows don't pollute the Krylov basis.
+    """
+    valid = upper.diag  # (n_pad,) 1/0
+    inv_sqrt = jnp.where(deg > 0, 1.0 / jnp.sqrt(jnp.maximum(deg, 1e-12)), 0.0)
+
+    def matvec(v: jax.Array) -> jax.Array:
+        sv = sym_matvec(upper, inv_sqrt * v)
+        return valid * v + inv_sqrt * sv
+
+    return matvec
+
+
+def make_dense_shifted_operator(S: jax.Array) -> Callable[[jax.Array], jax.Array]:
+    d = dense_degrees(S)
+    inv_sqrt = jnp.where(d > 0, 1.0 / jnp.sqrt(jnp.maximum(d, 1e-12)), 0.0)
+
+    def matvec(v: jax.Array) -> jax.Array:
+        return v + inv_sqrt * (S @ (inv_sqrt * v))
+
+    return matvec

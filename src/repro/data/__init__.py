@@ -1,0 +1,2 @@
+from repro.data.synthetic import blobs, rings, lm_batches, synthetic_graph
+from repro.data.graph_file import parse_topology, write_topology

@@ -1,0 +1,48 @@
+"""Parser/writer for the paper's §5.1 topology text format:
+
+    t <graph-label>
+    v <id> <label>
+    e <src> <dst> <weight>
+
+The parsed graph feeds ``spectral.fit_from_similarity`` (adjacency-weight
+similarity) — the paper clusters graph vertices directly."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def parse_topology(path: str) -> tuple[int, np.ndarray]:
+    """Returns (num_vertices, edges (m, 3) int64 [src, dst, weight])."""
+    n = 0
+    edges = []
+    with open(path) as f:
+        for line in f:
+            parts = line.split()
+            if not parts:
+                continue
+            tag = parts[0]
+            if tag == "v":
+                n = max(n, int(parts[1]) + 1)
+            elif tag == "e":
+                i, j = int(parts[1]), int(parts[2])
+                w = int(parts[3]) if len(parts) > 3 else 1
+                edges.append((i, j, w))
+                n = max(n, i + 1, j + 1)
+    return n, np.asarray(edges, np.int64).reshape(-1, 3)
+
+
+def write_topology(path: str, n: int, edges: np.ndarray, label: int = 0):
+    with open(path, "w") as f:
+        f.write(f"t # {label}\n")
+        for i in range(n):
+            f.write(f"v {i} 0\n")
+        for i, j, w in edges:
+            f.write(f"e {i} {j} {w}\n")
+
+
+def adjacency_dense(n: int, edges: np.ndarray, dtype=np.float32) -> np.ndarray:
+    A = np.zeros((n, n), dtype)
+    A[edges[:, 0], edges[:, 1]] = edges[:, 2]
+    A[edges[:, 1], edges[:, 0]] = edges[:, 2]
+    np.fill_diagonal(A, 1.0)
+    return A

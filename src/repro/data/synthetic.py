@@ -1,0 +1,73 @@
+"""Synthetic data: clustering datasets (blobs / rings — the shapes spectral
+clustering handles and k-means alone cannot), a paper-like sparse graph,
+and deterministic LM token streams for the training examples."""
+from __future__ import annotations
+
+from typing import Iterator
+
+import numpy as np
+
+
+def blobs(n: int, k: int, dim: int = 2, spread: float = 0.15,
+          seed: int = 0) -> tuple[np.ndarray, np.ndarray]:
+    """k well-separated Gaussian blobs. Returns (points (n,dim) f32, labels)."""
+    rng = np.random.RandomState(seed)
+    centers = rng.randn(k, dim) * 4.0
+    labels = np.arange(n) % k
+    pts = centers[labels] + rng.randn(n, dim) * spread
+    return pts.astype(np.float32), labels
+
+
+def rings(n: int, k: int = 2, noise: float = 0.03,
+          seed: int = 0) -> tuple[np.ndarray, np.ndarray]:
+    """Concentric rings: the classic non-convex case where spectral beats
+    k-means (paper §3.1's 'arbitrary shape' claim)."""
+    rng = np.random.RandomState(seed)
+    labels = np.arange(n) % k
+    radii = 1.0 + labels.astype(np.float64)
+    theta = rng.uniform(0, 2 * np.pi, n)
+    pts = np.stack([radii * np.cos(theta), radii * np.sin(theta)], 1)
+    pts += rng.randn(n, 2) * noise
+    return pts.astype(np.float32), labels
+
+
+def synthetic_graph(n: int = 10_029, n_edges: int = 21_054, k: int = 8,
+                    p_in: float = 0.9, seed: int = 0):
+    """Planted-partition graph shaped like the paper's dataset (§5.1:
+    10029 vertices / 21054 edges). Returns (edges (m,3) int [i,j,w], labels)."""
+    rng = np.random.RandomState(seed)
+    labels = rng.randint(0, k, n)
+    edges = set()
+    rows = []
+    while len(rows) < n_edges:
+        i = rng.randint(n)
+        same = rng.rand() < p_in
+        if same:
+            cand = np.flatnonzero(labels == labels[i])
+        else:
+            cand = np.flatnonzero(labels != labels[i])
+        j = int(cand[rng.randint(len(cand))])
+        if i == j or (min(i, j), max(i, j)) in edges:
+            continue
+        edges.add((min(i, j), max(i, j)))
+        rows.append((min(i, j), max(i, j), 1))
+    return np.asarray(rows, np.int64), labels
+
+
+def lm_batches(batch: int, seq: int, vocab: int, seed: int = 0,
+               structured: bool = True) -> Iterator[dict]:
+    """Deterministic synthetic token stream.  ``structured`` makes it
+    learnable (next token = (token + fixed stride) % vocab with noise) so
+    the examples' loss curves actually go down."""
+    rng = np.random.RandomState(seed)
+    stride = max(1, vocab // 7)
+    while True:
+        if structured:
+            start = rng.randint(0, vocab, (batch, 1))
+            steps = np.arange(seq)[None, :] * stride
+            toks = (start + steps) % vocab
+            noise = rng.rand(batch, seq) < 0.05
+            toks = np.where(noise, rng.randint(0, vocab, (batch, seq)), toks)
+        else:
+            toks = rng.randint(0, vocab, (batch, seq))
+        yield {"tokens": toks.astype(np.int32)}

@@ -1,0 +1,9 @@
+from repro.distrib.mesh_utils import (
+    flat_axes,
+    local_mesh,
+    make_mesh,
+    mesh_size,
+    pad_to_multiple,
+    row_sharding,
+    replicated,
+)

@@ -1,0 +1,115 @@
+"""Activation-sharding constraints (sequence parallelism).
+
+GSPMD propagates parameter shardings well, but with fully replicated
+weights (the ``sp_serve`` preset) nothing anchors the activations — it
+happily replicates the whole sequence on every device (16x the flops).
+The launcher installs the concrete mesh here; model code then pins the
+layer-boundary activations to (batch -> data axes, seq -> "model").
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_MESH: contextvars.ContextVar[Mesh | None] = contextvars.ContextVar(
+    "act_sharding_mesh", default=None)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh):
+    tok = _MESH.set(mesh)
+    try:
+        yield
+    finally:
+        _MESH.reset(tok)
+
+
+def current_mesh() -> Mesh | None:
+    return _MESH.get()
+
+
+def replicate_seq(x: jax.Array, cfg) -> jax.Array:
+    """Force (B, T, ...) to be replicated along T (batch may stay on data):
+    one all-gather, after which chunk-scans along T are free."""
+    mesh = _MESH.get()
+    if mesh is None or getattr(cfg, "sharding_preset", "") != "sp_serve":
+        return x
+    ba = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    bsize = 1
+    for a in ba:
+        bsize *= mesh.shape[a]
+    entries = [ba if (ba and x.shape[0] % bsize == 0 and x.shape[0] > 1) else None]
+    entries += [None] * (x.ndim - 1)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*entries)))
+
+
+def constrain_layer_params(lp, layer_specs, cfg):
+    """Pin per-layer param slices (inside a scan body) to their rule-derived
+    shardings.  with_sharding_constraint is its own transpose, so the
+    *cotangents* — the backward scan's gradient accumulators, which GSPMD
+    otherwise replicates at full f32 size — inherit the same sharding."""
+    mesh = _MESH.get()
+    if mesh is None:
+        return lp
+    from repro.distrib import sharding as shd
+    from repro.models import params as pp
+    rules = shd.rules_for(cfg)
+
+    def one(x, spec):
+        if not pp.is_spec(spec) or x.ndim != len(spec.shape):
+            return x
+        pspec = pp.partition_spec(spec, rules, mesh)
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, pspec))
+
+    return jax.tree.map(one, lp, layer_specs, is_leaf=pp.is_spec)
+
+
+def constrain_dims(x: jax.Array, dim_axes: dict) -> jax.Array:
+    """Pin several dims of x to mesh axes (each entry dropped if the mesh
+    lacks the axis or the dim isn't divisible). No-op without a mesh."""
+    mesh = _MESH.get()
+    if mesh is None:
+        return x
+    entries = [None] * x.ndim
+    for dim, axes in dim_axes.items():
+        if axes is None:
+            continue
+        ax_tuple = axes if isinstance(axes, tuple) else (axes,)
+        if any(a not in mesh.axis_names for a in ax_tuple):
+            continue
+        size = 1
+        for a in ax_tuple:
+            size *= mesh.shape[a]
+        if x.shape[dim] % size == 0 and size > 1:
+            entries[dim] = axes
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*entries)))
+
+
+def batch_axes_in_mesh() -> tuple[str, ...]:
+    mesh = _MESH.get()
+    if mesh is None:
+        return ()
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def constrain_seq(x: jax.Array, cfg) -> jax.Array:
+    """Pin (B, S, ...) activations to batch->data, seq->model (sp preset)."""
+    mesh = _MESH.get()
+    if mesh is None or getattr(cfg, "sharding_preset", "") != "sp_serve":
+        return x
+    if "model" not in mesh.axis_names or x.ndim < 2:
+        return x
+    ba = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    bsize = 1
+    for a in ba:
+        bsize *= mesh.shape[a]
+    entries = [ba if (ba and x.shape[0] % bsize == 0 and x.shape[0] > 1) else None]
+    entries.append("model" if x.shape[1] % mesh.shape["model"] == 0 else None)
+    entries += [None] * (x.ndim - 2)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*entries)))

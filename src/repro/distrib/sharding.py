@@ -1,0 +1,168 @@
+"""Logical-axis -> mesh-axis sharding rules for the LM stack (DP/TP/EP/SP),
+plus input/cache/optimizer sharding builders used by the launcher."""
+from __future__ import annotations
+
+from typing import Mapping
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import params as pp
+from repro.models.config import ModelConfig
+
+# default logical->mesh rules; per-arch overrides come from
+# ModelConfig.sharding_overrides (e.g. gemma3 shards head_dim, not heads).
+DEFAULT_RULES: dict[str, str | None] = {
+    "vocab": "model",
+    "embed": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "mlp": "model",
+    "experts": "model",   # expert parallelism
+    "layers": None,
+    "seq": "data",        # KV-cache sequence axis (context parallelism)
+}
+
+
+PRESETS: dict[str, dict[str, str | None]] = {
+    "": {},
+    # attention weights replicated (for head counts that don't divide the
+    # model axis — avoids contracting-dim psums of S x S score tiles)
+    "replicate_attn": {"heads": None, "kv_heads": None, "head_dim": None},
+    # sequence parallelism for serving: weights replicated (embed/vocab
+    # stay sharded), activations shard the sequence over "model" (the
+    # launcher shards token inputs and KV-cache seq accordingly)
+    "sp_serve": {"heads": None, "kv_heads": None, "head_dim": None,
+                 "mlp": None, "experts": None, "seq": "model"},
+    # tensor parallelism INSIDE each expert (for expert counts that don't
+    # divide the model axis, e.g. mixtral 8e on 16-way: E replicated would
+    # replicate expert FLOPs; sharding the expert hidden dim instead keeps
+    # the matmuls distributed)
+    "expert_tp": {"experts": None},
+}
+
+
+def rules_for(cfg: ModelConfig) -> dict[str, str | None]:
+    rules = dict(DEFAULT_RULES)
+    if cfg.sharding_overrides:
+        rules.update(cfg.sharding_overrides)
+    # presets are explicit perf variants: they take precedence over the
+    # arch's default overrides
+    rules.update(PRESETS[cfg.sharding_preset])
+    return rules
+
+
+def seq_axis_for_inputs(cfg: ModelConfig) -> str | None:
+    """Mesh axis the token sequence dim shards over (SP presets only)."""
+    return "model" if cfg.sharding_preset == "sp_serve" else None
+
+
+def batch_axes(mesh: Mesh) -> tuple[str, ...]:
+    """Axes the global batch shards over: ("pod","data") when pods exist."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _with_data_axis(spec_tree, mesh: Mesh, rules):
+    """Augment a sharding tree: shard the first data-divisible unsharded
+    dim over "data" (ZeRO/FSDP). Skips tiny tensors (norm scales etc.)."""
+    dsize = mesh.shape.get("data", 1)
+
+    def one(s: pp.Spec) -> NamedSharding:
+        entries = list(pp.partition_spec(s, rules, mesh))
+        entries += [None] * (len(s.shape) - len(entries))
+        used = {a for e in entries if e
+                for a in (e if isinstance(e, tuple) else (e,))}
+        if "data" not in used:
+            for i, (dim, e) in enumerate(zip(s.shape, entries)):
+                if e is None and dim % dsize == 0 and dim >= dsize:
+                    entries[i] = "data"
+                    break
+        return NamedSharding(mesh, P(*entries))
+
+    return jax.tree.map(one, spec_tree, is_leaf=pp.is_spec)
+
+
+def param_shardings(cfg: ModelConfig, spec_tree, mesh: Mesh):
+    rules = rules_for(cfg)
+    if cfg.fsdp_params:
+        return _with_data_axis(spec_tree, mesh, rules)
+    return pp.sharding_tree(spec_tree, mesh, rules)
+
+
+def opt_shardings(cfg: ModelConfig, spec_tree, mesh: Mesh):
+    """Optimizer-state sharding: like params; with ZeRO-1/FSDP, moments
+    additionally shard their largest unsharded dim over the data axis."""
+    rules = rules_for(cfg)
+    if not (cfg.shard_opt_over_data or cfg.fsdp_params):
+        return pp.sharding_tree(spec_tree, mesh, rules)
+    return _with_data_axis(spec_tree, mesh, rules)
+
+
+def input_shardings(mesh: Mesh, batch_specs: Mapping[str, jax.ShapeDtypeStruct],
+                    seq_axis: str | None = None):
+    """Token/embedding batches shard dim0 over ("pod","data"); a batch of 1
+    (long-context decode) falls back to replication (its KV cache carries
+    the sequence sharding instead).  ``seq_axis`` additionally shards dim 1
+    (the sequence) — sequence parallelism."""
+    ba = batch_axes(mesh)
+    bsize = int(np.prod([mesh.shape[a] for a in ba]))
+
+    def one(s: jax.ShapeDtypeStruct) -> NamedSharding:
+        entries = []
+        if s.ndim >= 1 and s.shape[0] % bsize == 0:
+            entries.append(ba)
+        elif s.ndim >= 1:
+            entries.append(None)
+        if s.ndim >= 2:
+            if seq_axis and s.shape[1] % mesh.shape[seq_axis] == 0:
+                entries.append(seq_axis)
+            else:
+                entries.append(None)
+        entries += [None] * (s.ndim - len(entries))
+        return NamedSharding(mesh, P(*entries))
+
+    return {k: one(v) for k, v in batch_specs.items()}
+
+
+def cache_shardings(cfg: ModelConfig, cache_spec_tree, mesh: Mesh):
+    """KV caches: the batch dim shards over ("pod","data") when divisible;
+    otherwise (batch 1, long-context decode) the *sequence* axis takes the
+    data axes instead — context/sequence parallelism.  kv_heads/head_dim/
+    mlp follow the model rules.  Each mesh axis is used at most once."""
+    full_rules = rules_for(cfg)
+    rules = dict(full_rules)
+    rules["seq"] = None                     # assigned manually below
+    ba = batch_axes(mesh)
+    bsize = int(np.prod([mesh.shape[a] for a in ba]))
+    seq_rule = full_rules.get("seq")
+
+    def one(s: pp.Spec) -> NamedSharding:
+        entries = list(pp.partition_spec(s, rules, mesh))
+        entries += [None] * (len(s.shape) - len(entries))
+        used = {a for e in entries if e
+                for a in (e if isinstance(e, tuple) else (e,))}
+        # find the batch dim: first axes==None dim (after any "layers" dims)
+        batch_dim = next((i for i, (ax, e) in enumerate(zip(s.axes, entries))
+                          if ax is None and e is None), None)
+        if batch_dim is not None and s.shape[batch_dim] % bsize == 0 \
+                and s.shape[batch_dim] > 1:
+            entries[batch_dim] = ba
+            used.update(ba)
+        else:
+            # batch too small: give the data axes to the sequence dim (SP)
+            for i, (ax, dim) in enumerate(zip(s.axes, s.shape)):
+                if ax == "seq" and dim % bsize == 0:
+                    entries[i] = ba
+                    used.update(ba)
+                    break
+        # an explicit seq rule (sp_serve) shards seq over its axis too
+        if seq_rule and seq_rule not in used:
+            for i, (ax, dim, e) in enumerate(zip(s.axes, s.shape, entries)):
+                if ax == "seq" and e is None and dim % mesh.shape[seq_rule] == 0:
+                    entries[i] = seq_rule
+                    break
+        return NamedSharding(mesh, P(*entries))
+
+    return jax.tree.map(one, cache_spec_tree, is_leaf=pp.is_spec)

@@ -1,0 +1,54 @@
+"""Pallas TPU kernel for the Lanczos hot spot: row-blocked mat-vec (paper §4.3.2).
+
+Grid = (row tiles, col tiles); the output row tile is revisited across the
+column dimension and accumulated in place (initialized at j == 0), so the
+matrix streams HBM->VMEM once while the vector tile stays resident — the
+TPU translation of the paper's "move the vector to the data, not the data".
+
+The vector is reshaped to (m, 1) so the product is an MXU ``dot`` rather
+than a VPU reduction.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matvec_kernel(a_ref, v_ref, o_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a = a_ref[...]                       # (bm, bn)
+    v = v_ref[...]                       # (bn, 1)
+    acc = jax.lax.dot_general(
+        a, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)  # (bm, 1)
+    o_ref[...] += acc.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
+def block_matvec(A: jax.Array, v: jax.Array, *, bm: int = 256, bn: int = 512,
+                 interpret: bool = True) -> jax.Array:
+    """A @ v with (bm, bn) VMEM tiles; shapes must divide — see ops.py."""
+    n, m = A.shape
+    assert n % bm == 0 and m % bn == 0, (n, m, bm, bn)
+    v2 = v.reshape(m, 1)
+    grid = (n // bm, m // bn)
+    out = pl.pallas_call(
+        _matvec_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bn, 1), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, 1), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, 1), jnp.float32),
+        interpret=interpret,
+    )(A, v2)
+    return out.reshape(n).astype(v.dtype)

@@ -1,0 +1,108 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+Handles: padding to tile multiples, backend dispatch (TPU -> compiled
+kernel; CPU/other -> interpret mode, which runs the same kernel body in
+Python for correctness), and un-padding of results.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import block_matvec as _mv
+from repro.kernels import kmeans_assign as _ka
+from repro.kernels import rbf_similarity as _rbf
+from repro.kernels import ref
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_rows(a: jax.Array, mult: int) -> tuple[jax.Array, int]:
+    n = a.shape[0]
+    n_pad = ((n + mult - 1) // mult) * mult
+    if n_pad == n:
+        return a, n
+    pad = [(0, n_pad - n)] + [(0, 0)] * (a.ndim - 1)
+    return jnp.pad(a, pad), n
+
+
+def rbf_similarity(x: jax.Array, y: jax.Array, sigma, *, bm: int = 128,
+                   bn: int = 128, interpret: bool | None = None) -> jax.Array:
+    """exp(-||x_i - y_j||^2 / 2 sigma^2) for all pairs; any (n, m)."""
+    if interpret is None:
+        interpret = _interpret_default()
+    xp, n = _pad_rows(x, bm)
+    yp, m = _pad_rows(y, bn)
+    out = _rbf.rbf_similarity(xp, yp, sigma, bm=bm, bn=bn, interpret=interpret)
+    return out[:n, :m]
+
+
+def block_matvec(A: jax.Array, v: jax.Array, *, bm: int = 256, bn: int = 512,
+                 interpret: bool | None = None) -> jax.Array:
+    """A @ v for any (n, m) A."""
+    if interpret is None:
+        interpret = _interpret_default()
+    n, m = A.shape
+    Ap, _ = _pad_rows(A, bm)
+    if m % bn:
+        m_pad = ((m + bn - 1) // bn) * bn
+        Ap = jnp.pad(Ap, ((0, 0), (0, m_pad - m)))
+        vp = jnp.pad(v, (0, m_pad - m))
+    else:
+        vp = v
+    out = _mv.block_matvec(Ap, vp, bm=bm, bn=bn, interpret=interpret)
+    return out[:n]
+
+
+def _mv_pad(n: int, bm: int) -> int:
+    return ((n + bm - 1) // bm) * bm
+
+
+def kmeans_assign(points: jax.Array, centers: jax.Array, *, bm: int = 512,
+                  interpret: bool | None = None) -> tuple[jax.Array, jax.Array]:
+    """(labels, sq-dists) for any n; padded rows are discarded."""
+    if interpret is None:
+        interpret = _interpret_default()
+    p, n = _pad_rows(points, bm)
+    idx, dist = _ka.kmeans_assign(p, centers, bm=bm, interpret=interpret)
+    return idx[:n], dist[:n]
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = -1,
+                    bq: int = 256, bk: int = 256,
+                    interpret: bool | None = None):
+    """Fused attention; q (B,H,S,hd), k/v (B,KV,T,hd) — kv heads are
+    broadcast to H, sequences padded to tile multiples."""
+    from repro.kernels import flash_attention as _fa
+    if interpret is None:
+        interpret = _interpret_default()
+    B, H, S, hd = q.shape
+    KV, T = k.shape[1], k.shape[2]
+    if KV != H:
+        rep = H // KV
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    bq = min(bq, S)
+    bk = min(bk, T)
+    s_pad = ((S + bq - 1) // bq) * bq
+    t_pad = ((T + bk - 1) // bk) * bk
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, s_pad - S), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, t_pad - T), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, t_pad - T), (0, 0)))
+    if t_pad != T:
+        # mask padded keys via a window/causal trick is insufficient for
+        # non-causal; shift them out of range with -inf via key zeroing +
+        # causal bound. Simplest robust: rely on causal masking when
+        # S==T; otherwise require exact tiles.
+        assert causal and s_pad == t_pad, "non-causal padding unsupported"
+    out = _fa.flash_attention(qp, kp, vp, causal=causal, window=window,
+                              bq=bq, bk=bk, interpret=interpret)
+    return out[:, :, :S]
+
+
+# Re-export oracles for test convenience.
+reference = ref

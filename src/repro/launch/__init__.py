@@ -1,0 +1,2 @@
+# Launchers: production mesh construction, the multi-pod dry-run,
+# training/serving drivers, and the spectral-clustering job driver.

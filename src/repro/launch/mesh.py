@@ -1,0 +1,22 @@
+"""Production mesh builders (functions, never module-level constants, so
+importing this module never touches jax device state)."""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType, Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """Single pod: (16, 16) = 256 chips, axes (data, model).
+    Multi-pod: (2, 16, 16) = 512 chips, axes (pod, data, model)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_spectral_mesh(*, multi_pod: bool = False) -> Mesh:
+    """The spectral pipeline row-shards its matrices over every chip: a
+    flat 1-D mesh (the Hadoop "all workers" pool)."""
+    n = 512 if multi_pod else 256
+    return jax.make_mesh((n,), ("rows",), axis_types=(AxisType.Auto,))

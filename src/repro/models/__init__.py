@@ -1,0 +1,3 @@
+# LM substrate for the assigned architectures: layer library, family
+# stacks (dense/MoE transformer, xLSTM, Mamba2/Zamba hybrid, enc-dec,
+# VLM/audio backbones), KV-cache serving, and sharding rules.

@@ -1,0 +1,89 @@
+"""Unified model interface: ``build(cfg)`` -> Model with spec/forward/loss/
+prefill/decode, dispatching on the architecture family."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec, ssm, transformer, xlstm
+from repro.models import params as pp
+from repro.models.config import ModelConfig
+
+_FAMILIES = {
+    "dense": transformer,
+    "moe": transformer,
+    "vlm": transformer,
+    "xlstm": xlstm,
+    "hybrid": ssm,
+    "ssm": ssm,
+    "audio": encdec,
+    "encdec": encdec,
+}
+
+
+def cross_entropy(logits: jax.Array, targets: jax.Array,
+                  mask: jax.Array | None = None, z_weight: float = 1e-4):
+    """Next-token CE with z-loss; logits (B,S,V) f32, targets (B,S)."""
+    logits = logits[:, :-1]
+    targets = targets[:, 1:]
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    zl = z_weight * lse**2
+    if mask is None:
+        mask = jnp.ones_like(nll)
+    else:
+        mask = mask[:, 1:].astype(nll.dtype)
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.sum((nll + zl) * mask) / denom
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    spec: Any                                   # param Spec pytree
+    forward: Callable                           # (params, batch) -> (logits, aux)
+    prefill: Callable                           # (params, batch, max_seq) -> (logits, cache)
+    decode_step: Callable                       # (params, cache, token) -> (logits, cache)
+    cache_specs: Callable                       # (batch, max_seq) -> Spec pytree
+
+    def loss_fn(self, params, batch):
+        logits, aux = self.forward(params, batch)
+        loss = cross_entropy(logits, batch["tokens"], batch.get("mask"))
+        if self.cfg.num_experts:
+            loss = loss + 1e-2 * aux["lb_loss"]
+        return loss, aux
+
+    def init(self, key: jax.Array):
+        return pp.init_params(self.spec, key)
+
+    def abstract_params(self):
+        return pp.abstract_params(self.spec)
+
+    def num_params(self) -> int:
+        return pp.count_params(self.spec)
+
+    def num_active_params(self) -> int:
+        """Parameters touched per token (MoE: top_k + shared experts only)."""
+        cfg = self.cfg
+        if not cfg.num_experts:
+            return self.num_params()
+        total = self.num_params()
+        per_expert = cfg.d_model * cfg.expert_d_ff * 3
+        inactive = (cfg.num_experts - cfg.top_k) * per_expert * cfg.num_layers
+        return int(total - inactive)
+
+
+def build(cfg: ModelConfig) -> Model:
+    mod = _FAMILIES[cfg.family]
+    return Model(
+        cfg=cfg,
+        spec=mod.specs(cfg),
+        forward=lambda p, b: mod.forward(p, b, cfg),
+        prefill=lambda p, b, max_seq=None: mod.prefill(p, b, cfg, max_seq=max_seq),
+        decode_step=lambda p, c, t: mod.decode_step(p, c, t, cfg),
+        cache_specs=lambda bs, max_seq: mod.cache_specs(cfg, bs, max_seq),
+    )

@@ -1,0 +1,131 @@
+"""Architecture configuration shared by every model family."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str = "model"
+    family: str = "dense"     # dense | moe | xlstm | hybrid | encdec | vlm | audio
+
+    # transformer trunk
+    num_layers: int = 2
+    d_model: int = 128
+    num_heads: int = 4
+    num_kv_heads: int = 4
+    head_dim: int | None = None          # default: d_model // num_heads
+    d_ff: int = 512
+    vocab_size: int = 1024
+    qkv_bias: bool = False               # qwen1.5 style
+    tie_embeddings: bool = True
+    rope_theta: float = 10_000.0
+    norm_eps: float = 1e-6
+    act: str = "silu"                    # silu (SwiGLU) | gelu (GeGLU)
+
+    # attention pattern: window per layer; -1 = global.  ``local_ratio``:
+    # n local layers then 1 global (gemma3 5:1); 0 = all global;
+    # -1 = every layer local (mixtral SWA).
+    local_window: int = -1
+    local_ratio: int = 0
+
+    # MoE
+    num_experts: int = 0
+    top_k: int = 0
+    expert_d_ff: int = 0
+    num_shared_experts: int = 0
+    capacity_factor: float = 1.25
+
+    # SSM / xLSTM / hybrid
+    ssm_state: int = 0                   # mamba2 state dim per head
+    conv_kernel: int = 4
+    xlstm_slstm_every: int = 0           # 1 sLSTM per this many mLSTM (0 = none)
+    shared_attn_every: int = 0           # zamba2: shared attn block period
+
+    # enc-dec
+    encoder_layers: int = 0              # >0 selects encoder-decoder
+
+    # modality frontend stub: "none" = token ids; "embed" = precomputed
+    # frame/patch embeddings (B, S, d_model) from input_specs()
+    frontend: str = "none"
+
+    # numerics
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.bfloat16
+
+    # serving
+    attn_chunk: int = 1024               # online-softmax KV chunk for long seq
+    dense_attn_max_seq: int = 8192       # below this, plain dense attention
+    # materialize attention score tiles in bf16 (flash-style kernels keep
+    # them in VMEM; this is the XLA-graph analogue: halves HBM traffic of
+    # the mask/softmax passes, f32 running max/denominator retained)
+    attn_scores_bf16: bool = False
+    # use the Pallas flash-attention kernel (kernels/flash_attention.py)
+    # for full-sequence attention. TPU-targeted; on CPU it runs in
+    # interpret mode (slow — tests only). Scores never touch HBM.
+    use_flash_attention: bool = False
+
+    # training
+    remat: str = "dots"                  # none | dots | full
+    optimizer: str = "adamw"             # adamw | adafactor
+    shard_opt_over_data: bool = False    # ZeRO-1 over the data axis
+    fsdp_params: bool = False            # ZeRO-3: params also shard over data
+                                         # (XLA all-gathers per-layer at use)
+    microbatches: int = 1                # grad-accumulation steps per batch
+                                         # (divides activation memory)
+
+    # sharding rule overrides (logical axis -> mesh axis name)
+    sharding_overrides: dict | None = None
+    # named sharding presets (perf variants; see distrib/sharding.py):
+    #   ""              - default TP/EP rules
+    #   "replicate_attn"- attention weights replicated (indivisible heads)
+    #   "sp_serve"      - sequence parallelism: activations shard seq over
+    #                     "model", weights replicated (except embed/vocab)
+    sharding_preset: str = ""
+    # preset applied to prefill/decode lowering only (training keeps the
+    # TP rules; serving of small models prefers SP — EXPERIMENTS.md §Perf)
+    serve_sharding_preset: str = ""
+    # MoE execution: "gather" (GSPMD resolves dispatch) or "ep_shard_map"
+    # (explicit replicated-dispatch expert parallelism, psum combine)
+    moe_impl: str = "gather"
+
+    def hd(self) -> int:
+        return self.head_dim if self.head_dim is not None else self.d_model // self.num_heads
+
+    def window_for_layer(self, i: int) -> int:
+        if self.local_window <= 0:
+            return -1
+        if self.local_ratio == -1:            # every layer windowed (SWA)
+            return self.local_window
+        if self.local_ratio <= 0:
+            return -1
+        # pattern: `local_ratio` local layers, then 1 global
+        return self.local_window if (i + 1) % (self.local_ratio + 1) != 0 else -1
+
+    def windows(self) -> list[int]:
+        return [self.window_for_layer(i) for i in range(self.num_layers)]
+
+    def with_(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    """One assigned (shape) cell: what gets lowered in the dry-run."""
+    name: str                 # train_4k | prefill_32k | decode_32k | long_500k
+    kind: str                 # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = (
+    ShapeCell("train_4k", "train", 4_096, 256),
+    ShapeCell("prefill_32k", "prefill", 32_768, 32),
+    ShapeCell("decode_32k", "decode", 32_768, 128),
+    ShapeCell("long_500k", "decode", 524_288, 1),
+)
+
+SHAPES_BY_NAME = {s.name: s for s in SHAPES}

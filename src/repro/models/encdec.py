@@ -1,0 +1,171 @@
+"""Encoder-decoder backbone (seamless-m4t-medium): bidirectional encoder over
+stub frame embeddings (``frontend="embed"``), causal decoder with cross
+attention.  Self-attention uses RoPE GQA from ``layers.py``; cross-attention
+is position-free (DESIGN.md notes this simplification vs. the conformer
+speech encoder — the assignment stubs the modality frontend).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import layers as ll
+from repro.models.config import ModelConfig
+from repro.models.params import Spec
+
+
+def specs(cfg: ModelConfig) -> dict:
+    Le, Ld = cfg.encoder_layers, cfg.num_layers
+    D, pd = cfg.d_model, cfg.param_dtype
+
+    def stack(L):
+        return {
+            "ln1": Spec((L, D), ("layers", "embed"), pd, init="zeros"),
+            "attn": ll.attention_specs(cfg, layers=L),
+            "ln2": Spec((L, D), ("layers", "embed"), pd, init="zeros"),
+            "mlp": ll.mlp_specs(cfg, layers=L),
+        }
+
+    enc = stack(Le)
+    dec = stack(Ld)
+    dec["ln_cross"] = Spec((Ld, D), ("layers", "embed"), pd, init="zeros")
+    dec["cross"] = ll.attention_specs(cfg, layers=Ld)
+    return {
+        "embed": ll.embed_spec(cfg),
+        "enc_norm": ll.norm_spec(D, pd),
+        "final_norm": ll.norm_spec(D, pd),
+        "encoder": enc,
+        "decoder": dec,
+    }
+
+
+def _cross_attention(x, memory, p, cfg: ModelConfig):
+    """x (B,S,D) queries over encoder memory (B,T,D); no RoPE."""
+    scale = 1.0 / (cfg.hd() ** 0.5)
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("btd,dhk->bthk", memory, p["wk"].astype(x.dtype))
+    v = jnp.einsum("btd,dhk->bthk", memory, p["wv"].astype(x.dtype))
+    b, s, h, hd = q.shape
+    kv = k.shape[2]
+    qg = q.reshape(b, s, kv, h // kv, hd)
+    scores = jnp.einsum("bskgh,btkh->bkgst", qg, k).astype(jnp.float32) * scale
+    w = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bkgst,btkh->bskgh", w, v).reshape(b, s, h, hd)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+
+
+def encode(params, src_embeds, cfg: ModelConfig):
+    x = src_embeds.astype(cfg.compute_dtype)
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+
+    def layer(x, lp):
+        h = ll.rms_norm(x, lp["ln1"], cfg.norm_eps)
+        q, k, v = ll._qkv(h, lp["attn"], cfg, positions)
+        scale = 1.0 / (cfg.hd() ** 0.5)
+        if S <= cfg.dense_attn_max_seq:
+            mask = jnp.zeros((B, S, S), jnp.float32)    # bidirectional
+            out = ll._sdpa_dense(q, k, v, mask, scale)
+        else:
+            out = ll._sdpa_chunked(q, k, v, positions, positions, -1, False,
+                                   scale, cfg.attn_chunk, cfg.attn_chunk)
+        x = x + jnp.einsum("bshk,hkd->bsd", out, lp["attn"]["wo"].astype(x.dtype))
+        h = ll.rms_norm(x, lp["ln2"], cfg.norm_eps)
+        return x + ll.mlp(h, lp["mlp"], cfg), None
+
+    x, _ = lax.scan(layer, x, params["encoder"])
+    return ll.rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def forward(params, batch, cfg: ModelConfig):
+    """Training forward: src embeddings + target tokens -> decoder logits."""
+    memory = encode(params, batch["embeds"], cfg)
+    x = ll.embed(batch["tokens"], params["embed"], cfg.compute_dtype)
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+
+    def layer(x, lp):
+        h = ll.rms_norm(x, lp["ln1"], cfg.norm_eps)
+        x = x + ll.gqa_attention(h, lp["attn"], cfg, -1, positions)
+        h = ll.rms_norm(x, lp["ln_cross"], cfg.norm_eps)
+        x = x + _cross_attention(h, memory, lp["cross"], cfg)
+        h = ll.rms_norm(x, lp["ln2"], cfg.norm_eps)
+        return x + ll.mlp(h, lp["mlp"], cfg), None
+
+    x, _ = lax.scan(layer, x, params["decoder"])
+    x = ll.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = ll.unembed(x, params["embed"]).astype(jnp.float32)
+    return logits, {"lb_loss": jnp.zeros((), jnp.float32)}
+
+
+def cache_specs(cfg: ModelConfig, batch_size: int, max_seq: int) -> dict:
+    Ld, kv, hd = cfg.num_layers, cfg.num_kv_heads, cfg.hd()
+    kvs = ("layers", None, "seq", "kv_heads", "head_dim")
+    cd = cfg.compute_dtype
+    return {
+        "self_k": Spec((Ld, batch_size, max_seq, kv, hd), kvs, cd, init="zeros"),
+        "self_v": Spec((Ld, batch_size, max_seq, kv, hd), kvs, cd, init="zeros"),
+        "cross_k": Spec((Ld, batch_size, max_seq, kv, hd), kvs, cd, init="zeros"),
+        "cross_v": Spec((Ld, batch_size, max_seq, kv, hd), kvs, cd, init="zeros"),
+        "pos": Spec((), (), jnp.int32, init="zeros"),
+    }
+
+
+def prefill(params, batch, cfg: ModelConfig, max_seq: int | None = None):
+    """Encode the source, precompute every decoder layer's cross-KV, and run
+    the BOS decode step (translation-style serving: 1-token target prompt)."""
+    memory = encode(params, batch["embeds"], cfg)
+    B, T = memory.shape[:2]
+    max_seq = max_seq or T
+
+    def layer_kv(_, lp):
+        k = jnp.einsum("btd,dhk->bthk", memory, lp["cross"]["wk"].astype(memory.dtype))
+        v = jnp.einsum("btd,dhk->bthk", memory, lp["cross"]["wv"].astype(memory.dtype))
+        return None, (k.astype(cfg.compute_dtype), v.astype(cfg.compute_dtype))
+
+    _, (ck, cv) = lax.scan(layer_kv, None, params["decoder"])
+    Ld, kv, hd = cfg.num_layers, cfg.num_kv_heads, cfg.hd()
+    cache = {
+        "self_k": jnp.zeros((Ld, B, max_seq, kv, hd), cfg.compute_dtype),
+        "self_v": jnp.zeros((Ld, B, max_seq, kv, hd), cfg.compute_dtype),
+        "cross_k": jnp.pad(ck, ((0, 0), (0, 0), (0, max_seq - T), (0, 0), (0, 0))),
+        "cross_v": jnp.pad(cv, ((0, 0), (0, 0), (0, max_seq - T), (0, 0), (0, 0))),
+        "pos": jnp.asarray(0, jnp.int32),
+    }
+    bos = jnp.zeros((B, 1), jnp.int32)
+    return decode_step(params, cache, bos, cfg)
+
+
+def decode_step(params, cache, token, cfg: ModelConfig):
+    """One decoder token; cross-KV precomputed at prefill (encode) time."""
+    x = ll.embed(token, params["embed"], cfg.compute_dtype)
+    pos = cache["pos"]
+
+    def layer(x, xs):
+        lp, sk, sv, ck, cv = xs
+        h = ll.rms_norm(x, lp["ln1"], cfg.norm_eps)
+        out, sk, sv = ll.gqa_decode(h, lp["attn"], cfg, -1, sk, sv, pos)
+        x = x + out
+        # cross attention against the precomputed memory KV
+        h = ll.rms_norm(x, lp["ln_cross"], cfg.norm_eps)
+        scale = 1.0 / (cfg.hd() ** 0.5)
+        q = jnp.einsum("bsd,dhk->bshk", h, lp["cross"]["wq"].astype(h.dtype))
+        b, s, nh, hd = q.shape
+        kvh = ck.shape[2]
+        qg = q.reshape(b, s, kvh, nh // kvh, hd)
+        sc = jnp.einsum("bqkgh,btkh->bkgqt", qg, ck.astype(h.dtype)).astype(jnp.float32) * scale
+        w = jax.nn.softmax(sc, axis=-1).astype(h.dtype)
+        o = jnp.einsum("bkgqt,btkh->bqkgh", w, cv.astype(h.dtype)).reshape(b, s, nh, hd)
+        x = x + jnp.einsum("bshk,hkd->bsd", o, lp["cross"]["wo"].astype(h.dtype))
+        h = ll.rms_norm(x, lp["ln2"], cfg.norm_eps)
+        x = x + ll.mlp(h, lp["mlp"], cfg)
+        return x, (sk, sv)
+
+    x, (sk_n, sv_n) = lax.scan(
+        layer, x, (params["decoder"], cache["self_k"], cache["self_v"],
+                   cache["cross_k"], cache["cross_v"]))
+    x = ll.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = ll.unembed(x, params["embed"]).astype(jnp.float32)
+    new = dict(cache, self_k=sk_n, self_v=sv_n, pos=pos + 1)
+    return logits, new

@@ -1,0 +1,323 @@
+"""Core transformer layers: norms, RoPE, GQA attention (dense / chunked
+online-softmax / decode-with-KV-cache), gated MLPs, embeddings.
+
+All functions are pure: params are pytrees built from ``params.Spec`` trees.
+Logical sharding axes used here: embed, heads, kv_heads, head_dim, mlp,
+vocab, layers.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.config import ModelConfig
+from repro.models.params import Spec
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# norms / embeddings
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + w.astype(jnp.float32))).astype(dt)
+
+
+def norm_spec(d: int, dtype) -> Spec:
+    return Spec((d,), ("embed",), dtype, init="zeros")
+
+
+def embed_spec(cfg: ModelConfig) -> Spec:
+    return Spec((cfg.vocab_size, cfg.d_model), ("vocab", "embed"),
+                cfg.param_dtype, init="normal", scale=0.02)
+
+
+def embed(tokens: jax.Array, table: jax.Array, compute_dtype) -> jax.Array:
+    return table.astype(compute_dtype)[tokens]
+
+
+def unembed(x: jax.Array, table: jax.Array) -> jax.Array:
+    return jnp.einsum("bsd,vd->bsv", x, table.astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def _rope_freqs(hd: int, theta: float, dtype=jnp.float32) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=dtype) / hd))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, n, hd); positions: (..., S) int."""
+    hd = x.shape[-1]
+    freqs = _rope_freqs(hd, theta)
+    ang = positions[..., None].astype(jnp.float32) * freqs      # (..., S, hd/2)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention
+# ---------------------------------------------------------------------------
+
+def attention_specs(cfg: ModelConfig, layers: int | None = None) -> dict:
+    hd = cfg.hd()
+    L = (layers,) if layers is not None else ()
+    lax_ = ("layers",) if layers is not None else ()
+    pd = cfg.param_dtype
+    spec = {
+        "wq": Spec(L + (cfg.d_model, cfg.num_heads, hd),
+                   lax_ + ("embed", "heads", "head_dim"), pd),
+        "wk": Spec(L + (cfg.d_model, cfg.num_kv_heads, hd),
+                   lax_ + ("embed", "kv_heads", "head_dim"), pd),
+        "wv": Spec(L + (cfg.d_model, cfg.num_kv_heads, hd),
+                   lax_ + ("embed", "kv_heads", "head_dim"), pd),
+        "wo": Spec(L + (cfg.num_heads, hd, cfg.d_model),
+                   lax_ + ("heads", "head_dim", "embed"), pd),
+    }
+    if cfg.qkv_bias:
+        spec["bq"] = Spec(L + (cfg.num_heads, hd), lax_ + ("heads", "head_dim"), pd, init="zeros")
+        spec["bk"] = Spec(L + (cfg.num_kv_heads, hd), lax_ + ("kv_heads", "head_dim"), pd, init="zeros")
+        spec["bv"] = Spec(L + (cfg.num_kv_heads, hd), lax_ + ("kv_heads", "head_dim"), pd, init="zeros")
+    return spec
+
+
+def _qkv(x: jax.Array, p: dict, cfg: ModelConfig, positions: jax.Array):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+    if "bq" in p:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _mask(q_pos: jax.Array, k_pos: jax.Array, window, causal: bool) -> jax.Array:
+    """(..., S_q, S_k) additive mask. window: -1/traced; causal: static."""
+    dq = q_pos[..., :, None]
+    dk = k_pos[..., None, :]
+    ok = jnp.ones(jnp.broadcast_shapes(dq.shape, dk.shape), jnp.bool_)
+    if causal:
+        ok = ok & (dk <= dq)
+    window = jnp.asarray(window)
+    ok = ok & jnp.where(window > 0, dq - dk < window, True)
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def _sdpa_dense(q, k, v, mask, scale):
+    """q: (b,s,h,hd) k/v: (b,t,kv,hd) grouped; mask (b or 1, s, t)."""
+    b, s, h, hd = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, s, kv, g, hd)
+    scores = jnp.einsum("bskgh,btkh->bkgst", qg, k).astype(jnp.float32) * scale
+    scores = scores + mask[:, None, None, :, :]
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkh->bskgh", w, v)
+    return out.reshape(b, s, h, hd)
+
+
+def _sdpa_kv_chunked(q, k, v, q_pos, k_pos, window, causal, scale,
+                     k_chunk: int, scores_bf16: bool = False):
+    """Online-softmax over KV chunks with q kept whole.  Used under
+    sequence parallelism: q rows are sharded over the model axis (so the
+    per-device q extent is small), and scanning over a *sharded* q axis
+    would force re-replication; k/v are small and pre-replicated."""
+    b, s, h, hd = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    t = k.shape[1]
+    k_chunk = min(k_chunk, t)
+    assert t % k_chunk == 0
+    nk = t // k_chunk
+    qg = q.reshape(b, s, kv, g, hd)
+    kc = k.reshape(b, nk, k_chunk, kv, hd)
+    vc = v.reshape(b, nk, k_chunk, kv, hd)
+    kp = k_pos.reshape(k_pos.shape[0], nk, k_chunk)
+
+    m0 = jnp.full((b, kv, g, s), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, kv, g, s), jnp.float32)
+    a0 = jnp.zeros((b, kv, g, s, hd), jnp.float32)
+
+    sc_dt = jnp.bfloat16 if scores_bf16 else jnp.float32
+
+    def kv_step(acc, ki):
+        m, l, a = acc
+        kblk, vblk, kpos = ki
+        sc = jax.lax.dot_general(
+            qg, kblk, ((( 4,), (3,)), ((0, 2), (0, 2))),
+            preferred_element_type=sc_dt)            # (b,kv,s,g? ...)
+        # dot_general with batch dims (b, kv): result (b, kv, s, g, t)
+        sc = jnp.transpose(sc, (0, 1, 3, 2, 4)) * jnp.asarray(scale, sc_dt)
+        mask = _mask(q_pos, kpos, window, causal)[:, None, None].astype(sc_dt)
+        sc = sc + mask
+        m_new = jnp.maximum(m, jnp.max(sc, axis=-1).astype(jnp.float32))
+        p = jnp.exp(sc.astype(jnp.float32) - m_new[..., None]).astype(sc_dt)
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1).astype(jnp.float32)
+        a_new = a * corr[..., None] + jnp.einsum(
+            "bkgqt,btkh->bkgqh", p.astype(q.dtype), vblk)
+        return (m_new, l_new, a_new), None
+
+    (m, l, a), _ = lax.scan(
+        kv_step, (m0, l0, a0),
+        (jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0), jnp.moveaxis(kp, 1, 0)))
+    out = a / jnp.maximum(l[..., None], 1e-30)
+    out = jnp.transpose(out, (0, 3, 1, 2, 4)).reshape(b, s, h, hd)
+    return out.astype(q.dtype)
+
+
+def _sdpa_chunked(q, k, v, q_pos, k_pos, window, causal, scale,
+                  q_chunk: int, k_chunk: int):
+    """Online-softmax attention, scanning KV chunks inside a q-chunk scan.
+    Keeps peak memory at O(q_chunk * k_chunk) per (batch, head) instead of
+    O(S^2). FLOPs are unchanged (masked tiles still computed)."""
+    b, s, h, hd = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    t = k.shape[1]
+    q_chunk = min(q_chunk, s)
+    k_chunk = min(k_chunk, t)
+    assert s % q_chunk == 0 and t % k_chunk == 0, (s, t, q_chunk, k_chunk)
+    nq, nk = s // q_chunk, t // k_chunk
+
+    qg = q.reshape(b, nq, q_chunk, kv, g, hd)
+    qp = q_pos.reshape(q_pos.shape[0], nq, q_chunk)
+    kc = k.reshape(b, nk, k_chunk, kv, hd)
+    vc = v.reshape(b, nk, k_chunk, kv, hd)
+    kp = k_pos.reshape(k_pos.shape[0], nk, k_chunk)
+
+    def q_step(carry, qi):
+        qblk, qpos = qi              # (b,qc,kv,g,hd), (b*,qc)
+        m0 = jnp.full((b, kv, g, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kv, g, q_chunk), jnp.float32)
+        a0 = jnp.zeros((b, kv, g, q_chunk, hd), jnp.float32)
+
+        def kv_step(acc, ki):
+            m, l, a = acc
+            kblk, vblk, kpos = ki
+            sc = jnp.einsum("bqkgh,btkh->bkgqt", qblk, kblk).astype(jnp.float32) * scale
+            sc = sc + _mask(qpos, kpos, window, causal)[:, None, None]
+            m_new = jnp.maximum(m, jnp.max(sc, axis=-1))
+            p = jnp.exp(sc - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            a_new = a * corr[..., None] + jnp.einsum(
+                "bkgqt,btkh->bkgqh", p.astype(qblk.dtype), vblk)
+            return (m_new, l_new, a_new), None
+
+        (m, l, a), _ = lax.scan(
+            kv_step, (m0, l0, a0),
+            (jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0), jnp.moveaxis(kp, 1, 0)),
+            unroll=1)
+        out = a / jnp.maximum(l[..., None], 1e-30)
+        out = jnp.transpose(out, (0, 3, 1, 2, 4))        # (b,qc,kv,g,hd)
+        return carry, out.astype(qblk.dtype)
+
+    _, outs = lax.scan(q_step, None, (jnp.moveaxis(qg, 1, 0), jnp.moveaxis(qp, 1, 0)))
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, s, h, hd)
+    return out
+
+
+def gqa_attention(x: jax.Array, p: dict, cfg: ModelConfig, window,
+                  positions: jax.Array, return_kv: bool = False):
+    """Full-sequence (train / prefill) GQA attention with causal + window mask."""
+    scale = 1.0 / (cfg.hd() ** 0.5)
+    q, k, v = _qkv(x, p, cfg, positions)
+    s = x.shape[1]
+    if cfg.use_flash_attention:
+        # Pallas fused kernel: scores stay in VMEM (EXPERIMENTS.md §Perf).
+        # window must be static here: only all-local (-1 ratio) or
+        # all-global patterns route through the kernel.
+        from repro.kernels import ops as kops
+        win = cfg.local_window if cfg.local_ratio == -1 else -1
+        out = kops.flash_attention(
+            jnp.moveaxis(q, 2, 1), jnp.moveaxis(k, 2, 1), jnp.moveaxis(v, 2, 1),
+            causal=True, window=win)
+        out = jnp.moveaxis(out, 1, 2)
+    elif s <= cfg.dense_attn_max_seq:
+        mask = _mask(positions, positions, window, causal=True)
+        out = _sdpa_dense(q, k, v, mask, scale)
+    elif cfg.sharding_preset == "sp_serve":
+        # sequence parallelism: q stays sharded over "model"; k/v are
+        # replicated once per layer (they are small next to scores)
+        from repro.distrib import act_sharding
+        k = act_sharding.replicate_seq(k, cfg)
+        v = act_sharding.replicate_seq(v, cfg)
+        out = _sdpa_kv_chunked(q, k, v, positions, positions, window, True,
+                               scale, k_chunk=cfg.attn_chunk,
+                               scores_bf16=cfg.attn_scores_bf16)
+    else:
+        out = _sdpa_chunked(q, k, v, positions, positions, window, True, scale,
+                            q_chunk=cfg.attn_chunk, k_chunk=cfg.attn_chunk)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    if return_kv:
+        return out, k, v
+    return out
+
+
+def gqa_decode(x: jax.Array, p: dict, cfg: ModelConfig, window,
+               k_cache: jax.Array, v_cache: jax.Array, pos: jax.Array):
+    """One-token decode: x (b,1,d); cache (b,S,kv,hd); pos scalar int32.
+    Returns (out (b,1,d), k_cache, v_cache) with the new KV written at pos."""
+    scale = 1.0 / (cfg.hd() ** 0.5)
+    positions = jnp.broadcast_to(pos, (x.shape[0], 1))
+    q, k, v = _qkv(x, p, cfg, positions)
+    k_cache = lax.dynamic_update_slice(k_cache, k.astype(k_cache.dtype), (0, pos, 0, 0))
+    v_cache = lax.dynamic_update_slice(v_cache, v.astype(v_cache.dtype), (0, pos, 0, 0))
+    b, S, kv, hd = k_cache.shape
+    h = q.shape[2]
+    g = h // kv
+    qg = q.reshape(b, 1, kv, g, hd)
+    k_pos = jnp.arange(S)[None, :]
+    valid = (k_pos <= pos)
+    win = jnp.asarray(window)
+    valid = valid & jnp.where(win > 0, pos - k_pos < win, True)
+    mask = jnp.where(valid, 0.0, NEG_INF).astype(jnp.float32)
+    scores = jnp.einsum("bqkgh,btkh->bkgqt", qg, k_cache.astype(q.dtype))
+    scores = scores.astype(jnp.float32) * scale + mask[:, None, None, None, :]
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqt,btkh->bqkgh", w, v_cache.astype(q.dtype))
+    out = out.reshape(b, 1, h, hd)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype)), k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# gated MLP
+# ---------------------------------------------------------------------------
+
+def mlp_specs(cfg: ModelConfig, layers: int | None = None,
+              d_ff: int | None = None) -> dict:
+    d_ff = d_ff or cfg.d_ff
+    L = (layers,) if layers is not None else ()
+    lax_ = ("layers",) if layers is not None else ()
+    pd = cfg.param_dtype
+    return {
+        "wi": Spec(L + (cfg.d_model, 2, d_ff), lax_ + ("embed", None, "mlp"), pd),
+        "wo": Spec(L + (d_ff, cfg.d_model), lax_ + ("mlp", "embed"), pd),
+    }
+
+
+def _act(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[name]
+
+
+def mlp(x: jax.Array, p: dict, cfg: ModelConfig) -> jax.Array:
+    gu = jnp.einsum("bsd,dcf->bscf", x, p["wi"].astype(x.dtype))
+    h = _act(cfg.act)(gu[:, :, 0]) * gu[:, :, 1]
+    return jnp.einsum("bsf,fd->bsd", h, p["wo"].astype(x.dtype))

@@ -1,0 +1,96 @@
+"""Lightweight parameter-spec system: shapes + logical axes -> init /
+abstract (ShapeDtypeStruct) / NamedSharding trees.
+
+Every model module builds a pytree of :class:`Spec`; the launcher turns it
+into real arrays (smoke tests), abstract stand-ins (dry-run) or shardings
+(pjit in/out specs).  Logical-axis -> mesh-axis rules live in
+``distrib/sharding.py`` and are overridable per architecture config.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Mapping
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class Spec:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]          # logical axis names per dim
+    dtype: Any = jnp.float32
+    init: str = "fan_in"                   # fan_in | zeros | ones | normal
+    scale: float | None = None
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, Spec)
+
+
+def _init_one(spec: Spec, key: jax.Array) -> jax.Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    if spec.init == "normal":
+        s = spec.scale if spec.scale is not None else 0.02
+    else:  # fan_in
+        fan = spec.shape[0] if spec.shape else 1
+        s = spec.scale if spec.scale is not None else 1.0 / np.sqrt(max(fan, 1))
+    return (jax.random.normal(key, spec.shape, jnp.float32) * s).astype(spec.dtype)
+
+
+def init_params(tree, key: jax.Array):
+    leaves, treedef = jax.tree.flatten(tree, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    vals = [_init_one(l, k) if is_spec(l) else l for l, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def abstract_params(tree):
+    """ShapeDtypeStruct tree for the dry-run (no allocation)."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype),
+        tree, is_leaf=is_spec)
+
+
+def partition_spec(spec: Spec, rules: Mapping[str, str | None],
+                   mesh: Mesh) -> PartitionSpec:
+    """Map logical axes to mesh axes.  Skips non-divisible dims, and each
+    mesh axis is used at most once per spec (first dim wins — e.g. MoE
+    expert weights shard over experts, not also over mlp)."""
+    entries = []
+    used: set[str] = set()
+    for dim, ax in zip(spec.shape, spec.axes):
+        mesh_ax = rules.get(ax) if ax is not None else None
+        if mesh_ax is None:
+            entries.append(None)
+            continue
+        axes_tuple = mesh_ax if isinstance(mesh_ax, tuple) else (mesh_ax,)
+        if any(a in used for a in axes_tuple):
+            entries.append(None)
+            continue
+        size = np.prod([mesh.shape[a] for a in axes_tuple])
+        if dim % size == 0:
+            entries.append(mesh_ax)
+            used.update(axes_tuple)
+        else:
+            entries.append(None)
+    return PartitionSpec(*entries)
+
+
+def sharding_tree(tree, mesh: Mesh, rules: Mapping[str, str | None]):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, partition_spec(s, rules, mesh)),
+        tree, is_leaf=is_spec)
+
+
+def count_params(tree) -> int:
+    leaves = jax.tree.leaves(tree, is_leaf=is_spec)
+    return int(sum(np.prod(l.shape) for l in leaves))

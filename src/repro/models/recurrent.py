@@ -1,0 +1,124 @@
+"""Chunked linear-recurrence machinery shared by mLSTM (xLSTM) and SSD
+(Mamba2): both maintain a matrix state S_t = a_t * S_{t-1} + i_t * k_t v_t^T
+and read y_t = q_t . S_t (mLSTM adds a normalizer state n_t).
+
+Training/prefill uses the chunk-parallel form: within a chunk the quadratic
+(C x C) masked-decay attention runs on the MXU; between chunks only the
+(hd_k x hd_v) state is carried — O(S) total, sub-quadratic, which is what
+makes the ``long_500k`` cells feasible for the SSM/hybrid architectures.
+
+Decode is the O(1) recurrent update.  Stabilization: per-chunk max-shift of
+the log-gates (a simplification of the xLSTM running-max stabilizer —
+recorded in DESIGN.md).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+NEG_INF = -1e30
+
+
+def chunked_linear_attention(q, k, v, log_a, log_i, state0, norm0=None,
+                             chunk: int = 256, normalize: bool = False):
+    """q,k,v: (B, H, S, hd_k/hd_k/hd_v); log_a/log_i: (B, H, S) decay and
+    input-gate logs (log_a <= 0).  Returns (y (B,H,S,hd_v), state, norm).
+
+    y_t = q_t^T [ sum_{u<=t} (prod_{w=u+1..t} a_w) i_u k_u v_u^T  + (prod a) S_0 ]
+    """
+    B, H, S, dk = q.shape
+    dv = v.shape[-1]
+    chunk = min(chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    n = S // chunk
+
+    def resh(x):
+        return x.reshape(x.shape[0], x.shape[1], n, chunk, *x.shape[3:])
+
+    qc, kc, vc = resh(q), resh(k), resh(v)
+    lac = log_a.reshape(B, H, n, chunk)
+    lic = log_i.reshape(B, H, n, chunk)
+
+    def step(carry, xs):
+        S_prev, n_prev = carry
+        qb, kb, vb, la, li = xs                 # (B,H,C,*) / (B,H,C)
+        cum = jnp.cumsum(la, axis=-1)           # inclusive prefix log-decay
+        total = cum[..., -1:]                   # (B,H,1)
+
+        # intra-chunk: D[s,t] = exp(cum[s]-cum[t]+li[t]) for t<=s
+        ds = cum[..., :, None] - cum[..., None, :] + li[..., None, :]
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        ds = jnp.where(tri, ds, NEG_INF)
+        # stabilize the exp with a per-row max shift
+        m = jnp.maximum(jnp.max(ds, axis=-1, keepdims=True), -30.0)
+        D = jnp.exp(ds - m)                                        # (B,H,C,C)
+        scores = jnp.einsum("bhsk,bhtk->bhst", qb.astype(jnp.float32),
+                            kb.astype(jnp.float32)) * D
+        y_intra = jnp.einsum("bhst,bhtv->bhsv", scores, vb.astype(jnp.float32))
+        # inter-chunk: q_s * exp(cum[s]) @ S_prev  (same max shift)
+        w_inter = jnp.exp(cum[..., :, None] - m)                   # (B,H,C,1)
+        y_inter = jnp.einsum("bhsk,bhkv->bhsv", qb.astype(jnp.float32) * w_inter,
+                             S_prev)
+        y = (y_intra + y_inter) * jnp.exp(m)                       # undo shift
+
+        if normalize:
+            # normalizer rows: n_s = sum_t D[s,t] k_t  (+ decayed carry-in)
+            s_norm = jnp.einsum("bhst,bhtk->bhsk", D, kb.astype(jnp.float32))
+            n_vec = (s_norm + w_inter * n_prev[:, :, None, :]) * jnp.exp(m)
+            denom = jnp.abs(jnp.einsum("bhsk,bhsk->bhs", qb.astype(jnp.float32),
+                                       n_vec))
+            y = y / jnp.maximum(denom[..., None], 1.0)
+
+        # state update: S_new = e^total S_prev + sum_t e^{total-cum[t]+li[t]} k_t v_t^T
+        wk = jnp.exp(total - cum + li)                             # (B,H,C)
+        S_new = jnp.exp(total)[..., None] * S_prev + jnp.einsum(
+            "bhtk,bhtv->bhkv", (kb.astype(jnp.float32) * wk[..., None]), vb.astype(jnp.float32))
+        n_new = jnp.exp(total) * n_prev + jnp.einsum(
+            "bht,bhtk->bhk", wk, kb.astype(jnp.float32)) if normalize else n_prev
+        return (S_new, n_new), y.astype(q.dtype)
+
+    norm0 = norm0 if norm0 is not None else jnp.zeros((B, H, dk), jnp.float32)
+    xs = (jnp.moveaxis(qc, 2, 0), jnp.moveaxis(kc, 2, 0), jnp.moveaxis(vc, 2, 0),
+          jnp.moveaxis(lac, 2, 0), jnp.moveaxis(lic, 2, 0))
+    (S_f, n_f), ys = lax.scan(step, (state0, norm0), xs)
+    y = jnp.moveaxis(ys, 0, 2).reshape(B, H, S, dv)
+    return y, S_f, n_f
+
+
+def recurrent_step(q, k, v, log_a, log_i, state, norm=None, normalize=False):
+    """O(1) decode update. q,k,v: (B,H,hd); log_a/log_i: (B,H)."""
+    a = jnp.exp(log_a.astype(jnp.float32))[..., None, None]
+    i = jnp.exp(jnp.minimum(log_i.astype(jnp.float32), 30.0))[..., None, None]
+    S_new = a * state + i * jnp.einsum("bhk,bhv->bhkv", k.astype(jnp.float32),
+                                       v.astype(jnp.float32))
+    y = jnp.einsum("bhk,bhkv->bhv", q.astype(jnp.float32), S_new)
+    n_new = norm
+    if normalize:
+        n_new = a[..., 0] * norm + i[..., 0] * k.astype(jnp.float32)
+        denom = jnp.abs(jnp.einsum("bhk,bhk->bh", q.astype(jnp.float32), n_new))
+        y = y / jnp.maximum(denom[..., None], 1.0)
+    return y.astype(q.dtype), S_new, n_new
+
+
+def slstm_scan(z, i_log, f_log, o, state0=None):
+    """sLSTM scalar recurrence via associative scan.
+    z, o: (B, S, D); i_log, f_log: (B, S, D) gate pre-activations (log space).
+    c_t = f c_{t-1} + i z_t;  n_t = f n_{t-1} + i;  h = o * c / n.
+    """
+    f = jax.nn.sigmoid(f_log.astype(jnp.float32))
+    i = jnp.exp(jnp.minimum(i_log.astype(jnp.float32), 20.0))
+
+    def combine(a, b):
+        (fa, ca, na) = a
+        (fb, cb, nb) = b
+        return (fa * fb, fb * ca + cb, fb * na + nb)
+
+    elems = (f, i * z.astype(jnp.float32), i)
+    fs, cs, ns = lax.associative_scan(combine, elems, axis=1)
+    if state0 is not None:
+        c0, n0 = state0
+        cs = cs + fs * c0[:, None]
+        ns = ns + fs * n0[:, None]
+    h = jax.nn.sigmoid(o.astype(jnp.float32)) * cs / jnp.maximum(jnp.abs(ns), 1.0)
+    return h.astype(z.dtype), (cs[:, -1], ns[:, -1])

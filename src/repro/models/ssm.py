@@ -1,0 +1,271 @@
+"""Mamba2 (SSD) blocks and the Zamba2 hybrid stack.
+
+SSD is structured linear attention: per head, state S += dt * (B x^T) with
+scalar decay exp(-exp(A_log) dt); readout y = C . S.  We reuse the chunked
+machinery in ``recurrent.py`` (q=C, k=B, v=dt*x, log_a=-exp(A_log)*dt).
+
+Zamba2: ``num_layers`` Mamba2 blocks; after every ``shared_attn_every``
+blocks, ONE weight-shared (attention + MLP) block is applied (Zamba's
+shared-block design; we omit its per-invocation LoRA deltas — DESIGN.md §2).
+Each invocation keeps its own KV cache.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import layers as ll
+from repro.models import recurrent as rec
+from repro.models.config import ModelConfig
+from repro.models.params import Spec
+
+
+def _dims(cfg: ModelConfig):
+    di = 2 * cfg.d_model
+    hd = 64
+    H = di // hd
+    N = cfg.ssm_state or 64
+    return di, H, hd, N
+
+
+def mamba_specs(cfg: ModelConfig, lead: tuple[int, ...], lead_axes) -> dict:
+    di, H, hd, N = _dims(cfg)
+    D = cfg.d_model
+    pd = cfg.param_dtype
+    proj_out = di + di + 2 * N + H   # z, x, B, C, dt
+
+    def s(shape, axes, **kw):
+        return Spec(lead + shape, lead_axes + axes, pd, **kw)
+
+    return {
+        "ln": s((D,), ("embed",), init="zeros"),
+        "in_proj": s((D, proj_out), ("embed", "mlp")),
+        "conv": s((4, di + 2 * N), (None, "mlp"), init="normal", scale=0.1),
+        "A_log": s((H,), ("heads",), init="zeros"),
+        "dt_bias": s((H,), ("heads",), init="zeros"),
+        "D_skip": s((H,), ("heads",), init="ones"),
+        "ln_out": s((di,), ("mlp",), init="zeros"),
+        "out_proj": s((di, D), ("mlp", "embed")),
+    }
+
+
+def _split_proj(proj, cfg):
+    di, H, hd, N = _dims(cfg)
+    z = proj[..., :di]
+    xin = proj[..., di:2 * di]
+    Bv = proj[..., 2 * di:2 * di + N]
+    Cv = proj[..., 2 * di + N:2 * di + 2 * N]
+    dt = proj[..., 2 * di + 2 * N:]
+    return z, xin, Bv, Cv, dt
+
+
+def _gates(dt, lp):
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + lp["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(lp["A_log"].astype(jnp.float32))
+    log_a = A * dt                       # (..., H), <= 0
+    log_i = jnp.log(jnp.maximum(dt, 1e-9))
+    return dt, log_a, log_i
+
+
+def mamba_block(x, lp, cfg: ModelConfig, state=None, chunk=256):
+    """x (B,S,D) -> (y, (conv_tail, S_mat)). SSD chunked form."""
+    di, H, hd, N = _dims(cfg)
+    B, S, D = x.shape
+    h = ll.rms_norm(x, lp["ln"], cfg.norm_eps)
+    proj = jnp.einsum("bsd,df->bsf", h, lp["in_proj"].astype(x.dtype))
+    z, xin, Bv, Cv, dt = _split_proj(proj, cfg)
+    conv_in = jnp.concatenate([xin, Bv, Cv], axis=-1)
+    if state is not None:
+        conv_tail, S0 = state
+        conv_in_eff = jnp.concatenate([conv_tail, conv_in], axis=1)
+    else:
+        conv_tail = None
+        S0 = jnp.zeros((B, H, N, hd), jnp.float32)
+        conv_in_eff = conv_in
+    K = lp["conv"].shape[0]
+    cp = jnp.pad(conv_in_eff, ((0, 0), (K - 1 if state is None else 0, 0), (0, 0)))
+    conv_out = sum(cp[:, i:i + S] * lp["conv"].astype(x.dtype)[i][None, None]
+                   for i in range(K))
+    conv_out = jax.nn.silu(conv_out)
+    xc = conv_out[..., :di].reshape(B, S, H, hd)
+    Bc = conv_out[..., di:di + N]
+    Cc = conv_out[..., di + N:]
+    dt_f, log_a, log_i = _gates(dt, lp)
+    # per-head: q=C (shared across heads), k=B, v=x
+    q = jnp.broadcast_to(Cc[:, None], (B, H, S, N)).astype(x.dtype)
+    k = jnp.broadcast_to(Bc[:, None], (B, H, S, N)).astype(x.dtype)
+    v = xc.transpose(0, 2, 1, 3)                                   # (B,H,S,hd)
+    y, S_f, _ = rec.chunked_linear_attention(
+        q, k, v, log_a.transpose(0, 2, 1), log_i.transpose(0, 2, 1),
+        S0, chunk=min(chunk, S), normalize=False)
+    y = y + lp["D_skip"].astype(jnp.float32)[None, :, None, None] * v.astype(jnp.float32)
+    y = y.transpose(0, 2, 1, 3).reshape(B, S, di).astype(x.dtype)
+    y = ll.rms_norm(y, lp["ln_out"], cfg.norm_eps) * jax.nn.silu(z)
+    out = jnp.einsum("bsf,fd->bsd", y, lp["out_proj"].astype(x.dtype))
+    new_tail = conv_in_eff[:, -(K - 1):]
+    return x + out, (new_tail, S_f)
+
+
+def mamba_decode(x, lp, cfg: ModelConfig, state):
+    """One-token decode; state = (conv_tail (B,K-1,C), S_mat (B,H,N,hd))."""
+    y, (new_tail, S_f) = mamba_block(x, lp, cfg, state=state, chunk=1)
+    return y, (new_tail, S_f)
+
+
+# ---------------------------------------------------------------------------
+# stacks
+# ---------------------------------------------------------------------------
+
+def _zamba_layout(cfg: ModelConfig):
+    period = cfg.shared_attn_every or cfg.num_layers
+    assert cfg.num_layers % period == 0
+    G = cfg.num_layers // period
+    return G, period
+
+
+def specs(cfg: ModelConfig) -> dict:
+    """Pure Mamba2 stack, or Zamba2 hybrid when shared_attn_every > 0."""
+    tree = {
+        "embed": ll.embed_spec(cfg),
+        "final_norm": ll.norm_spec(cfg.d_model, cfg.param_dtype),
+    }
+    if cfg.shared_attn_every:
+        G, period = _zamba_layout(cfg)
+        tree["mamba"] = mamba_specs(cfg, (G, period), ("layers", "layers"))
+        shared = {
+            "ln1": ll.norm_spec(cfg.d_model, cfg.param_dtype),
+            "attn": ll.attention_specs(cfg),
+            "ln2": ll.norm_spec(cfg.d_model, cfg.param_dtype),
+            "mlp": ll.mlp_specs(cfg),
+        }
+        tree["shared"] = shared
+    else:
+        tree["mamba"] = mamba_specs(cfg, (cfg.num_layers,), ("layers",))
+    return tree
+
+
+def forward(params, batch, cfg: ModelConfig):
+    x = ll.embed(batch["tokens"], params["embed"], cfg.compute_dtype)
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+
+    def mstep(x, lp):
+        y, _ = mamba_block(x, lp, cfg)
+        return y, None
+
+    if cfg.shared_attn_every:
+        shared = params["shared"]
+
+        def group(x, gp):
+            x, _ = lax.scan(mstep, x, gp)
+            h = ll.rms_norm(x, shared["ln1"], cfg.norm_eps)
+            x = x + ll.gqa_attention(h, shared["attn"], cfg, -1, positions)
+            h = ll.rms_norm(x, shared["ln2"], cfg.norm_eps)
+            x = x + ll.mlp(h, shared["mlp"], cfg)
+            return x, None
+
+        x, _ = lax.scan(group, x, params["mamba"])
+    else:
+        x, _ = lax.scan(mstep, x, params["mamba"])
+    x = ll.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = ll.unembed(x, params["embed"]).astype(jnp.float32)
+    return logits, {"lb_loss": jnp.zeros((), jnp.float32)}
+
+
+def cache_specs(cfg: ModelConfig, batch_size: int, max_seq: int) -> dict:
+    di, H, hd, N = _dims(cfg)
+    f32 = jnp.float32
+    conv_c = di + 2 * N
+    if cfg.shared_attn_every:
+        G, period = _zamba_layout(cfg)
+        lead, la = (G, period), ("layers", "layers")
+    else:
+        lead, la = (cfg.num_layers,), ("layers",)
+    tree = {
+        "conv": Spec(lead + (batch_size, 3, conv_c), la + (None, None, "mlp"), f32, init="zeros"),
+        "S": Spec(lead + (batch_size, H, N, hd), la + (None, "heads", None, "head_dim"), f32, init="zeros"),
+        "pos": Spec((), (), jnp.int32, init="zeros"),
+    }
+    if cfg.shared_attn_every:
+        G, _ = _zamba_layout(cfg)
+        kv, ahd = cfg.num_kv_heads, cfg.hd()
+        kvs = ("layers", None, "seq", "kv_heads", "head_dim")
+        tree["shared_k"] = Spec((G, batch_size, max_seq, kv, ahd), kvs,
+                                cfg.compute_dtype, init="zeros")
+        tree["shared_v"] = Spec((G, batch_size, max_seq, kv, ahd), kvs,
+                                cfg.compute_dtype, init="zeros")
+    return tree
+
+
+def prefill(params, batch, cfg: ModelConfig, max_seq: int | None = None):
+    """Run the prompt, return (last-token logits, state cache)."""
+    x = ll.embed(batch["tokens"], params["embed"], cfg.compute_dtype)
+    B, S = x.shape[:2]
+    max_seq = max_seq or S
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+
+    def mstep(x, lp):
+        y, (tail, S_f) = mamba_block(x, lp, cfg)
+        return y, (tail.astype(jnp.float32), S_f)
+
+    if cfg.shared_attn_every:
+        shared = params["shared"]
+
+        def group(x, gp):
+            x, (tail, S_f) = lax.scan(mstep, x, gp)
+            h = ll.rms_norm(x, shared["ln1"], cfg.norm_eps)
+            out, k, v = ll.gqa_attention(h, shared["attn"], cfg, -1, positions,
+                                         return_kv=True)
+            x = x + out
+            h = ll.rms_norm(x, shared["ln2"], cfg.norm_eps)
+            x = x + ll.mlp(h, shared["mlp"], cfg)
+            pad = max_seq - S
+            kc = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(cfg.compute_dtype)
+            vc = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(cfg.compute_dtype)
+            return x, (tail, S_f, kc, vc)
+
+        x, (tail, S_f, k_all, v_all) = lax.scan(group, x, params["mamba"])
+        cache = {"conv": tail, "S": S_f, "shared_k": k_all, "shared_v": v_all,
+                 "pos": jnp.asarray(S, jnp.int32)}
+    else:
+        x, (tail, S_f) = lax.scan(mstep, x, params["mamba"])
+        cache = {"conv": tail, "S": S_f, "pos": jnp.asarray(S, jnp.int32)}
+    x = ll.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = ll.unembed(x[:, -1:], params["embed"]).astype(jnp.float32)
+    return logits, cache
+
+
+def decode_step(params, cache, token, cfg: ModelConfig):
+    x = ll.embed(token, params["embed"], cfg.compute_dtype)
+    pos = cache["pos"]
+
+    def mstep(x, lxs):
+        lp, conv, S0 = lxs
+        y, (conv2, S2) = mamba_decode(x, lp, cfg, (conv, S0))
+        return y, (conv2, S2)
+
+    if cfg.shared_attn_every:
+        shared = params["shared"]
+
+        def group(x, gxs):
+            gp, conv, S0, kc, vc = gxs
+            x, (conv2, S2) = lax.scan(mstep, x, (gp, conv, S0))
+            h = ll.rms_norm(x, shared["ln1"], cfg.norm_eps)
+            out, kc, vc = ll.gqa_decode(h, shared["attn"], cfg, -1, kc, vc, pos)
+            x = x + out
+            h = ll.rms_norm(x, shared["ln2"], cfg.norm_eps)
+            x = x + ll.mlp(h, shared["mlp"], cfg)
+            return x, (conv2, S2, kc, vc)
+
+        x, (conv_n, S_n, k_n, v_n) = lax.scan(
+            group, x, (params["mamba"], cache["conv"], cache["S"],
+                       cache["shared_k"], cache["shared_v"]))
+        new_cache = {"conv": conv_n, "S": S_n, "shared_k": k_n,
+                     "shared_v": v_n, "pos": pos + 1}
+    else:
+        x, (conv_n, S_n) = lax.scan(mstep, x, (params["mamba"], cache["conv"], cache["S"]))
+        new_cache = {"conv": conv_n, "S": S_n, "pos": pos + 1}
+    x = ll.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = ll.unembed(x, params["embed"]).astype(jnp.float32)
+    return logits, new_cache

@@ -1,0 +1,172 @@
+"""Generic decoder-only transformer (dense FFN or MoE), scan-over-layers.
+
+Covers: gemma3 (5:1 local:global windows), minitron, qwen1.5 (qkv bias),
+glm4, mixtral & kimi-k2 (MoE), and the internvl2 VLM backbone
+(``frontend="embed"``: the stub modality frontend feeds precomputed patch
+embeddings straight past the token embedding).
+
+Layer params are stacked with a leading "layers" axis and scanned, so the
+compiled HLO contains ONE layer body regardless of depth (critical for the
+40-cell dry-run compile budget).  Per-layer heterogeneity (gemma's window
+pattern) rides along as scanned xs, not as separate programs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.distrib import act_sharding
+from repro.models import layers as ll
+from repro.models import moe as moe_lib
+from repro.models.config import ModelConfig
+from repro.models.params import Spec
+
+
+def specs(cfg: ModelConfig) -> dict:
+    L = cfg.num_layers
+    layer = {
+        "ln1": Spec((L, cfg.d_model), ("layers", "embed"), cfg.param_dtype, init="zeros"),
+        "ln2": Spec((L, cfg.d_model), ("layers", "embed"), cfg.param_dtype, init="zeros"),
+        "attn": ll.attention_specs(cfg, layers=L),
+    }
+    if cfg.family == "moe" or cfg.num_experts:
+        layer["moe"] = moe_lib.moe_specs(cfg, layers=L)
+    else:
+        layer["mlp"] = ll.mlp_specs(cfg, layers=L)
+    tree = {
+        "embed": ll.embed_spec(cfg),
+        "final_norm": ll.norm_spec(cfg.d_model, cfg.param_dtype),
+        "layers": layer,
+    }
+    if not cfg.tie_embeddings:
+        tree["unembed"] = Spec((cfg.vocab_size, cfg.d_model), ("vocab", "embed"),
+                               cfg.param_dtype, init="normal", scale=0.02)
+    return tree
+
+
+def _maybe_remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+              if cfg.remat == "dots" else None)
+    return jax.checkpoint(fn, policy=policy)
+
+
+def _inputs_to_hidden(params, batch, cfg: ModelConfig):
+    if cfg.frontend == "embed":
+        x = batch["embeds"].astype(cfg.compute_dtype)
+    else:
+        x = ll.embed(batch["tokens"], params["embed"], cfg.compute_dtype)
+    return act_sharding.constrain_seq(x, cfg)
+
+
+def forward(params, batch, cfg: ModelConfig) -> tuple[jax.Array, dict]:
+    """Full-sequence forward -> (logits (B,S,V) f32, aux)."""
+    x = _inputs_to_hidden(params, batch, cfg)
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    windows = jnp.asarray(cfg.windows(), jnp.int32)
+    layer_specs = jax.tree.map(
+        lambda s: Spec(s.shape[1:], s.axes[1:], s.dtype),
+        specs(cfg)["layers"], is_leaf=lambda s: isinstance(s, Spec))
+
+    def layer(x, xs):
+        lp, window = xs
+        lp = act_sharding.constrain_layer_params(lp, layer_specs, cfg)
+        x = act_sharding.constrain_seq(x, cfg)
+        h = ll.rms_norm(x, lp["ln1"], cfg.norm_eps)
+        x = x + ll.gqa_attention(h, lp["attn"], cfg, window, positions)
+        h = ll.rms_norm(x, lp["ln2"], cfg.norm_eps)
+        if "moe" in lp:
+            y, aux = moe_lib.moe_ffn(h, lp["moe"], cfg)
+            return x + y, aux["lb_loss"]
+        return x + ll.mlp(h, lp["mlp"], cfg), jnp.zeros((), jnp.float32)
+
+    layer = _maybe_remat(layer, cfg)
+    x, lb = lax.scan(layer, x, (params["layers"], windows))
+    x = ll.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    table = params.get("unembed", params["embed"])
+    logits = ll.unembed(x, table).astype(jnp.float32)
+    return logits, {"lb_loss": jnp.sum(lb)}
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def cache_specs(cfg: ModelConfig, batch_size: int, max_seq: int) -> dict:
+    L, kv, hd = cfg.num_layers, cfg.num_kv_heads, cfg.hd()
+    kvs = ("layers", None, "seq", "kv_heads", "head_dim")
+    return {
+        "k": Spec((L, batch_size, max_seq, kv, hd), kvs, cfg.compute_dtype, init="zeros"),
+        "v": Spec((L, batch_size, max_seq, kv, hd), kvs, cfg.compute_dtype, init="zeros"),
+        "pos": Spec((), (), jnp.int32, init="zeros"),
+    }
+
+
+def prefill(params, batch, cfg: ModelConfig, max_seq: int | None = None):
+    """Run the prompt, return (last-token logits, filled cache)."""
+    x = _inputs_to_hidden(params, batch, cfg)
+    B, S = x.shape[:2]
+    max_seq = max_seq or S
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    windows = jnp.asarray(cfg.windows(), jnp.int32)
+
+    def layer(x, xs):
+        lp, window = xs
+        x = act_sharding.constrain_seq(x, cfg)
+        h = ll.rms_norm(x, lp["ln1"], cfg.norm_eps)
+        attn_out, k, v = ll.gqa_attention(h, lp["attn"], cfg, window, positions,
+                                          return_kv=True)
+        x = x + attn_out
+        h = ll.rms_norm(x, lp["ln2"], cfg.norm_eps)
+        if "moe" in lp:
+            y, _ = moe_lib.moe_ffn(h, lp["moe"], cfg)
+            x = x + y
+        else:
+            x = x + ll.mlp(h, lp["mlp"], cfg)
+        pad = max_seq - S
+        kc = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        vc = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        return x, (kc.astype(cfg.compute_dtype), vc.astype(cfg.compute_dtype))
+
+    layer = _maybe_remat(layer, cfg)
+    x, (k_all, v_all) = lax.scan(layer, x, (params["layers"], windows))
+    x = ll.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    table = params.get("unembed", params["embed"])
+    logits = ll.unembed(x[:, -1:], table).astype(jnp.float32)
+    cache = {"k": k_all, "v": v_all, "pos": jnp.asarray(S, jnp.int32)}
+    return logits, cache
+
+
+def decode_step(params, cache, token, cfg: ModelConfig):
+    """One decode step: token (B, 1) int32 -> (logits (B,1,V), new cache).
+    Generated tokens are always text tokens — even for the VLM backbone,
+    whose stub frontend only feeds the *prompt* as patch embeddings."""
+    x = ll.embed(token, params["embed"], cfg.compute_dtype)
+    pos = cache["pos"]
+    windows = jnp.asarray(cfg.windows(), jnp.int32)
+
+    def layer(x, xs):
+        lp, window, kc, vc = xs
+        h = ll.rms_norm(x, lp["ln1"], cfg.norm_eps)
+        out, kc, vc = ll.gqa_decode(h, lp["attn"], cfg, window, kc, vc, pos)
+        x = x + out
+        h = ll.rms_norm(x, lp["ln2"], cfg.norm_eps)
+        if "moe" in lp:
+            y, _ = moe_lib.moe_ffn(h, lp["moe"], cfg)
+            x = x + y
+        else:
+            x = x + ll.mlp(h, lp["mlp"], cfg)
+        return x, (kc, vc)
+
+    x, (k_all, v_all) = lax.scan(layer, x, (params["layers"], windows,
+                                            cache["k"], cache["v"]))
+    x = ll.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    table = params.get("unembed", params["embed"])
+    logits = ll.unembed(x, table).astype(jnp.float32)
+    return logits, {"k": k_all, "v": v_all, "pos": pos + 1}

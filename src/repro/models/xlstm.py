@@ -1,0 +1,278 @@
+"""xLSTM stack (arXiv:2405.04517 backbone): mLSTM blocks with periodic
+sLSTM blocks (xLSTM[7:1] style), built on the shared chunked linear
+recurrence in ``recurrent.py``.
+
+Layout: ``num_layers`` = G groups x ``xlstm_slstm_every`` layers; the last
+layer of each group is an sLSTM, the rest are mLSTMs.  Params are stacked
+(G, per-group) and double-scanned so the HLO holds one mLSTM + one sLSTM
+body.  d_ff == 0 in the assigned config: blocks carry their own up/down
+projections (pf=2), no separate FFN.
+
+State is O(1) in sequence length, so ``long_500k`` decode is exercised for
+this family (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import layers as ll
+from repro.models import recurrent as rec
+from repro.models.config import ModelConfig
+from repro.models.params import Spec
+
+
+def _dims(cfg: ModelConfig):
+    di = 2 * cfg.d_model           # pf = 2 up-projection
+    H = cfg.num_heads
+    hd = di // H
+    return di, H, hd
+
+
+def _groups(cfg: ModelConfig):
+    every = cfg.xlstm_slstm_every or cfg.num_layers + 1
+    if cfg.num_layers % every == 0 and cfg.xlstm_slstm_every:
+        G = cfg.num_layers // every
+        n_m = every - 1
+    else:  # no sLSTM layers
+        G, n_m = 1, cfg.num_layers
+    return G, n_m
+
+
+def specs(cfg: ModelConfig) -> dict:
+    di, H, hd = _dims(cfg)
+    D = cfg.d_model
+    pd = cfg.param_dtype
+    G, n_m = _groups(cfg)
+    has_s = cfg.xlstm_slstm_every and cfg.num_layers % cfg.xlstm_slstm_every == 0
+
+    def stk(shape, axes, **kw):
+        return Spec((G, n_m) + shape, ("layers", "layers") + axes, pd, **kw)
+
+    mlstm = {
+        "ln": stk((D,), ("embed",), init="zeros"),
+        "wu": stk((D, 2, di), ("embed", None, "mlp")),
+        "conv": stk((4, di), (None, "mlp"), init="normal", scale=0.1),
+        # block-diagonal per-head projections (xLSTM's design): (H, hd, hd)
+        "wq": stk((H, hd, hd), ("heads", None, "head_dim")),
+        "wk": stk((H, hd, hd), ("heads", None, "head_dim")),
+        "wv": stk((H, hd, hd), ("heads", None, "head_dim")),
+        "wgate": stk((D, 2, H), ("embed", None, "heads"), init="normal", scale=0.02),
+        "gbias": stk((2, H), (None, "heads"), init="ones"),
+        "ln_out": stk((di,), ("mlp",), init="zeros"),
+        "wd": stk((di, D), ("mlp", "embed")),
+    }
+    tree = {
+        "embed": ll.embed_spec(cfg),
+        "final_norm": ll.norm_spec(D, pd),
+        "mlstm": mlstm,
+    }
+    if has_s:
+        def sts(shape, axes, **kw):
+            return Spec((G,) + shape, ("layers",) + axes, pd, **kw)
+        tree["slstm"] = {
+            "ln": sts((D,), ("embed",), init="zeros"),
+            "wzifo": sts((D, 4, D), ("embed", None, "mlp")),
+            "ln_out": sts((D,), ("embed",), init="zeros"),
+            "wd": sts((D, D), ("mlp", "embed")),
+        }
+    return tree
+
+
+def _mlstm_qkv_gates(x, lp, cfg):
+    """Shared by train and decode: projections + gate logs."""
+    di, H, hd = _dims(cfg)
+    gu = jnp.einsum("bsd,dcf->bscf", x, lp["wu"].astype(x.dtype))
+    inner, z = gu[:, :, 0], gu[:, :, 1]
+    return inner, z
+
+
+def _causal_conv(x, w):
+    """Depthwise causal conv: x (B,S,C), w (K,C)."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1]] * w[i][None, None, :] for i in range(K))
+    return jax.nn.silu(out)
+
+
+def mlstm_block(x, lp, cfg: ModelConfig, state=None, chunk=256):
+    """x (B,S,D) -> (y, (S_mat, n, conv_tail)). state: (S_mat (B,H,hd,hd), n (B,H,hd))."""
+    di, H, hd = _dims(cfg)
+    B, S, D = x.shape
+    h = ll.rms_norm(x, lp["ln"], cfg.norm_eps)
+    inner, z = _mlstm_qkv_gates(h, lp, cfg)
+    cx = _causal_conv(inner, lp["conv"].astype(x.dtype))
+    cxh = cx.reshape(B, S, H, hd)
+    innh = inner.reshape(B, S, H, hd)
+    q = jnp.einsum("bshf,hfk->bhsk", cxh, lp["wq"].astype(x.dtype)) / (hd ** 0.5)
+    k = jnp.einsum("bshf,hfk->bhsk", cxh, lp["wk"].astype(x.dtype)) / (hd ** 0.5)
+    v = jnp.einsum("bshf,hfk->bhsk", innh, lp["wv"].astype(x.dtype))
+    gates = jnp.einsum("bsd,dch->bsch", h, lp["wgate"].astype(x.dtype)) \
+        + lp["gbias"].astype(x.dtype)[None, None]
+    i_log = gates[:, :, 0].transpose(0, 2, 1).astype(jnp.float32)     # (B,H,S)
+    f_log = gates[:, :, 1].transpose(0, 2, 1).astype(jnp.float32)
+    log_a = -jax.nn.softplus(-f_log)     # log sigmoid(f)
+    if state is None:
+        S0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+        n0 = jnp.zeros((B, H, hd), jnp.float32)
+    else:
+        S0, n0 = state
+    y, S_f, n_f = rec.chunked_linear_attention(
+        q, k, v, log_a, i_log, S0, n0, chunk=min(chunk, S), normalize=True)
+    y = y.transpose(0, 2, 1, 3).reshape(B, S, di)
+    y = ll.rms_norm(y, lp["ln_out"], cfg.norm_eps) * jax.nn.silu(z)
+    out = jnp.einsum("bsf,fd->bsd", y, lp["wd"].astype(x.dtype))
+    conv_tail = inner[:, -3:].astype(jnp.float32)     # K-1 = 3 for decode conv
+    return x + out, (S_f, n_f, conv_tail)
+
+
+def mlstm_decode(x, lp, cfg: ModelConfig, state):
+    """One-token decode. x (B,1,D)."""
+    di, H, hd = _dims(cfg)
+    B = x.shape[0]
+    h = ll.rms_norm(x, lp["ln"], cfg.norm_eps)
+    inner, z = _mlstm_qkv_gates(h, lp, cfg)
+    conv_state, S0, n0 = state                    # conv_state (B, K-1, di)
+    K = lp["conv"].shape[0]
+    window = jnp.concatenate([conv_state, inner], axis=1)          # (B,K,di)
+    cx = jax.nn.silu(jnp.einsum("bkf,kf->bf", window, lp["conv"].astype(x.dtype)))
+    cxh = cx.reshape(B, H, hd)
+    innh = inner[:, 0].reshape(B, H, hd)
+    q = jnp.einsum("bhf,hfk->bhk", cxh, lp["wq"].astype(x.dtype)) / (hd ** 0.5)
+    kk = jnp.einsum("bhf,hfk->bhk", cxh, lp["wk"].astype(x.dtype)) / (hd ** 0.5)
+    vv = jnp.einsum("bhf,hfk->bhk", innh, lp["wv"].astype(x.dtype))
+    gates = jnp.einsum("bd,dch->bch", h[:, 0], lp["wgate"].astype(x.dtype)) \
+        + lp["gbias"].astype(x.dtype)[None]
+    i_log = gates[:, 0].astype(jnp.float32)
+    log_a = -jax.nn.softplus(-gates[:, 1].astype(jnp.float32))
+    y, S_f, n_f = rec.recurrent_step(q, kk, vv, log_a, i_log, S0, n0, normalize=True)
+    y = y.reshape(B, 1, di).astype(x.dtype)
+    y = ll.rms_norm(y, lp["ln_out"], cfg.norm_eps) * jax.nn.silu(z)
+    out = jnp.einsum("bsf,fd->bsd", y, lp["wd"].astype(x.dtype))
+    new_conv = jnp.concatenate([conv_state[:, 1:], inner], axis=1)
+    return x + out, (new_conv, S_f, n_f)
+
+
+def slstm_block(x, lp, cfg: ModelConfig, state=None):
+    B, S, D = x.shape
+    h = ll.rms_norm(x, lp["ln"], cfg.norm_eps)
+    zifo = jnp.einsum("bsd,dcf->bscf", h, lp["wzifo"].astype(x.dtype))
+    z, i_g, f_g, o_g = (zifo[:, :, j] for j in range(4))
+    hidden, new_state = rec.slstm_scan(jnp.tanh(z), i_g, f_g, o_g, state0=state)
+    hidden = ll.rms_norm(hidden, lp["ln_out"], cfg.norm_eps)
+    return x + jnp.einsum("bsf,fd->bsd", hidden, lp["wd"].astype(x.dtype)), new_state
+
+
+def forward(params, batch, cfg: ModelConfig):
+    x = ll.embed(batch["tokens"], params["embed"], cfg.compute_dtype)
+    G, n_m = _groups(cfg)
+    has_s = "slstm" in params
+
+    def group(x, gp):
+        mp = gp["mlstm"]
+
+        def mstep(x, lp):
+            y, _ = mlstm_block(x, lp, cfg)
+            return y, None
+
+        x, _ = lax.scan(mstep, x, mp)
+        if has_s:
+            x, _ = slstm_block(x, gp["slstm"], cfg)
+        return x, None
+
+    gxs = {"mlstm": params["mlstm"]}
+    if has_s:
+        gxs["slstm"] = params["slstm"]
+    x, _ = lax.scan(group, x, gxs)
+    x = ll.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = ll.unembed(x, params["embed"]).astype(jnp.float32)
+    return logits, {"lb_loss": jnp.zeros((), jnp.float32)}
+
+
+def cache_specs(cfg: ModelConfig, batch_size: int, max_seq: int) -> dict:
+    del max_seq  # state is O(1) in sequence length
+    di, H, hd = _dims(cfg)
+    G, n_m = _groups(cfg)
+    f32 = jnp.float32
+    tree = {
+        "conv": Spec((G, n_m, batch_size, 3, di), ("layers", "layers", None, None, "mlp"), f32, init="zeros"),
+        "S": Spec((G, n_m, batch_size, H, hd, hd), ("layers", "layers", None, "heads", None, "head_dim"), f32, init="zeros"),
+        "n": Spec((G, n_m, batch_size, H, hd), ("layers", "layers", None, "heads", "head_dim"), f32, init="zeros"),
+        "pos": Spec((), (), jnp.int32, init="zeros"),
+    }
+    if cfg.xlstm_slstm_every and cfg.num_layers % cfg.xlstm_slstm_every == 0:
+        D = cfg.d_model
+        tree["slstm_c"] = Spec((G, batch_size, D), ("layers", None, "embed"), f32, init="zeros")
+        tree["slstm_n"] = Spec((G, batch_size, D), ("layers", None, "embed"), f32, init="zeros")
+    return tree
+
+
+def prefill(params, batch, cfg: ModelConfig, max_seq: int | None = None):
+    """Run the prompt, return (last-token logits, recurrent-state cache).
+    The cache is O(1) in sequence length — no KV growth (the point of the
+    long_500k cell for this family)."""
+    del max_seq
+    x = ll.embed(batch["tokens"], params["embed"], cfg.compute_dtype)
+    S = x.shape[1]
+    has_s = "slstm" in params
+
+    def group(x, gp):
+        def mstep(x, lp):
+            y, (S_f, n_f, tail) = mlstm_block(x, lp, cfg)
+            return y, {"S": S_f, "n": n_f, "conv": tail}
+
+        x, mcache = lax.scan(mstep, x, gp["mlstm"])
+        out = dict(mcache)
+        if has_s:
+            x, (c2, n2) = slstm_block(x, gp["slstm"], cfg)
+            out["slstm_c"] = c2
+            out["slstm_n"] = n2
+        return x, out
+
+    gxs = {"mlstm": params["mlstm"]}
+    if has_s:
+        gxs["slstm"] = params["slstm"]
+    x, cache = lax.scan(group, x, gxs)
+    x = ll.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = ll.unembed(x[:, -1:], params["embed"]).astype(jnp.float32)
+    cache["pos"] = jnp.asarray(S, jnp.int32)
+    return logits, cache
+
+
+def decode_step(params, cache, token, cfg: ModelConfig):
+    x = ll.embed(token, params["embed"], cfg.compute_dtype)
+    has_s = "slstm" in params
+
+    def group(x, xs):
+        gp = xs
+
+        def mstep(carry, lxs):
+            x = carry
+            lp, conv, S0, n0 = lxs["p"], lxs["conv"], lxs["S"], lxs["n"]
+            y, (conv2, S2, n2) = mlstm_decode(x, lp, cfg, (conv, S0, n0))
+            return y, {"conv": conv2, "S": S2, "n": n2}
+
+        x, mcache = lax.scan(
+            mstep, x, {"p": gp["mlstm"], "conv": gp["conv"], "S": gp["S"], "n": gp["n"]})
+        out_cache = dict(mcache)
+        if has_s:
+            y, (c2, n2) = slstm_block(x, gp["slstm"], cfg,
+                                      state=(gp["slstm_c"], gp["slstm_n"]))
+            x = y
+            out_cache["slstm_c"] = c2
+            out_cache["slstm_n"] = n2
+        return x, out_cache
+
+    gxs = {"mlstm": params["mlstm"], "conv": cache["conv"], "S": cache["S"], "n": cache["n"]}
+    if has_s:
+        gxs.update(slstm=params["slstm"], slstm_c=cache["slstm_c"], slstm_n=cache["slstm_n"])
+    x, new_cache = lax.scan(group, x, gxs)
+    x = ll.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = ll.unembed(x, params["embed"]).astype(jnp.float32)
+    out = {"conv": new_cache["conv"], "S": new_cache["S"], "n": new_cache["n"],
+           "pos": cache["pos"] + 1}
+    if has_s:
+        out["slstm_c"] = new_cache["slstm_c"]
+        out["slstm_n"] = new_cache["slstm_n"]
+    return logits, out

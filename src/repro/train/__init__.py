@@ -1,0 +1,2 @@
+# Training substrate: optimizers, train-step builders, LR schedules,
+# gradient compression, distributed-training glue.

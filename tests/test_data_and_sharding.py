@@ -1,0 +1,84 @@
+"""Data pipeline (paper §5.1 format) and sharding-rule unit tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import configs
+from repro.data import graph_file, synthetic
+from repro.models import params as pp
+from repro.models.params import Spec
+
+
+def test_topology_roundtrip(tmp_path):
+    edges, _ = synthetic.synthetic_graph(n=50, n_edges=120, k=3, seed=1)
+    path = str(tmp_path / "topo.txt")
+    graph_file.write_topology(path, 50, edges)
+    n, back = graph_file.parse_topology(path)
+    assert n == 50
+    np.testing.assert_array_equal(np.sort(back[:, :2], axis=0),
+                                  np.sort(edges[:, :2], axis=0))
+
+
+def test_adjacency_symmetric():
+    edges, _ = synthetic.synthetic_graph(n=40, n_edges=100, k=2, seed=2)
+    A = graph_file.adjacency_dense(40, edges)
+    assert np.allclose(A, A.T)
+    assert (np.diag(A) == 1).all()
+
+
+def test_lm_batches_learnable_structure():
+    it = synthetic.lm_batches(4, 16, 97, seed=0)
+    b = next(it)
+    assert b["tokens"].shape == (4, 16)
+    assert b["tokens"].dtype == np.int32
+    assert (b["tokens"] >= 0).all() and (b["tokens"] < 97).all()
+
+
+class _FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+def test_partition_spec_divisibility_and_dedupe():
+    mesh = _FakeMesh({"data": 16, "model": 16})
+    rules = {"experts": "model", "mlp": "model", "heads": "model"}
+    # dedupe: experts wins, mlp falls back to None
+    s = Spec((384, 512, 1024), ("experts", "embed", "mlp"))
+    assert pp.partition_spec(s, rules, mesh) == P("model", None, None)
+    # divisibility: 14 heads don't divide 16
+    s2 = Spec((14, 64), ("heads", "head_dim"))
+    assert pp.partition_spec(s2, rules, mesh) == P(None, None)
+    s3 = Spec((32, 64), ("heads", "head_dim"))
+    assert pp.partition_spec(s3, rules, mesh) == P("model", None)
+
+
+@pytest.mark.parametrize("arch", configs.ARCHS)
+def test_input_specs_cover_all_supported_cells(arch):
+    from repro.configs import specs as cfg_specs
+    from repro.models.config import SHAPES_BY_NAME
+    cfg = configs.get(arch)
+    for shape, cell in SHAPES_BY_NAME.items():
+        if not configs.cell_supported(arch, shape):
+            continue
+        spec = cfg_specs.input_specs(cfg, cell)
+        if cell.kind in ("train", "prefill"):
+            assert spec["tokens"].shape == (cell.global_batch, cell.seq_len)
+            if cfg.frontend == "embed":
+                assert spec["embeds"].shape == (
+                    cell.global_batch, cell.seq_len, cfg.d_model)
+        else:
+            assert spec["token"].shape == (cell.global_batch, 1)
+
+
+def test_long_context_skips_match_design():
+    assert not configs.cell_supported("glm4-9b", "long_500k")
+    assert not configs.cell_supported("seamless-m4t-medium", "long_500k")
+    assert configs.cell_supported("xlstm-1.3b", "long_500k")
+    assert configs.cell_supported("zamba2-2.7b", "long_500k")
+    assert configs.cell_supported("gemma3-1b", "long_500k")
+    assert configs.cell_supported("mixtral-8x7b", "long_500k")
+    for a in configs.ARCHS:
+        assert configs.cell_supported(a, "train_4k")

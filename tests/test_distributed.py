@@ -1,0 +1,250 @@
+"""Multi-device behaviour (subprocess with fake XLA devices): the
+distributed similarity schedule, sym_matvec, k-means MapReduce, and the
+full pipeline must match the dense oracle bit-for-bit-ish on 4/8 devices."""
+import pytest
+
+
+def test_triangular_similarity_4dev(subproc):
+    out = subproc("""
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import similarity as sim, spectral
+from repro.distrib import mesh_utils
+rng = np.random.RandomState(0)
+pts = np.concatenate([rng.randn(37,2)*0.2 + c for c in [(0,0),(5,5),(0,6)]]).astype(np.float32)
+mesh = mesh_utils.local_mesh("rows")
+assert mesh_utils.mesh_size(mesh) == 4
+up = sim.similarity_upper_blocks(jnp.asarray(pts), 1.0, mesh)
+S_dense = sim.dense_similarity(jnp.asarray(pts), 1.0)
+sched = up.schedule
+S_back = np.asarray(sim.materialize(up))[np.ix_(sched.inv_perm, sched.inv_perm)][:111,:111]
+assert np.abs(S_back - np.asarray(S_dense)).max() < 1e-4
+v = rng.randn(sched.n_pad).astype(np.float32)
+got = np.asarray(sim.sym_matvec(up, jnp.asarray(v)))[sched.inv_perm][:111]
+ref = np.asarray(S_dense) @ v[sched.inv_perm][:111]
+assert np.abs(got - ref).max() < 1e-3
+Sf = np.asarray(sim.distributed_similarity_full(jnp.asarray(pts), 1.0, mesh))[:111,:111]
+assert np.abs(Sf - np.asarray(S_dense)).max() < 1e-4
+print("OK")
+""", n_devices=4)
+    assert "OK" in out
+
+
+def test_full_pipeline_8dev_matches_truth(subproc):
+    out = subproc("""
+import numpy as np, jax, jax.numpy as jnp
+from itertools import permutations
+from repro.core import spectral
+from repro.data import synthetic
+from repro.distrib import mesh_utils
+pts, truth = synthetic.blobs(200, 3, seed=1)
+mesh = mesh_utils.local_mesh("rows")
+assert mesh_utils.mesh_size(mesh) == 8
+for mode in ("triangular", "full"):
+    cfg = spectral.SpectralConfig(k=3, sigma=1.0, lanczos_steps=40, mode=mode)
+    res = spectral.fit(jnp.asarray(pts), cfg, mesh)
+    labels = np.asarray(res.labels)
+    acc = max(np.mean(np.array([p[t] for t in truth]) == labels) for p in permutations(range(3)))
+    assert acc > 0.99, (mode, acc)
+    ev = np.asarray(res.eigenvalues)
+    assert (ev > -1e-3).all() and (ev < 0.5).all(), ev
+print("OK")
+""", n_devices=8)
+    assert "OK" in out
+
+
+def test_compact_triangular_layout_4dev(subproc):
+    """Perf-iteration S1 storage: compact tiles reproduce the wide-layout
+    symmetric mat-vec exactly."""
+    out = subproc("""
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import similarity as sim
+from repro.distrib import mesh_utils
+rng = np.random.RandomState(0)
+pts = rng.randn(111, 3).astype(np.float32)
+mesh = mesh_utils.local_mesh("rows")
+upc = sim.similarity_upper_blocks_compact(jnp.asarray(pts), 1.0, mesh)
+up = sim.similarity_upper_blocks(jnp.asarray(pts), 1.0, mesh)
+v = jnp.asarray(rng.randn(upc.schedule.n_pad).astype(np.float32))
+a = sim.sym_matvec_compact(upc, v)
+b = sim.sym_matvec(up, v)
+assert float(jnp.abs(a - b).max()) < 1e-4
+print("OK")
+""", n_devices=4)
+    assert "OK" in out
+
+
+def test_distributed_kmeans_equals_single(subproc):
+    out = subproc("""
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import kmeans as km
+from repro.distrib import mesh_utils
+mesh = mesh_utils.local_mesh("rows")
+y = jax.random.normal(jax.random.PRNGKey(0), (96, 4))
+valid = jnp.ones((96,))
+c0 = km.kmeans_plusplus_init(y, 4, jax.random.PRNGKey(1))
+st_d = km.KMeansState(it=jnp.zeros((), jnp.int32), centers=c0, shift=jnp.asarray(jnp.inf))
+st_s = st_d
+for _ in range(5):
+    st_d = km.distributed_lloyd_step(y, valid, st_d, mesh)
+    st_s = km.lloyd_step(y, valid, st_s)
+assert np.abs(np.asarray(st_d.centers) - np.asarray(st_s.centers)).max() < 1e-4
+print("OK")
+""", n_devices=4)
+    assert "OK" in out
+
+
+def test_compressed_dp_training_4dev(subproc):
+    """int8+EF compressed DP step trains (loss decreases) on 4 devices."""
+    out = subproc("""
+import numpy as np, jax, jax.numpy as jnp
+from repro.models.config import ModelConfig
+from repro.models import api
+from repro.train import optimizer as opt_lib
+from repro.train.step import make_compressed_train_step, init_ef_state
+from repro.distrib import mesh_utils
+from repro.data import synthetic
+cfg = ModelConfig(name="t", family="dense", num_layers=2, d_model=64, num_heads=4,
+                  num_kv_heads=4, d_ff=128, vocab_size=64, compute_dtype=jnp.float32)
+model = api.build(cfg)
+mesh = mesh_utils.make_mesh((4,), ("data",))
+optz = opt_lib.adamw()
+params = model.init(jax.random.PRNGKey(0))
+opt_state = optz.init(params)
+ef = init_ef_state(params)
+step = make_compressed_train_step(model, optz, mesh,
+                                  lr_fn=lambda c: 1e-2, axis="data")
+data = synthetic.lm_batches(8, 32, 64, seed=0)
+losses = []
+for i in range(30):
+    b = {k: jnp.asarray(v) for k, v in next(data).items()}
+    params, opt_state, ef, loss = step(params, opt_state, ef, b)
+    losses.append(float(loss))
+assert losses[-1] < losses[0] - 0.5, losses
+print("OK", losses[0], losses[-1])
+""", n_devices=4)
+    assert "OK" in out
+
+
+def test_moe_ep_shard_map_matches_gather_8dev(subproc):
+    """Explicit EP (B1 in EXPERIMENTS §Perf) is bit-exact vs the GSPMD
+    gather path at drop-free capacity."""
+    out = subproc("""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import AxisType
+from repro.models import moe as moe_lib
+from repro.models import params as pp
+from repro import configs
+from repro.distrib import act_sharding
+cfg = configs.get_smoke("kimi-k2-1t-a32b").with_(capacity_factor=8.0,
+                                                 compute_dtype=jnp.float32,
+                                                 moe_impl="gather")
+spec = moe_lib.moe_specs(cfg)
+p = pp.init_params(spec, jax.random.PRNGKey(0))
+x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, cfg.d_model), jnp.float32)
+out_ref, _ = moe_lib.moe_ffn(x, p, cfg)
+mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+cfg2 = cfg.with_(moe_impl="ep_shard_map")
+with act_sharding.use_mesh(mesh):
+    out_ep, _ = jax.jit(lambda x, p: moe_lib.moe_ffn(x, p, cfg2))(x, p)
+assert float(jnp.abs(out_ep - out_ref).max()) < 1e-5
+print("OK")
+""", n_devices=8)
+    assert "OK" in out
+
+
+def test_sp_serve_preset_matches_default_8dev(subproc):
+    """Sequence-parallel serving (A1 in EXPERIMENTS §Perf) returns the
+    same prefill logits as the default sharding."""
+    out = subproc("""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import AxisType
+from repro import configs
+from repro.distrib import act_sharding
+from repro.models import api
+cfg = configs.get_smoke("minitron-4b").with_(compute_dtype=jnp.float32,
+                                             dense_attn_max_seq=8, attn_chunk=16)
+m = api.build(cfg)
+params = m.init(jax.random.PRNGKey(0))
+toks = jax.random.randint(jax.random.PRNGKey(1), (2, 64), 0, cfg.vocab_size)
+lg_ref, _ = m.prefill(params, {"tokens": toks})
+mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+cfg_sp = cfg.with_(sharding_preset="sp_serve")
+m_sp = api.build(cfg_sp)
+with act_sharding.use_mesh(mesh):
+    lg_sp, _ = jax.jit(lambda p, b: m_sp.prefill(p, b))(params, {"tokens": toks})
+err = float(jnp.abs(lg_sp - lg_ref).max())
+assert err < 1e-3, err
+print("OK", err)
+""", n_devices=8)
+    assert "OK" in out
+
+
+def test_elastic_checkpoint_restore_1_to_4_devices(subproc, tmp_path):
+    """Fault tolerance + elasticity: a checkpoint written on 1 device
+    restores onto a 4-device mesh with resharded placement and identical
+    values (the restart-on-different-world-size path)."""
+    ckpt = str(tmp_path)
+    out1 = subproc(f"""
+import jax, jax.numpy as jnp
+from repro.checkpoint import CheckpointManager
+mgr = CheckpointManager({ckpt!r}, async_write=False)
+tree = {{"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8),
+         "count": jnp.asarray(5)}}
+mgr.save(5, tree)
+print("SAVED", len(jax.devices()))
+""", n_devices=1)
+    assert "SAVED 1" in out1
+    out4 = subproc(f"""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+from repro.checkpoint import CheckpointManager
+mesh = jax.make_mesh((4,), ("data",), axis_types=(AxisType.Auto,))
+shardings = {{"w": NamedSharding(mesh, P("data", None)),
+              "count": NamedSharding(mesh, P())}}
+tmpl = {{"w": jnp.zeros((8, 8)), "count": jnp.asarray(0)}}
+mgr = CheckpointManager({ckpt!r})
+out = mgr.restore(tmpl, shardings=shardings)
+assert int(out["count"]) == 5
+np.testing.assert_array_equal(np.asarray(out["w"]),
+                              np.arange(64, dtype=np.float32).reshape(8, 8))
+assert len(out["w"].sharding.device_set) == 4
+print("RESTORED", len(jax.devices()))
+""", n_devices=4)
+    assert "RESTORED 4" in out4
+
+
+def test_mini_dryrun_8dev(subproc):
+    """A reduced-mesh dry-run of one LM cell + spectral lanczos lowers,
+    compiles and produces roofline terms on an 8-device mesh."""
+    out = subproc("""
+import jax, jax.numpy as jnp
+from jax.sharding import AxisType
+from repro import configs
+from repro.configs import specs as cfg_specs
+from repro.distrib import hlo_analysis, sharding
+from repro.models import api, params as pp
+from repro.models.config import ShapeCell
+from repro.train import optimizer as opt_lib
+from repro.train.step import make_train_step
+
+cfg = configs.get_smoke("mixtral-8x7b")
+model = api.build(cfg)
+mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+cell = ShapeCell("mini", "train", 64, 8)
+p_shard = sharding.param_shardings(cfg, model.spec, mesh)
+batch = cfg_specs.input_specs(cfg, cell)
+b_shard = sharding.input_shardings(mesh, batch)
+optz = opt_lib.get(cfg.optimizer)
+o_spec = optz.init_spec(model.spec)
+o_shard = sharding.opt_shardings(cfg, o_spec, mesh)
+step = make_train_step(model, optz)
+lowered = jax.jit(step, in_shardings=(p_shard, o_shard, b_shard),
+                  out_shardings=(p_shard, o_shard, None)).lower(
+    model.abstract_params(), pp.abstract_params(o_spec), batch)
+compiled = lowered.compile()
+r = hlo_analysis.analyze(compiled.as_text())
+assert r["flops"] > 0 and r["bytes"] > 0
+assert compiled.memory_analysis() is not None
+print("OK flops=%.2e coll=%d" % (r["flops"], r["collective_total"]))
+""", n_devices=8)
+    assert "OK" in out

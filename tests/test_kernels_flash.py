@@ -1,0 +1,63 @@
+"""Flash-attention Pallas kernel vs oracle: shape/dtype/mask sweeps in
+interpret mode (CPU), including the tile-skip bounds (causal + window)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+
+
+def _qkv(B, H, S, T, hd, dtype, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (B, H, S, hd), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (B, H, T, hd), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (B, H, T, hd), jnp.float32).astype(dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("S,T,bq,bk", [(128, 128, 32, 32), (256, 256, 64, 32),
+                                       (64, 256, 32, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_causal(S, T, bq, bk, dtype):
+    q, k, v = _qkv(2, 3, S, T, 32, dtype)
+    out = flash_attention(q, k, v, causal=True, bq=bq, bk=bk, interpret=True)
+    want = ref.flash_attention(q, k, v, causal=True)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("window", [16, 64])
+def test_flash_local_window(window):
+    """Window masking + the lo-bound tile skip agree with the oracle."""
+    q, k, v = _qkv(1, 2, 128, 128, 16, jnp.float32, seed=1)
+    out = flash_attention(q, k, v, causal=True, window=window, bq=32, bk=32,
+                          interpret=True)
+    want = ref.flash_attention(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=3e-5,
+                               rtol=3e-5)
+
+
+def test_flash_noncausal():
+    q, k, v = _qkv(1, 1, 64, 128, 16, jnp.float32, seed=2)
+    out = flash_attention(q, k, v, causal=False, bq=32, bk=32, interpret=True)
+    want = ref.flash_attention(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=3e-5,
+                               rtol=3e-5)
+
+
+def test_flash_tile_skip_counts():
+    """Causal hi-bound: last q block visits all kv tiles, first visits one."""
+    # structural check via output equality at block granularity is covered
+    # above; here assert the bounds arithmetic used by the kernel
+    bq = bk = 32
+    S = 128
+    for qi in range(S // bq):
+        hi = (qi * bq + bq + bk - 1) // bk
+        assert hi == qi + 1
+    window = 64
+    for qi in range(S // bq):
+        lo = max(0, (qi * bq - window + 1)) // bk
+        assert lo <= qi
