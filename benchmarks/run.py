@@ -13,6 +13,7 @@ Prints ``name,us_per_call,derived`` CSV rows.
                     critical-machine-count plateau.
   rings_quality     paper §3.1 claim: spectral vs k-means on non-convex data.
   lanczos_residual  eigensolver quality vs iteration count.
+  assigner_backends registry assigners: full Lloyd vs mini-batch rounds.
   kernels           Pallas kernel wrappers (interpret) vs jnp oracle.
 """
 from __future__ import annotations
@@ -23,11 +24,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.cluster import SpectralClustering
 from repro.core import kmeans as km
 from repro.core import lanczos as lz
 from repro.core import laplacian as lp
 from repro.core import similarity as sim
-from repro.core import spectral
 from repro.data import synthetic
 
 ROWS: list[tuple[str, float, str]] = []
@@ -103,11 +104,12 @@ def fig5_speedup():
 
 def rings_quality(n: int = 400):
     pts, truth = synthetic.rings(n, 2, seed=0)
-    cfg = spectral.SpectralConfig(k=2, sigma=0.25, lanczos_steps=48)
+    est = SpectralClustering(k=2, affinity="dense", eigensolver="eigh",
+                             sigma=0.25, lanczos_steps=48)
     t0 = time.perf_counter()
-    res = spectral.fit_dense(jnp.asarray(pts), cfg)
+    est.fit(jnp.asarray(pts))
     us = (time.perf_counter() - t0) * 1e6
-    labels = np.asarray(res.labels)
+    labels = np.asarray(est.labels_)
     acc_s = max(np.mean(labels == truth), np.mean(labels == 1 - truth))
     kl, _ = km.kmeans(jnp.asarray(pts), 2, jax.random.PRNGKey(0))
     kl = np.asarray(kl)
@@ -127,6 +129,29 @@ def lanczos_residual(n: int = 512):
         us = (time.perf_counter() - t0) * 1e6
         res = float(jnp.max(lz.residuals(mv, vals, vecs, shift=2.0)))
         row(f"lanczos/steps{steps}", us, f"max_residual={res:.2e}")
+
+
+def assigner_backends(n: int = 8192, k: int = 8):
+    """Registry assigners on one embedding: full Lloyd vs mini-batch.
+
+    Mini-batch touches ``batch`` points per round instead of ``n`` — the
+    large-n phase-3 backend of the estimator API."""
+    y = jax.random.normal(jax.random.PRNGKey(0), (n, k))
+    valid = jnp.ones((n,))
+    key = jax.random.PRNGKey(1)
+    c0 = km.kmeans_plusplus_init(y, k, key)
+
+    lloyd = jax.jit(lambda y, c: km.lloyd_step(
+        y, jnp.ones((y.shape[0],)), km.KMeansState(
+            it=jnp.zeros((), jnp.int32), centers=c,
+            shift=jnp.asarray(jnp.inf))).centers)
+    us_l, _ = _timeit(lloyd, y, c0)
+    row("assigner/lloyd_round", us_l, f"n={n}")
+
+    mb = jax.jit(lambda y, v, c: km.minibatch_kmeans(
+        y, v, k, jax.random.PRNGKey(2), iters=1, batch=256, centers0=c)[1])
+    us_m, _ = _timeit(mb, y, valid, c0)
+    row("assigner/minibatch_round", us_m, f"batch=256 speedup={us_l / us_m:.1f}x")
 
 
 def kernels():
@@ -160,6 +185,7 @@ def main() -> None:
     fig5_speedup()
     rings_quality()
     lanczos_residual()
+    assigner_backends()
     kernels()
     print(f"# {len(ROWS)} rows")
 

@@ -14,8 +14,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
-from repro.core import SpectralConfig
-from repro.core.spectral import fit_from_similarity
+from repro.cluster import SpectralClustering
 from repro.models import api
 from repro.models import moe as moe_lib
 
@@ -48,9 +47,10 @@ def main():
     co = co / co.max()
 
     n_groups = 4  # devices holding experts
-    res = fit_from_similarity(jnp.asarray(co, jnp.float32),
-                              SpectralConfig(k=n_groups, lanczos_steps=12))
-    placement = np.asarray(res.labels)
+    est = SpectralClustering(k=n_groups, affinity="precomputed",
+                             lanczos_steps=12)
+    est.fit(jnp.asarray(co, jnp.float32))
+    placement = np.asarray(est.labels_)
     sizes = np.bincount(placement, minlength=n_groups)
 
     # traffic model: co-activation mass cut by the placement

@@ -1,27 +1,35 @@
 """Quickstart: the paper end to end in ~30 lines.
 
 Clusters two concentric rings — the non-convex case where plain k-means
-fails and spectral clustering succeeds (paper §3.1) — with the distributed
-pipeline (similarity -> Lanczos -> k-means) on every local device.
+fails and spectral clustering succeeds (paper §3.1) — with the unified
+estimator API: one ``SpectralClustering`` whose three phases (affinity,
+eigensolver, assigner) are pluggable registry backends, distributed over
+every local device.
 
     PYTHONPATH=src python examples/quickstart.py
+
+Migrating from the deprecated ``repro.core.spectral.fit(x, cfg)``: build a
+``SpectralClustering`` with the same knobs (``mode="triangular"`` is
+``affinity="triangular"``, ``mode="full"`` is ``affinity="dense"``) and read
+``labels_`` / ``eigenvalues_`` off the fitted estimator.  See API.md.
 """
+import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import SpectralConfig, fit
+from repro.cluster import SpectralClustering
 from repro.core.kmeans import kmeans
 from repro.data import rings
-
-import jax
 
 
 def main():
     pts, truth = rings(512, k=2, seed=0)
-    cfg = SpectralConfig(k=2, sigma=0.25, lanczos_steps=48)
-    res = fit(jnp.asarray(pts), cfg)
+    est = SpectralClustering(k=2, affinity="triangular",
+                             eigensolver="lanczos", assigner="lloyd",
+                             sigma=0.25, lanczos_steps=48)
+    est.fit(jnp.asarray(pts))
 
-    labels = np.asarray(res.labels)
+    labels = np.asarray(est.labels_)
     acc_spectral = max(np.mean(labels == truth), np.mean(labels == 1 - truth))
 
     km_labels, _ = kmeans(jnp.asarray(pts), 2, jax.random.PRNGKey(0))
@@ -29,7 +37,7 @@ def main():
     acc_kmeans = max(np.mean(km_labels == truth), np.mean(km_labels == 1 - truth))
 
     print(f"devices: {len(jax.devices())}")
-    print(f"smallest eigenvalues of L_sym: {np.asarray(res.eigenvalues)}")
+    print(f"smallest eigenvalues of L_sym: {np.asarray(est.eigenvalues_)}")
     print(f"spectral clustering accuracy: {acc_spectral:.3f}   (rings)")
     print(f"plain k-means accuracy:       {acc_kmeans:.3f}   (fails on rings)")
     assert acc_spectral > 0.95, "spectral clustering should separate the rings"

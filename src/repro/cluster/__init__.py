@@ -1,0 +1,20 @@
+# Unified pluggable estimator API for the paper's pipeline: one
+# SpectralClustering entry point, three backend registries (affinity,
+# eigensolver, assigner) meeting at the NormalizedOperator interface.
+# See API.md at the repo root for the backend protocols.
+from repro.cluster.affinity import AFFINITIES
+from repro.cluster.assigners import ASSIGNERS
+from repro.cluster.eigensolvers import EIGENSOLVERS
+from repro.cluster.estimator import SpectralClustering
+from repro.cluster.operator import NormalizedOperator, SpectralResult
+from repro.cluster.registry import Registry
+
+__all__ = [
+    "AFFINITIES",
+    "ASSIGNERS",
+    "EIGENSOLVERS",
+    "NormalizedOperator",
+    "Registry",
+    "SpectralClustering",
+    "SpectralResult",
+]

@@ -1,0 +1,133 @@
+"""Affinity backends: phase 1 of the pipeline as pluggable strategies.
+
+Every backend has the signature
+
+    backend(est, x, sigma, mesh) -> NormalizedOperator
+
+where ``est`` is the :class:`~repro.cluster.SpectralClustering` estimator
+(carrying k, sparsify_t, dtype, ...), ``x`` is (n, d) points — or, for
+``precomputed``, the (n, n) similarity matrix itself — and ``sigma`` the RBF
+bandwidth (ignored by ``precomputed``).
+
+Backends:
+  dense       full row-block similarity (beyond-paper "full" mode): every
+              device computes its whole row block; 2x pair-FLOPs, zero
+              mirror communication.
+  triangular  the paper's balanced upper-triangle block schedule (Alg. 4.2),
+              wide row-block storage.
+  compact     same schedule, compact per-device tile stacks (perf S1).
+  precomputed caller supplies S directly (paper §5 topology graphs).
+  knn-topt    dense similarity then top-t row sparsification lifted into the
+              distributed path (paper step 1 "and then sparse it"), keeping
+              the graph symmetric via max(S, S^T).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import laplacian as lp
+from repro.core import similarity as sim
+from repro.cluster.operator import NormalizedOperator
+from repro.cluster.registry import Registry
+from repro.distrib import mesh_utils
+
+AFFINITIES = Registry("affinity")
+
+
+def _row_constraint(A: jax.Array, mesh) -> jax.Array:
+    axes = mesh_utils.flat_axes(mesh)
+    return jax.lax.with_sharding_constraint(
+        A, NamedSharding(mesh, P(axes, *([None] * (A.ndim - 1)))))
+
+
+def operator_from_dense(S: jax.Array, n: int, mesh) -> NormalizedOperator:
+    """Shared tail for every dense-S backend: pad, row-shard, build the
+    shifted operator via :func:`laplacian.make_dense_operator`."""
+    m = mesh_utils.mesh_size(mesh)
+    n_pad = mesh_utils.pad_to_multiple(n, m)
+    if n_pad != int(S.shape[0]):
+        S = jnp.zeros((n_pad, n_pad), S.dtype).at[:n, :n].set(S[:n, :n])
+    S = _row_constraint(S, mesh)
+    valid = (jnp.arange(n_pad) < n).astype(S.dtype)
+    matvec, inv_sqrt = lp.make_dense_operator(S, valid)
+    return NormalizedOperator(
+        matvec=matvec, valid=valid, inv_sqrt=inv_sqrt, n=n, n_pad=n_pad,
+        mesh=mesh, schedule=None,
+        dense=lambda: lp.dense_shifted_matrix(S, valid))
+
+
+@AFFINITIES.register("dense")
+def dense_affinity(est, x, sigma, mesh) -> NormalizedOperator:
+    """Full row-block RBF similarity (the old ``mode="full"`` path)."""
+    S = sim.distributed_similarity_full(x, sigma, mesh)  # already padded
+    return operator_from_dense(S, int(x.shape[0]), mesh)
+
+
+@AFFINITIES.register("triangular")
+def triangular_affinity(est, x, sigma, mesh) -> NormalizedOperator:
+    """Paper-faithful balanced triangular schedule, wide storage."""
+    upper = sim.similarity_upper_blocks(x, sigma, mesh)
+    deg = lp.degrees(upper)
+    matvec = lp.make_shifted_operator(upper, deg)
+    return NormalizedOperator(
+        matvec=matvec, valid=upper.diag, inv_sqrt=lp.masked_inv_sqrt(deg),
+        n=upper.schedule.n, n_pad=upper.schedule.n_pad, mesh=mesh,
+        schedule=upper.schedule,
+        dense=lambda: lp.dense_shifted_matrix(sim.materialize(upper),
+                                              upper.diag))
+
+
+@AFFINITIES.register("compact")
+def compact_affinity(est, x, sigma, mesh) -> NormalizedOperator:
+    """Triangular schedule with compact per-device tile stacks."""
+    upper = sim.similarity_upper_blocks_compact(x, sigma, mesh)
+    deg = sim.sym_matvec_compact(upper, upper.diag)
+    inv_sqrt = lp.masked_inv_sqrt(deg)
+    valid = upper.diag
+
+    def matvec(v: jax.Array) -> jax.Array:
+        return valid * v + inv_sqrt * sim.sym_matvec_compact(
+            upper, inv_sqrt * v)
+
+    return NormalizedOperator(
+        matvec=matvec, valid=valid, inv_sqrt=inv_sqrt,
+        n=upper.schedule.n, n_pad=upper.schedule.n_pad, mesh=mesh,
+        schedule=upper.schedule,
+        dense=lambda: lp.dense_shifted_matrix(sim.materialize_compact(upper),
+                                              valid))
+
+
+@AFFINITIES.register("precomputed")
+def precomputed_affinity(est, S, sigma, mesh) -> NormalizedOperator:
+    """Caller-supplied symmetric non-negative similarity/adjacency matrix."""
+    S = jnp.asarray(S, est.dtype)
+    if S.ndim != 2 or S.shape[0] != S.shape[1]:
+        raise ValueError(
+            f"precomputed affinity expects a square (n, n) similarity "
+            f"matrix, got shape {tuple(S.shape)}")
+    return operator_from_dense(S, int(S.shape[0]), mesh)
+
+
+@AFFINITIES.register("knn-topt")
+def knn_topt_affinity(est, x, sigma, mesh) -> NormalizedOperator:
+    """Top-t sparsified RBF graph in the distributed path.
+
+    Rows are sharded, so the per-row top-t threshold is a purely local
+    sort; the max(S, S^T) symmetrization is the one transpose (GSPMD
+    all-to-all — the Hadoop shuffle analogue).  On a single-device mesh the
+    pair computation reuses the Pallas ``rbf_similarity`` kernel.
+    """
+    n = int(x.shape[0])
+    t = est.sparsify_t or max(est.k + 2, 10)
+    if mesh_utils.mesh_size(mesh) == 1:
+        from repro.kernels import ops as kops
+        S = kops.rbf_similarity(x, x, sigma)
+        S = jnp.asarray(S, est.dtype)
+    else:
+        S = sim.distributed_similarity_full(x, sigma, mesh)
+    # per-row threshold is local to a device (rows are sharded); the
+    # max(S, S^T) symmetrization inside sparsify_topt is the one transpose
+    St = sim.sparsify_topt(S, int(min(t, n)))
+    return operator_from_dense(St, n, mesh)

@@ -1,0 +1,38 @@
+"""Assigner backends: phase 3 (k-means on the spectral embedding) as
+pluggable strategies.
+
+Signature:
+
+    backend(est, Y, valid, key, mesh) -> (labels_pad, centers)
+
+``Y`` is the row-normalized (n_pad, k) embedding, row-sharded over the
+mesh and still in the affinity backend's row order; ``labels_pad`` must
+match that order (the estimator unpermutes).
+
+Backends:
+  lloyd      full distributed Lloyd (paper §4.3.3 MapReduce rounds).
+  minibatch  Sculley-style mini-batch Lloyd — O(batch) per round instead
+             of O(n); the large-n assigner.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import kmeans as km
+from repro.cluster.registry import Registry
+
+ASSIGNERS = Registry("assigner")
+
+
+@ASSIGNERS.register("lloyd")
+def lloyd_assigner(est, Y, valid, key, mesh):
+    labels_pad, state = km.distributed_kmeans(
+        Y, valid, est.k, key, mesh, iters=est.kmeans_iters)
+    return labels_pad, state.centers
+
+
+@ASSIGNERS.register("minibatch")
+def minibatch_assigner(est, Y, valid, key, mesh):
+    return km.minibatch_kmeans(jnp.asarray(Y), valid, est.k, key,
+                               iters=est.kmeans_iters,
+                               batch=est.minibatch_size)

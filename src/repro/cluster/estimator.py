@@ -1,0 +1,195 @@
+"""The unified estimator: one entry point, three pluggable phases.
+
+    est = SpectralClustering(k=3, affinity="triangular",
+                             eigensolver="lanczos", assigner="lloyd")
+    est.fit(x)                 # points (n, d)
+    est.labels_                # (n,) cluster ids, original point order
+    est.predict(x_new)         # nearest-center assignment of new points
+                               # in embedding space (Nystrom extension)
+
+``fit`` runs the paper's three phases — similarity, eigendecomposition,
+k-means — each selected by a registry string; any affinity composes with
+any eigensolver and any assigner because they meet at the
+:class:`~repro.cluster.operator.NormalizedOperator` interface.
+
+RNG discipline matches the legacy ``spectral.fit`` exactly (one PRNGKey
+split three ways), so ``SpectralClustering(affinity="triangular",
+eigensolver="lanczos", assigner="lloyd").fit(x)`` reproduces the old
+pipeline bit-for-bit.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import kmeans as km
+from repro.core import laplacian as lp
+from repro.core import similarity as sim
+from repro.cluster.affinity import AFFINITIES
+from repro.cluster.assigners import ASSIGNERS
+from repro.cluster.eigensolvers import EIGENSOLVERS
+from repro.cluster.operator import SpectralResult
+from repro.distrib import mesh_utils
+
+
+class SpectralClustering:
+    """Parallel spectral clustering with pluggable phase backends.
+
+    Parameters
+    ----------
+    k:              number of clusters (and embedding dimensions).
+    affinity:       name in :data:`~repro.cluster.AFFINITIES`
+                    ("dense" | "triangular" | "compact" | "precomputed"
+                    | "knn-topt").  With "precomputed", ``fit(S)`` treats
+                    its argument as the (n, n) similarity matrix.
+    eigensolver:    name in :data:`~repro.cluster.EIGENSOLVERS`
+                    ("lanczos" | "eigh").
+    assigner:       name in :data:`~repro.cluster.ASSIGNERS`
+                    ("lloyd" | "minibatch").
+    sigma:          RBF bandwidth; None = median heuristic.
+    lanczos_steps:  None = max(4k, 32), capped below n.
+    sparsify_t:     top-t per row for the "knn-topt" affinity
+                    (None = max(k + 2, 10)).
+    mesh:           device mesh; None = all local devices.
+
+    Fitted attributes (original point order): ``labels_``, ``embedding_``,
+    ``eigenvalues_``, ``centers_``, ``sigma_``, ``info_``, ``result_``.
+    """
+
+    def __init__(self, k: int = 8, *, affinity: str = "triangular",
+                 eigensolver: str = "lanczos", assigner: str = "lloyd",
+                 sigma: float | None = None, lanczos_steps: int | None = None,
+                 kmeans_iters: int = 50, sparsify_t: int | None = None,
+                 minibatch_size: int = 256, seed: int = 0,
+                 dtype: Any = jnp.float32, mesh: Optional[Mesh] = None):
+        # Resolve backends eagerly so a typo fails at construction, not
+        # after an expensive similarity phase.
+        self._affinity_fn = AFFINITIES.get(affinity)
+        self._eigensolver_fn = EIGENSOLVERS.get(eigensolver)
+        self._assigner_fn = ASSIGNERS.get(assigner)
+        self.k = k
+        self.affinity = affinity
+        self.eigensolver = eigensolver
+        self.assigner = assigner
+        self.sigma = sigma
+        self.lanczos_steps = lanczos_steps
+        self.kmeans_iters = kmeans_iters
+        self.sparsify_t = sparsify_t
+        self.minibatch_size = minibatch_size
+        self.seed = seed
+        self.dtype = dtype
+        self.mesh = mesh
+        self.result_: SpectralResult | None = None
+
+    # -- configuration helpers ------------------------------------------------
+
+    def num_lanczos_steps(self, n: int) -> int:
+        m = self.lanczos_steps or max(4 * self.k, 32)
+        return int(min(m, n - 1))
+
+    def _mesh(self) -> Mesh:
+        return self.mesh or mesh_utils.local_mesh("rows")
+
+    # -- fitting --------------------------------------------------------------
+
+    def fit(self, x: jax.Array, checkpointer: Any = None) -> "SpectralClustering":
+        """Cluster points (n, d) — or, with ``affinity="precomputed"``, a
+        similarity matrix (n, n).  Returns ``self``."""
+        if self.affinity == "precomputed":
+            return self.fit_affinity(x, checkpointer=checkpointer)
+        mesh = self._mesh()
+        x = jnp.asarray(x, self.dtype)
+        key = jax.random.PRNGKey(self.seed)
+        _k_eig, k_lan, k_km = jax.random.split(key, 3)
+        sigma = jnp.asarray(self.sigma, self.dtype) if self.sigma is not None \
+            else sim.median_sigma(x)
+        op = self._affinity_fn(self, x, sigma, mesh)
+        if checkpointer is not None:
+            checkpointer.save_phase("similarity", {"sigma": sigma})
+        self._finish(op, sigma, k_lan, k_km, mesh, checkpointer, train_x=x,
+                     affinity_used=self.affinity)
+        return self
+
+    def fit_affinity(self, S: jax.Array,
+                     checkpointer: Any = None) -> "SpectralClustering":
+        """Cluster from a precomputed (n, n) similarity/adjacency matrix
+        (the paper's §5 graph dataset), regardless of ``self.affinity``."""
+        mesh = self._mesh()
+        key = jax.random.PRNGKey(self.seed)
+        _k_eig, k_lan, k_km = jax.random.split(key, 3)
+        op = AFFINITIES.get("precomputed")(self, S, None, mesh)
+        self._finish(op, jnp.asarray(0.0, self.dtype), k_lan, k_km, mesh,
+                     checkpointer, train_x=None, affinity_used="precomputed")
+        return self
+
+    def fit_predict(self, x: jax.Array) -> jax.Array:
+        return self.fit(x).labels_
+
+    def _finish(self, op, sigma, k_lan, k_km, mesh, checkpointer, train_x,
+                affinity_used):
+        evals, Z, info = self._eigensolver_fn(self, op, k_lan)
+        if checkpointer is not None:
+            checkpointer.save_phase("eigen", {"eigenvalues": evals})
+        Y = km.normalize_rows(Z) * op.valid[:, None]
+        Y = jax.lax.with_sharding_constraint(
+            Y, NamedSharding(mesh, P(mesh_utils.flat_axes(mesh), None)))
+        labels_pad, centers = self._assigner_fn(self, Y, op.valid, k_km, mesh)
+        if checkpointer is not None:
+            checkpointer.save_phase("kmeans", {"centers": centers})
+
+        self.labels_ = op.unpermute(labels_pad)
+        self.embedding_ = op.unpermute(Y)
+        self.eigenvalues_ = evals
+        self.centers_ = centers
+        self.sigma_ = sigma
+        self.info_ = dict(info, affinity=affinity_used,
+                          eigensolver=self.eigensolver,
+                          assigner=self.assigner, n_pad=op.n_pad)
+        # Nystrom-extension state for transform()/predict(): unnormalized
+        # eigenvector rows and D^{-1/2}, both in original point order.
+        self._train_x = train_x
+        self._eigvecs = op.unpermute(Z)
+        self._inv_sqrt = op.unpermute(op.inv_sqrt)
+        self.result_ = SpectralResult(
+            labels=self.labels_, embedding=self.embedding_,
+            eigenvalues=evals, centers=centers, sigma=sigma,
+            info=self.info_)
+        return self
+
+    # -- out-of-sample extension ----------------------------------------------
+
+    def transform(self, x: jax.Array) -> jax.Array:
+        """Embed new points (m, d) into the fitted spectral space.
+
+        Nystrom extension: z_j(x) = (1/mu_j) sum_i N(x, i) z_j(i) with
+        N the degree-normalized kernel and mu_j = 1 - lambda_j the
+        eigenvalue of N; rows are then unit-normalized like the training
+        embedding.  Requires a feature-space fit (not "precomputed").
+        """
+        self._check_fitted()
+        if self._train_x is None:
+            raise ValueError(
+                "transform/predict need the training points; an estimator "
+                "fitted from a precomputed similarity matrix cannot embed "
+                "new points")
+        x = jnp.asarray(x, self.dtype)
+        K = sim.rbf_kernel(x, self._train_x, self.sigma_)
+        inv_new = lp.masked_inv_sqrt(jnp.sum(K, axis=1))
+        N_new = K * inv_new[:, None] * self._inv_sqrt[None, :]
+        mu = 1.0 - self.eigenvalues_                       # eigvals of N
+        mu = jnp.where(jnp.abs(mu) > 1e-6, mu, 1e-6)
+        emb = (N_new @ self._eigvecs) / mu[None, :]
+        return km.normalize_rows(emb)
+
+    def predict(self, x: jax.Array) -> jax.Array:
+        """Nearest-center cluster assignment of new points in embedding
+        space (the fitted centers are the reference)."""
+        return km.assign(self.transform(x), self.centers_)
+
+    def _check_fitted(self):
+        if self.result_ is None:
+            raise ValueError("this SpectralClustering instance is not "
+                             "fitted yet; call fit() first")

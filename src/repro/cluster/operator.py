@@ -1,0 +1,74 @@
+"""The common product of every affinity backend.
+
+All affinity backends — dense, triangular, compact, precomputed, knn-topt —
+reduce to the same object: the *shifted normalized operator*
+
+    A v = valid * v + D^{-1/2} S D^{-1/2} v
+
+whose largest eigenpairs are the smallest of L_sym = I - D^{-1/2} S D^{-1/2}
+(see ``core.laplacian``).  Eigensolver backends consume only this interface,
+so any affinity composes with any eigensolver; the ``schedule`` /
+``unpermute`` bookkeeping hides whether rows are block-permuted (triangular
+schedules) or in original order (dense paths).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass
+class SpectralResult:
+    """Result bundle in original point order (also what the legacy
+    ``repro.core.spectral`` entry points return)."""
+    labels: jax.Array            # (n,) original point order
+    embedding: jax.Array         # (n, k) row-normalized eigenvector rows
+    eigenvalues: jax.Array       # (k,) smallest of L_sym, ascending
+    centers: jax.Array           # (k, k)
+    sigma: jax.Array
+    info: dict = field(default_factory=dict)
+
+
+@dataclass
+class NormalizedOperator:
+    """Shifted normalized-similarity operator plus its padding/permutation
+    bookkeeping.
+
+    matvec:    (n_pad,) -> (n_pad,) replicated; ``A v`` as above.
+    valid:     (n_pad,) 1/0 mask — 0 on padding rows.
+    inv_sqrt:  (n_pad,) D^{-1/2} of the (padded) similarity; kept so the
+               estimator can Nystrom-extend the embedding to new points.
+    n, n_pad:  true vs padded point count; rows may be permuted (schedule).
+    mesh:      device mesh the similarity is sharded over.
+    schedule:  ``BlockSchedule`` when rows are block-permuted, else None.
+    dense:     optional zero-arg callable materializing A (n_pad, n_pad)
+               exactly — used by the ``eigh`` backend; falls back to
+               applying ``matvec`` columnwise when absent.
+    """
+
+    matvec: Callable[[jax.Array], jax.Array]
+    valid: jax.Array
+    inv_sqrt: jax.Array
+    n: int
+    n_pad: int
+    mesh: Any
+    schedule: Any = None
+    dense: Optional[Callable[[], jax.Array]] = None
+
+    def unpermute(self, values: jax.Array) -> jax.Array:
+        """Per-(padded-)row values -> original point order, padding dropped."""
+        if self.schedule is not None:
+            return values[jnp.asarray(self.schedule.inv_perm)][: self.n]
+        return values[: self.n]
+
+    def materialize(self) -> jax.Array:
+        """Dense A — exact if the backend provided ``dense``, else assembled
+        one column at a time through ``matvec`` (small-n fallback)."""
+        if self.dense is not None:
+            return self.dense()
+        eye = jnp.eye(self.n_pad, dtype=self.valid.dtype)
+        cols = [self.matvec(eye[:, j]) for j in range(self.n_pad)]
+        return jnp.stack(cols, axis=1)

@@ -1,4 +1,14 @@
 # The paper's primary contribution: parallel spectral clustering
 # (similarity -> Lanczos eigenvectors -> k-means), distributed over a
 # device mesh via shard_map. See DESIGN.md for the Hadoop -> TPU mapping.
-from repro.core.spectral import SpectralConfig, SpectralResult, fit, fit_dense
+#
+# The public entry point is repro.cluster.SpectralClustering (pluggable
+# affinity/eigensolver/assigner backends); the functions re-exported here
+# are deprecated shims kept for existing callers.
+from repro.core.spectral import (  # noqa: F401
+    SpectralConfig,
+    SpectralResult,
+    fit,
+    fit_dense,
+    fit_from_similarity,
+)

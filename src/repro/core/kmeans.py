@@ -108,6 +108,45 @@ def kmeans(y: jax.Array, k: int, key: jax.Array, iters: int = 50,
     return assign(y, state.centers), state.centers
 
 
+def minibatch_kmeans(y: jax.Array, valid: jax.Array, k: int, key: jax.Array,
+                     iters: int = 50, batch: int = 256,
+                     centers0: jax.Array | None = None
+                     ) -> tuple[jax.Array, jax.Array]:
+    """Mini-batch Lloyd (Sculley-style per-center learning rates).
+
+    For large ``n`` a full Lloyd pass per round is the dominant cost; each
+    round here touches only ``batch`` sampled points, with center c moving
+    toward its batch mean at rate (batch count)/(lifetime count).  ``valid``
+    weights the sampling so padding rows are never drawn.  Returns
+    ``(labels, centers)`` with labels from one final full assignment.
+    """
+    n = y.shape[0]
+    batch = int(min(batch, n))
+    key, init_key = jax.random.split(key)
+    if centers0 is None:
+        centers0 = kmeans_plusplus_init(y, k, init_key, weights=valid)
+    p = valid / jnp.maximum(jnp.sum(valid), 1.0)
+
+    def body(_, carry):
+        centers, counts, key = carry
+        key, sub = jax.random.split(key)
+        idx = jax.random.choice(sub, n, (batch,), replace=True, p=p)
+        yb = y[idx]
+        a = jnp.argmin(pairwise_sq_dists(yb, centers), axis=1)
+        onehot = jax.nn.one_hot(a, k, dtype=y.dtype)
+        bc = jnp.sum(onehot, axis=0)                 # (k,) batch counts
+        bmean = (onehot.T @ yb) / jnp.maximum(bc[:, None], 1.0)
+        counts = counts + bc
+        lr = bc / jnp.maximum(counts, 1.0)
+        centers = jnp.where(bc[:, None] > 0,
+                            centers + lr[:, None] * (bmean - centers), centers)
+        return centers, counts, key
+
+    centers, _, _ = lax.fori_loop(
+        0, iters, body, (centers0, jnp.zeros((k,), y.dtype), key))
+    return assign(y, centers), centers
+
+
 def distributed_lloyd_step(y_sharded: jax.Array, valid: jax.Array,
                            state: KMeansState, mesh: Mesh) -> KMeansState:
     """One MapReduce round: shard-local assign+sum, psum reduce, new centers."""
@@ -120,7 +159,7 @@ def distributed_lloyd_step(y_sharded: jax.Array, valid: jax.Array,
         counts = lax.psum(counts, axis)
         return sums, counts
 
-    shard = jax.shard_map(
+    shard = mesh_utils.shard_map(
         body, mesh=mesh,
         in_specs=(P(axes, None), P(axes), P()),
         out_specs=(P(), P()),

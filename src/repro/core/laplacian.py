@@ -19,6 +19,37 @@ def dense_degrees(S: jax.Array) -> jax.Array:
     return jnp.sum(S, axis=1)
 
 
+def masked_inv_sqrt(deg: jax.Array) -> jax.Array:
+    """D^{-1/2} with zero-degree rows (padding, isolated vertices) pinned to 0
+    so they stay in the null space of the normalized-similarity term."""
+    return jnp.where(deg > 0, 1.0 / jnp.sqrt(jnp.maximum(deg, 1e-12)), 0.0)
+
+
+def make_dense_operator(S: jax.Array, valid: jax.Array):
+    """Shifted normalized operator from a dense padded similarity matrix.
+
+    ``A v = valid * v + D^{-1/2} S D^{-1/2} v`` — the single construction
+    shared by the full/dense/precomputed affinity paths (previously
+    copy-pasted between ``spectral.fit`` full-mode and
+    ``fit_from_similarity``).  ``S`` is (n_pad, n_pad) with zero padding
+    rows/cols; ``valid`` the (n_pad,) 1/0 mask.  Returns ``(matvec,
+    inv_sqrt)`` so callers can keep D^{-1/2} for out-of-sample extension.
+    """
+    deg = S @ valid  # padded cols are zero already
+    inv_sqrt = masked_inv_sqrt(deg)
+
+    def matvec(v: jax.Array) -> jax.Array:
+        return valid * v + inv_sqrt * (S @ (inv_sqrt * v))
+
+    return matvec, inv_sqrt
+
+
+def dense_shifted_matrix(S: jax.Array, valid: jax.Array) -> jax.Array:
+    """Materialized A = diag(valid) + D^{-1/2} S D^{-1/2} (for exact eigh)."""
+    inv_sqrt = masked_inv_sqrt(S @ valid)
+    return jnp.diag(valid) + S * (inv_sqrt[:, None] * inv_sqrt[None, :])
+
+
 def dense_lsym(S: jax.Array) -> jax.Array:
     d = dense_degrees(S)
     inv_sqrt = jnp.where(d > 0, 1.0 / jnp.sqrt(jnp.maximum(d, 1e-12)), 0.0)

@@ -207,11 +207,11 @@ def similarity_upper_blocks(
             return lax.dynamic_update_slice(U, tile, (p_local * b, q * b))
 
         U_local = jnp.zeros((2 * b, n_pad), x.dtype)
-        U_local = jax.lax.pvary(U_local, tuple(axes))  # mark carry device-varying
+        U_local = mesh_utils.pvary(U_local, tuple(axes))  # mark carry device-varying
         U_local = lax.fori_loop(0, n_tiles, tile_step, U_local)
         return U_local
 
-    shard = jax.shard_map(
+    shard = mesh_utils.shard_map(
         body,
         mesh=mesh,
         in_specs=(P(axes, None), P(axes, None, None), P(axes)),
@@ -247,7 +247,7 @@ def sym_matvec(upper: UpperSim, v: jax.Array) -> jax.Array:
             jnp.zeros_like(v_full), diag_local * v_rows, (r0,))
         return lax.psum(part, axis)
 
-    shard = jax.shard_map(
+    shard = mesh_utils.shard_map(
         body,
         mesh=mesh,
         in_specs=(P(axes, None), P(axes), P()),
@@ -337,7 +337,7 @@ def similarity_upper_blocks_compact(
         _, tiles = lax.scan(one_tile, None, jnp.arange(n_tiles))
         return tiles
 
-    shard = jax.shard_map(
+    shard = mesh_utils.shard_map(
         body, mesh=mesh,
         in_specs=(P(axes, None), P(axes, None, None), P(axes)),
         out_specs=P(axes, None, None),
@@ -378,7 +378,7 @@ def sym_matvec_compact(upper: UpperSimCompact, v: jax.Array) -> jax.Array:
             return partial
 
         partial = jnp.zeros_like(v_full)
-        partial = jax.lax.pvary(partial, tuple(axes))
+        partial = mesh_utils.pvary(partial, tuple(axes))
         partial = lax.fori_loop(0, n_tiles, one, partial)
         # diagonal tiles contribute their diagonal twice via the mirror
         vr2 = lax.dynamic_slice(v_full, (dev_r0,), (2 * b,))
@@ -386,13 +386,31 @@ def sym_matvec_compact(upper: UpperSimCompact, v: jax.Array) -> jax.Array:
             jnp.zeros_like(v_full), diag_local * vr2, (dev_r0,))
         return lax.psum(partial - corr, axis)
 
-    shard = jax.shard_map(
+    shard = mesh_utils.shard_map(
         body, mesh=upper.mesh,
         in_specs=(P(axes, None, None), P(axes, None, None), P(axes), P()),
         out_specs=P(),
     )
     table = jnp.asarray(sched.table)
     return shard(upper.tiles, table, upper.diag, v)
+
+
+def materialize_compact(upper: UpperSimCompact) -> jax.Array:
+    """Full symmetric S (permuted order) from the compact tile stacks.
+
+    The schedule table is host-static, so this is a plain unrolled scatter —
+    used by the exact-eigh backend, not by the iterative path.
+    """
+    sched: BlockSchedule = upper.schedule
+    b, m = sched.b, sched.m
+    n_tiles = 2 * m + 1
+    U = jnp.zeros((sched.n_pad, sched.n_pad), upper.tiles.dtype)
+    for d in range(m):
+        for t, (p_local, q, _is_diag) in enumerate(sched.table[d]):
+            r0 = d * 2 * b + int(p_local) * b
+            c0 = int(q) * b
+            U = U.at[r0:r0 + b, c0:c0 + b].set(upper.tiles[d * n_tiles + t])
+    return U + U.T - jnp.diag(upper.diag)
 
 
 def distributed_similarity_full(
@@ -421,7 +439,7 @@ def distributed_similarity_full(
         S_local = S_local * valid_full[None, :].astype(S_local.dtype)
         return S_local
 
-    shard = jax.shard_map(
+    shard = mesh_utils.shard_map(
         body, mesh=mesh, in_specs=(P(axes, None), P(axes)), out_specs=P(axes, None)
     )
     return shard(xp, valid)

@@ -1,33 +1,45 @@
-"""End-to-end parallel spectral clustering (paper Alg. 4.1, distributed §4.3).
+"""Legacy entry points for the paper's pipeline (Alg. 4.1).
 
-    fit(x)  ->  labels
+DEPRECATED: the pipeline now lives behind the pluggable estimator in
+:mod:`repro.cluster` — one ``SpectralClustering`` class whose three phases
+(affinity, eigensolver, assigner) are registry-selected backends:
 
-Phases (each separately checkpointable, mirroring the paper's HBase-persisted
-intermediates):
-  1. similarity  — triangular (paper) or full (beyond-paper) block schedule
-  2. eigen       — shifted Lanczos for the k smallest eigenvectors of L_sym
-  3. kmeans      — distributed Lloyd on the row-normalized embedding
+    from repro.cluster import SpectralClustering
+    est = SpectralClustering(k=3, affinity="triangular",
+                             eigensolver="lanczos", assigner="lloyd")
+    labels = est.fit(x).labels_
 
-``fit_dense`` is the single-device oracle (full eigh) used by the tests.
+``fit`` / ``fit_dense`` / ``fit_from_similarity`` remain as thin shims so
+existing callers keep working; they forward to the estimator and return the
+same :class:`SpectralResult`.  Migration map:
+
+    fit(x, cfg)  mode="triangular"  -> affinity="triangular" (bit-for-bit)
+    fit(x, cfg)  mode="full"        -> affinity="dense"      (bit-for-bit)
+    fit_dense(x, cfg)               -> affinity="dense" (or "knn-topt" when
+                                       cfg.sparsify_t), eigensolver="eigh"
+    fit_from_similarity(S, cfg)     -> affinity="precomputed"
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+import warnings
+from dataclasses import dataclass
 from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh
 
-from repro.core import kmeans as km
-from repro.core import lanczos as lz
-from repro.core import laplacian as lp
-from repro.core import similarity as sim
-from repro.distrib import mesh_utils
+from repro.cluster.operator import SpectralResult
+
+__all__ = ["SpectralConfig", "SpectralResult", "fit", "fit_dense",
+           "fit_from_similarity"]
+
+_MODE_TO_AFFINITY = {"triangular": "triangular", "full": "dense"}
 
 
 @dataclass(frozen=True)
 class SpectralConfig:
+    """Legacy config bundle; maps 1:1 onto SpectralClustering kwargs."""
     k: int = 8                       # number of clusters
     sigma: float | None = None       # RBF bandwidth; None = median heuristic
     lanczos_steps: int | None = None # None = max(4k, 32), capped below n
@@ -38,134 +50,48 @@ class SpectralConfig:
     dtype: Any = jnp.float32
 
 
-@dataclass
-class SpectralResult:
-    labels: jax.Array            # (n,) original point order
-    embedding: jax.Array         # (n, k) row-normalized eigenvector rows
-    eigenvalues: jax.Array       # (k,) smallest of L_sym, ascending
-    centers: jax.Array           # (k, k)
-    sigma: jax.Array
-    info: dict = field(default_factory=dict)
+def _estimator(cfg: SpectralConfig, *, affinity: str, eigensolver: str,
+               mesh: Optional[Mesh]):
+    # Imported lazily: repro.core.__init__ -> spectral -> repro.cluster ->
+    # repro.core.* would otherwise cycle during package initialization.
+    from repro.cluster.estimator import SpectralClustering
+    return SpectralClustering(
+        k=cfg.k, affinity=affinity, eigensolver=eigensolver,
+        assigner="lloyd", sigma=cfg.sigma, lanczos_steps=cfg.lanczos_steps,
+        kmeans_iters=cfg.kmeans_iters, sparsify_t=cfg.sparsify_t,
+        seed=cfg.seed, dtype=cfg.dtype, mesh=mesh)
 
 
-def _num_steps(cfg: SpectralConfig, n: int) -> int:
-    m = cfg.lanczos_steps or max(4 * cfg.k, 32)
-    return int(min(m, n - 1))
+def _deprecated(old: str, new: str):
+    warnings.warn(
+        f"repro.core.spectral.{old} is deprecated; use "
+        f"repro.cluster.SpectralClustering({new})", DeprecationWarning,
+        stacklevel=3)
 
 
 def fit(x: jax.Array, cfg: SpectralConfig, mesh: Optional[Mesh] = None,
         checkpointer: Any = None) -> SpectralResult:
-    """Distributed spectral clustering on mesh (defaults to all local devices)."""
-    x = jnp.asarray(x, cfg.dtype)
-    n = int(x.shape[0])
-    mesh = mesh or mesh_utils.local_mesh("rows")
-    key = jax.random.PRNGKey(cfg.seed)
-    k_eig, k_lan, k_km = jax.random.split(key, 3)
-
-    sigma = jnp.asarray(cfg.sigma, cfg.dtype) if cfg.sigma is not None \
-        else sim.median_sigma(x)
-
-    # -- phase 1: similarity ------------------------------------------------
-    if cfg.mode == "full":
-        S = sim.distributed_similarity_full(x, sigma, mesh)
-        n_pad = S.shape[0]
-        valid = (jnp.arange(n_pad) < n).astype(cfg.dtype)
-        deg = S @ valid  # padded cols are zero already; (n_pad,)
-        inv_sqrt = jnp.where(deg > 0, 1.0 / jnp.sqrt(jnp.maximum(deg, 1e-12)), 0.0)
-
-        def matvec(v):
-            return valid * v + inv_sqrt * (S @ (inv_sqrt * v))
-
-        perm_back = None
-    elif cfg.mode == "triangular":
-        upper = sim.similarity_upper_blocks(x, sigma, mesh)
-        n_pad = upper.schedule.n_pad
-        valid = upper.diag
-        deg = lp.degrees(upper)
-        matvec = lp.make_shifted_operator(upper, deg)
-        perm_back = upper.schedule
-    else:
+    """Deprecated shim: distributed spectral clustering on a mesh."""
+    if cfg.mode not in _MODE_TO_AFFINITY:
         raise ValueError(f"unknown mode {cfg.mode!r}")
-    if checkpointer is not None:
-        checkpointer.save_phase("similarity", {"sigma": sigma})
-
-    # -- phase 2: k smallest eigenvectors ------------------------------------
-    steps = _num_steps(cfg, n)
-    state = lz.lanczos(matvec, n_pad, steps, k_lan, dtype=cfg.dtype)
-    if checkpointer is not None:
-        checkpointer.save_phase("lanczos", state)
-    evals, Z = lz.topk_of_shifted(state, cfg.k)          # (k,), (n_pad, k)
-
-    # -- phase 3: k-means on the normalized embedding -------------------------
-    Y = km.normalize_rows(Z) * valid[:, None]
-    Y = jax.lax.with_sharding_constraint(
-        Y, NamedSharding(mesh, P(mesh_utils.flat_axes(mesh), None)))
-    labels_pad, km_state = km.distributed_kmeans(
-        Y, valid, cfg.k, k_km, mesh, iters=cfg.kmeans_iters)
-    if checkpointer is not None:
-        checkpointer.save_phase("kmeans", km_state)
-
-    if perm_back is not None:
-        labels = sim.unpermute_rows(labels_pad, perm_back)
-        Y_out = Y[jnp.asarray(perm_back.inv_perm)][:n]
-    else:
-        labels = labels_pad[:n]
-        Y_out = Y[:n]
-    return SpectralResult(labels=labels, embedding=Y_out, eigenvalues=evals,
-                          centers=km_state.centers, sigma=sigma,
-                          info={"lanczos_steps": steps, "n_pad": n_pad,
-                                "mode": cfg.mode})
+    affinity = _MODE_TO_AFFINITY[cfg.mode]
+    _deprecated("fit", f'affinity="{affinity}"')
+    est = _estimator(cfg, affinity=affinity, eigensolver="lanczos", mesh=mesh)
+    return est.fit(x, checkpointer=checkpointer).result_
 
 
 def fit_from_similarity(S: jax.Array, cfg: SpectralConfig,
                         mesh: Optional[Mesh] = None) -> SpectralResult:
-    """Cluster from a precomputed similarity/adjacency matrix (the paper's
-    §5 graph dataset).  S is (n, n) symmetric non-negative; it is padded and
-    row-sharded over the mesh, then phases 2-3 run as in :func:`fit`."""
-    S = jnp.asarray(S, cfg.dtype)
-    n = int(S.shape[0])
-    mesh = mesh or mesh_utils.local_mesh("rows")
-    m = mesh_utils.mesh_size(mesh)
-    n_pad = mesh_utils.pad_to_multiple(n, m)
-    axes = mesh_utils.flat_axes(mesh)
-    Sp = jnp.zeros((n_pad, n_pad), cfg.dtype).at[:n, :n].set(S)
-    Sp = jax.lax.with_sharding_constraint(
-        Sp, NamedSharding(mesh, P(axes, None)))
-    valid = (jnp.arange(n_pad) < n).astype(cfg.dtype)
-    deg = Sp @ valid
-    inv_sqrt = jnp.where(deg > 0, 1.0 / jnp.sqrt(jnp.maximum(deg, 1e-12)), 0.0)
-
-    def matvec(v):
-        return valid * v + inv_sqrt * (Sp @ (inv_sqrt * v))
-
-    key = jax.random.PRNGKey(cfg.seed)
-    k_lan, k_km = jax.random.split(key)
-    steps = _num_steps(cfg, n)
-    state = lz.lanczos(matvec, n_pad, steps, k_lan, dtype=cfg.dtype)
-    evals, Z = lz.topk_of_shifted(state, cfg.k)
-    Y = km.normalize_rows(Z) * valid[:, None]
-    Y = jax.lax.with_sharding_constraint(Y, NamedSharding(mesh, P(axes, None)))
-    labels_pad, km_state = km.distributed_kmeans(
-        Y, valid, cfg.k, k_km, mesh, iters=cfg.kmeans_iters)
-    return SpectralResult(labels=labels_pad[:n], embedding=Y[:n],
-                          eigenvalues=evals, centers=km_state.centers,
-                          sigma=jnp.asarray(0.0), info={"mode": "similarity"})
+    """Deprecated shim: cluster a precomputed similarity/adjacency matrix."""
+    _deprecated("fit_from_similarity", 'affinity="precomputed"')
+    est = _estimator(cfg, affinity="precomputed", eigensolver="lanczos",
+                     mesh=mesh)
+    return est.fit_affinity(jnp.asarray(S, cfg.dtype)).result_
 
 
 def fit_dense(x: jax.Array, cfg: SpectralConfig) -> SpectralResult:
-    """Single-device oracle: dense S, exact eigh, plain k-means."""
-    x = jnp.asarray(x, cfg.dtype)
-    sigma = jnp.asarray(cfg.sigma, cfg.dtype) if cfg.sigma is not None \
-        else sim.median_sigma(x)
-    S = sim.dense_similarity(x, sigma)
-    if cfg.sparsify_t:
-        S = sim.sparsify_topt(S, cfg.sparsify_t)
-    L = lp.dense_lsym(S)
-    evals, evecs = jnp.linalg.eigh(L)
-    Z = evecs[:, : cfg.k]
-    Y = km.normalize_rows(Z)
-    labels, centers = km.kmeans(Y, cfg.k, jax.random.PRNGKey(cfg.seed),
-                                iters=cfg.kmeans_iters)
-    return SpectralResult(labels=labels, embedding=Y,
-                          eigenvalues=evals[: cfg.k], centers=centers,
-                          sigma=sigma, info={"mode": "dense"})
+    """Deprecated shim: the exact-eigh oracle (dense S, full eigh)."""
+    affinity = "knn-topt" if cfg.sparsify_t else "dense"
+    _deprecated("fit_dense", f'affinity="{affinity}", eigensolver="eigh"')
+    est = _estimator(cfg, affinity=affinity, eigensolver="eigh", mesh=None)
+    return est.fit(x).result_

@@ -4,8 +4,9 @@
     v <id> <label>
     e <src> <dst> <weight>
 
-The parsed graph feeds ``spectral.fit_from_similarity`` (adjacency-weight
-similarity) — the paper clusters graph vertices directly."""
+The parsed graph feeds ``SpectralClustering(affinity="precomputed")``
+(adjacency-weight similarity) — the paper clusters graph vertices
+directly."""
 from __future__ import annotations
 
 import numpy as np

@@ -1,9 +1,14 @@
 """Production mesh builders (functions, never module-level constants, so
-importing this module never touches jax device state)."""
+importing this module never touches jax device state).
+
+Mesh construction goes through :func:`repro.distrib.mesh_utils.make_mesh`,
+which version-guards the ``AxisType`` kwarg (jax 0.4.x predates axis types).
+"""
 from __future__ import annotations
 
-import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+from repro.distrib import mesh_utils
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
@@ -11,12 +16,11 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     Multi-pod: (2, 16, 16) = 512 chips, axes (pod, data, model)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return mesh_utils.make_mesh(shape, axes)
 
 
 def make_spectral_mesh(*, multi_pod: bool = False) -> Mesh:
     """The spectral pipeline row-shards its matrices over every chip: a
     flat 1-D mesh (the Hadoop "all workers" pool)."""
     n = 512 if multi_pod else 256
-    return jax.make_mesh((n,), ("rows",), axis_types=(AxisType.Auto,))
+    return mesh_utils.make_mesh((n,), ("rows",))

@@ -1,7 +1,12 @@
 """Driver for the paper's pipeline: cluster points or a topology graph
 file on all local devices, with phase checkpointing.
 
+Each pipeline phase is a registry-selected backend of
+:class:`repro.cluster.SpectralClustering`:
+
     PYTHONPATH=src python -m repro.launch.spectral_job --blobs 600 --k 3
+    PYTHONPATH=src python -m repro.launch.spectral_job --rings 512 --k 2 \\
+        --affinity compact --eigensolver lanczos --assigner minibatch
     PYTHONPATH=src python -m repro.launch.spectral_job --graph topo.txt --k 8
 """
 from __future__ import annotations
@@ -14,7 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import CheckpointManager
-from repro.core import spectral
+from repro.cluster import AFFINITIES, ASSIGNERS, EIGENSOLVERS, SpectralClustering
 from repro.data import graph_file, synthetic
 from repro.distrib import mesh_utils
 
@@ -25,21 +30,39 @@ def main(argv=None):
     ap.add_argument("--rings", type=int, default=0, help="n points in k rings")
     ap.add_argument("--graph", default=None, help="paper §5.1 topology file")
     ap.add_argument("--k", type=int, default=3)
-    ap.add_argument("--mode", default="triangular", choices=["triangular", "full"])
+    ap.add_argument("--affinity", default="triangular",
+                    choices=AFFINITIES.names(),
+                    help="phase-1 backend (forced to 'precomputed' by --graph)")
+    ap.add_argument("--eigensolver", default="lanczos",
+                    choices=EIGENSOLVERS.names(), help="phase-2 backend")
+    ap.add_argument("--assigner", default="lloyd", choices=ASSIGNERS.names(),
+                    help="phase-3 backend")
+    ap.add_argument("--mode", default=None, choices=["triangular", "full"],
+                    help="deprecated alias: triangular/full -> "
+                         "--affinity triangular/dense")
+    ap.add_argument("--sparsify-t", type=int, default=None,
+                    help="top-t per row for --affinity knn-topt")
     ap.add_argument("--lanczos-steps", type=int, default=48)
     ap.add_argument("--ckpt-dir", default=None)
     args = ap.parse_args(argv)
 
+    affinity = args.affinity
+    if args.mode is not None:
+        affinity = {"triangular": "triangular", "full": "dense"}[args.mode]
+
     mesh = mesh_utils.local_mesh("rows")
-    cfg = spectral.SpectralConfig(k=args.k, mode=args.mode,
-                                  lanczos_steps=args.lanczos_steps)
     mgr = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+    est = SpectralClustering(
+        k=args.k, affinity="precomputed" if args.graph else affinity,
+        eigensolver=args.eigensolver, assigner=args.assigner,
+        lanczos_steps=args.lanczos_steps, sparsify_t=args.sparsify_t,
+        mesh=mesh)
 
     t0 = time.time()
     if args.graph:
         n, edges = graph_file.parse_topology(args.graph)
         S = graph_file.adjacency_dense(n, edges)
-        res = spectral.fit_from_similarity(jnp.asarray(S), cfg, mesh)
+        est.fit_affinity(jnp.asarray(S), checkpointer=mgr)
         truth = None
     else:
         if args.rings:
@@ -47,14 +70,16 @@ def main(argv=None):
         else:
             n = args.blobs or 600
             pts, truth = synthetic.blobs(n, args.k)
-        res = spectral.fit(jnp.asarray(pts), cfg, mesh, checkpointer=mgr)
+        est.fit(jnp.asarray(pts), checkpointer=mgr)
     dt = time.time() - t0
 
-    labels = np.asarray(res.labels)
+    labels = np.asarray(est.labels_)
     sizes = np.bincount(labels, minlength=args.k)
-    print(f"[spectral] n={len(labels)} k={args.k} mode={cfg.mode} "
-          f"devices={mesh_utils.mesh_size(mesh)} time={dt:.2f}s")
-    print(f"[spectral] eigenvalues: {np.asarray(res.eigenvalues)}")
+    print(f"[spectral] n={len(labels)} k={args.k} "
+          f"affinity={est.info_['affinity']} eigensolver={est.eigensolver} "
+          f"assigner={est.assigner} devices={mesh_utils.mesh_size(mesh)} "
+          f"time={dt:.2f}s")
+    print(f"[spectral] eigenvalues: {np.asarray(est.eigenvalues_)}")
     print(f"[spectral] cluster sizes: {sizes}")
     if truth is not None:
         from itertools import permutations
@@ -63,7 +88,7 @@ def main(argv=None):
             acc = max(np.mean(np.array([p[t] for t in truth]) == labels)
                       for p in permutations(range(k)))
             print(f"[spectral] accuracy vs planted labels: {acc:.3f}")
-    return res
+    return est
 
 
 if __name__ == "__main__":

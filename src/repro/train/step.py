@@ -11,6 +11,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.distrib import mesh_utils
 from repro.models.api import Model
 from repro.train import optimizer as opt_lib
 
@@ -117,7 +118,7 @@ def make_compressed_train_step(model: Model, optimizer: opt_lib.Optimizer,
         rep_o = jax.tree.map(lambda _: P(), opt_state)
         efp = jax.tree.map(lambda _: P(), ef)
         bspec = jax.tree.map(lambda _: P(axis), batch)
-        fn = jax.shard_map(
+        fn = mesh_utils.shard_map(
             inner, mesh=mesh,
             in_specs=(rep, rep_o, efp, bspec),
             out_specs=(rep, rep_o, efp, P()),
@@ -125,7 +126,9 @@ def make_compressed_train_step(model: Model, optimizer: opt_lib.Optimizer,
         )
         return fn(params, opt_state, ef, batch)
 
-    return step
+    # jit the whole round: without it each call re-dispatches the shard_map
+    # eagerly (prohibitively slow on jax 0.4's python dispatch path).
+    return jax.jit(step)
 
 
 def init_ef_state(params):

@@ -130,7 +130,7 @@ def test_moe_ep_shard_map_matches_gather_8dev(subproc):
     gather path at drop-free capacity."""
     out = subproc("""
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import AxisType
+from repro.distrib import mesh_utils
 from repro.models import moe as moe_lib
 from repro.models import params as pp
 from repro import configs
@@ -142,7 +142,7 @@ spec = moe_lib.moe_specs(cfg)
 p = pp.init_params(spec, jax.random.PRNGKey(0))
 x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, cfg.d_model), jnp.float32)
 out_ref, _ = moe_lib.moe_ffn(x, p, cfg)
-mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+mesh = mesh_utils.make_mesh((2, 4), ("data", "model"))
 cfg2 = cfg.with_(moe_impl="ep_shard_map")
 with act_sharding.use_mesh(mesh):
     out_ep, _ = jax.jit(lambda x, p: moe_lib.moe_ffn(x, p, cfg2))(x, p)
@@ -157,7 +157,7 @@ def test_sp_serve_preset_matches_default_8dev(subproc):
     same prefill logits as the default sharding."""
     out = subproc("""
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import AxisType
+from repro.distrib import mesh_utils
 from repro import configs
 from repro.distrib import act_sharding
 from repro.models import api
@@ -167,7 +167,7 @@ m = api.build(cfg)
 params = m.init(jax.random.PRNGKey(0))
 toks = jax.random.randint(jax.random.PRNGKey(1), (2, 64), 0, cfg.vocab_size)
 lg_ref, _ = m.prefill(params, {"tokens": toks})
-mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+mesh = mesh_utils.make_mesh((2, 4), ("data", "model"))
 cfg_sp = cfg.with_(sharding_preset="sp_serve")
 m_sp = api.build(cfg_sp)
 with act_sharding.use_mesh(mesh):
@@ -196,9 +196,10 @@ print("SAVED", len(jax.devices()))
     assert "SAVED 1" in out1
     out4 = subproc(f"""
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.distrib import mesh_utils
 from repro.checkpoint import CheckpointManager
-mesh = jax.make_mesh((4,), ("data",), axis_types=(AxisType.Auto,))
+mesh = mesh_utils.make_mesh((4,), ("data",))
 shardings = {{"w": NamedSharding(mesh, P("data", None)),
               "count": NamedSharding(mesh, P())}}
 tmpl = {{"w": jnp.zeros((8, 8)), "count": jnp.asarray(0)}}
@@ -218,7 +219,7 @@ def test_mini_dryrun_8dev(subproc):
     compiles and produces roofline terms on an 8-device mesh."""
     out = subproc("""
 import jax, jax.numpy as jnp
-from jax.sharding import AxisType
+from repro.distrib import mesh_utils
 from repro import configs
 from repro.configs import specs as cfg_specs
 from repro.distrib import hlo_analysis, sharding
@@ -229,7 +230,7 @@ from repro.train.step import make_train_step
 
 cfg = configs.get_smoke("mixtral-8x7b")
 model = api.build(cfg)
-mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+mesh = mesh_utils.make_mesh((2, 4), ("data", "model"))
 cell = ShapeCell("mini", "train", 64, 8)
 p_shard = sharding.param_shardings(cfg, model.spec, mesh)
 batch = cfg_specs.input_specs(cfg, cell)

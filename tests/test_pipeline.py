@@ -6,9 +6,9 @@ import pytest
 def test_pipeline_matches_scan_4stages(subproc):
     out = subproc("""
 import jax, jax.numpy as jnp
-from jax.sharding import AxisType
+from repro.distrib import mesh_utils
 from repro.train.pipeline import pipeline_apply
-mesh = jax.make_mesh((4,), ("pod",), axis_types=(AxisType.Auto,))
+mesh = mesh_utils.make_mesh((4,), ("pod",))
 L, D, B = 8, 16, 8
 W = jax.random.normal(jax.random.PRNGKey(0), (L, D, D)) * 0.3
 x = jax.random.normal(jax.random.PRNGKey(1), (B, D))
@@ -30,9 +30,9 @@ def test_pipeline_2stage_with_other_axes(subproc):
     """Pipeline axis composes with a data axis in the same mesh."""
     out = subproc("""
 import jax, jax.numpy as jnp
-from jax.sharding import AxisType
+from repro.distrib import mesh_utils
 from repro.train.pipeline import pipeline_apply
-mesh = jax.make_mesh((2, 2), ("pod", "data"), axis_types=(AxisType.Auto,)*2)
+mesh = mesh_utils.make_mesh((2, 2), ("pod", "data"))
 L, D, B = 4, 8, 4
 W = jax.random.normal(jax.random.PRNGKey(0), (L, D, D)) * 0.3
 x = jax.random.normal(jax.random.PRNGKey(1), (B, D))
