@@ -6,6 +6,7 @@ from repro.cluster.affinity import AFFINITIES
 from repro.cluster.assigners import ASSIGNERS
 from repro.cluster.eigensolvers import EIGENSOLVERS
 from repro.cluster.estimator import SpectralClustering
+from repro.cluster.metrics import ari, nmi, purity
 from repro.cluster.operator import NormalizedOperator, SpectralResult
 from repro.cluster.registry import Registry
 
@@ -17,4 +18,7 @@ __all__ = [
     "Registry",
     "SpectralClustering",
     "SpectralResult",
+    "ari",
+    "nmi",
+    "purity",
 ]

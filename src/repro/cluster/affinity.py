@@ -20,6 +20,10 @@ Backends:
   knn-topt    dense similarity then top-t row sparsification lifted into the
               distributed path (paper step 1 "and then sparse it"), keeping
               the graph symmetric via max(S, S^T).
+  ooc-topt    the same top-t graph built out-of-core by the repro.engine
+              map/shuffle/reduce pipeline: chunked Pallas tiles -> spillable
+              CSR shards -> shard-streaming matvec; n is bounded by disk,
+              not device memory.
 """
 from __future__ import annotations
 
@@ -131,3 +135,33 @@ def knn_topt_affinity(est, x, sigma, mesh) -> NormalizedOperator:
     # max(S, S^T) symmetrization inside sparsify_topt is the one transpose
     St = sim.sparsify_topt(S, int(min(t, n)))
     return operator_from_dense(St, n, mesh)
+
+
+@AFFINITIES.register("ooc-topt")
+def ooc_topt_affinity(est, x, sigma, mesh) -> NormalizedOperator:
+    """Out-of-core top-t graph via the repro.engine MapReduce pipeline.
+
+    The similarity matrix never exists densely: map tasks turn Pallas RBF
+    tiles into per-row top-t candidates, the shuffle/reduce stages merge
+    them into symmetrized CSR shards spilled to disk under
+    ``est.memory_budget``, and the returned operator's matvec streams the
+    shards through a host callback.  Drop-in for any eigensolver/assigner.
+    """
+    import numpy as np
+
+    from repro import engine
+    from repro.data.chunked import ArrayChunks
+
+    n = int(x.shape[0])
+    t = est.sparsify_t or max(est.k + 2, 10)
+    plan = engine.JobPlan(
+        n=n, chunk_size=est.chunk_size or 1024, t=int(min(t, n)), k=est.k,
+        sigma=float(sigma), memory_budget=est.memory_budget,
+        spill_dir=est.spill_dir, seed=est.seed)
+    reader = ArrayChunks(np.asarray(x), plan.chunk_size)
+    graph, _sigma = engine.build_graph(reader, plan)
+    # same padding invariant as the dense backends: downstream shard_map
+    # stages need row counts divisible by the mesh
+    n_pad = mesh_utils.pad_to_multiple(n, mesh_utils.mesh_size(mesh))
+    return engine.make_normalized_operator(graph, dtype=est.dtype, mesh=mesh,
+                                           pad_to=n_pad)

@@ -13,10 +13,14 @@ Backends:
   lloyd      full distributed Lloyd (paper §4.3.3 MapReduce rounds).
   minibatch  Sculley-style mini-batch Lloyd — O(batch) per round instead
              of O(n); the large-n assigner.
+  streaming  the engine's chunked mini-batch Lloyd: consumes embedding
+             rows chunk by chunk (one chunk = one mini-batch round), the
+             phase-3 pairing for the out-of-core ``ooc-topt`` affinity.
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import kmeans as km
 from repro.cluster.registry import Registry
@@ -36,3 +40,18 @@ def minibatch_assigner(est, Y, valid, key, mesh):
     return km.minibatch_kmeans(jnp.asarray(Y), valid, est.k, key,
                                iters=est.kmeans_iters,
                                batch=est.minibatch_size)
+
+
+@ASSIGNERS.register("streaming")
+def streaming_assigner(est, Y, valid, key, mesh):
+    from repro.data.chunked import chunk_ranges
+    from repro.engine import streaming_kmeans
+
+    Yh = np.asarray(Y, np.float64)
+    vh = np.asarray(valid, np.float64)
+    ranges = chunk_ranges(Yh.shape[0], est.chunk_size or 4096)
+    labels, centers = streaming_kmeans(
+        lambda c: Yh[ranges[c][0]:ranges[c][1]], len(ranges), est.k,
+        rounds=est.kmeans_iters, seed=est.seed,
+        valid_chunk=lambda c: vh[ranges[c][0]:ranges[c][1]])
+    return jnp.asarray(labels), jnp.asarray(centers, Y.dtype)

@@ -43,16 +43,23 @@ class SpectralClustering:
     k:              number of clusters (and embedding dimensions).
     affinity:       name in :data:`~repro.cluster.AFFINITIES`
                     ("dense" | "triangular" | "compact" | "precomputed"
-                    | "knn-topt").  With "precomputed", ``fit(S)`` treats
-                    its argument as the (n, n) similarity matrix.
+                    | "knn-topt" | "ooc-topt").  With "precomputed",
+                    ``fit(S)`` treats its argument as the (n, n)
+                    similarity matrix; "ooc-topt" builds the graph
+                    out-of-core through ``repro.engine``.
     eigensolver:    name in :data:`~repro.cluster.EIGENSOLVERS`
                     ("lanczos" | "eigh").
     assigner:       name in :data:`~repro.cluster.ASSIGNERS`
-                    ("lloyd" | "minibatch").
+                    ("lloyd" | "minibatch" | "streaming").
     sigma:          RBF bandwidth; None = median heuristic.
     lanczos_steps:  None = max(4k, 32), capped below n.
-    sparsify_t:     top-t per row for the "knn-topt" affinity
-                    (None = max(k + 2, 10)).
+    sparsify_t:     top-t per row for the "knn-topt" / "ooc-topt"
+                    affinities (None = max(k + 2, 10)).
+    chunk_size:     rows per chunk for the out-of-core "ooc-topt"
+                    affinity and "streaming" assigner (None = 1024/4096).
+    memory_budget:  engine shard-store RAM budget in bytes
+                    (None = unlimited, nothing spills to disk).
+    spill_dir:      where the engine spills shards (None = temp dir).
     mesh:           device mesh; None = all local devices.
 
     Fitted attributes (original point order): ``labels_``, ``embedding_``,
@@ -63,7 +70,9 @@ class SpectralClustering:
                  eigensolver: str = "lanczos", assigner: str = "lloyd",
                  sigma: float | None = None, lanczos_steps: int | None = None,
                  kmeans_iters: int = 50, sparsify_t: int | None = None,
-                 minibatch_size: int = 256, seed: int = 0,
+                 minibatch_size: int = 256, chunk_size: int | None = None,
+                 memory_budget: int | None = None,
+                 spill_dir: str | None = None, seed: int = 0,
                  dtype: Any = jnp.float32, mesh: Optional[Mesh] = None):
         # Resolve backends eagerly so a typo fails at construction, not
         # after an expensive similarity phase.
@@ -79,6 +88,9 @@ class SpectralClustering:
         self.kmeans_iters = kmeans_iters
         self.sparsify_t = sparsify_t
         self.minibatch_size = minibatch_size
+        self.chunk_size = chunk_size
+        self.memory_budget = memory_budget
+        self.spill_dir = spill_dir
         self.seed = seed
         self.dtype = dtype
         self.mesh = mesh
@@ -148,6 +160,9 @@ class SpectralClustering:
         self.info_ = dict(info, affinity=affinity_used,
                           eigensolver=self.eigensolver,
                           assigner=self.assigner, n_pad=op.n_pad)
+        op_stats = op.stats_snapshot()
+        if op_stats:
+            self.info_["engine"] = op_stats
         # Nystrom-extension state for transform()/predict(): unnormalized
         # eigenvector rows and D^{-1/2}, both in original point order.
         self._train_x = train_x

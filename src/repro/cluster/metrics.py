@@ -1,0 +1,73 @@
+"""Clustering agreement metrics — the paper's §5 experiment measures.
+
+All three compare a predicted labeling against a reference labeling
+through their contingency table; none assumes the label ids line up
+(clustering is only defined up to permutation):
+
+  ari     adjusted Rand index — pair-counting agreement, chance-corrected
+          (1 = identical partitions, ~0 = random, can go negative).
+  nmi     normalized mutual information, arithmetic-mean normalization
+          (sklearn's default), in [0, 1].
+  purity  each predicted cluster votes its majority reference class;
+          fraction of points covered by the votes, in (0, 1].
+
+Pure numpy on (n,) integer label vectors; label values need not be
+contiguous or aligned between the two vectors.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def contingency(labels_a: np.ndarray, labels_b: np.ndarray) -> np.ndarray:
+    """Contingency table C[i, j] = #points with a-label i and b-label j."""
+    a = np.asarray(labels_a).ravel()
+    b = np.asarray(labels_b).ravel()
+    if a.shape != b.shape:
+        raise ValueError(
+            f"label vectors differ in length: {a.shape} vs {b.shape}")
+    _, ai = np.unique(a, return_inverse=True)
+    _, bi = np.unique(b, return_inverse=True)
+    na, nb = ai.max() + 1, bi.max() + 1
+    return np.bincount(ai * nb + bi, minlength=na * nb).reshape(na, nb)
+
+
+def ari(labels_true: np.ndarray, labels_pred: np.ndarray) -> float:
+    """Adjusted Rand index (Hubert & Arabie 1985)."""
+    C = contingency(labels_true, labels_pred).astype(np.float64)
+    n = C.sum()
+    sum_comb = (C * (C - 1) / 2).sum()
+    a = C.sum(axis=1)
+    b = C.sum(axis=0)
+    comb_a = (a * (a - 1) / 2).sum()
+    comb_b = (b * (b - 1) / 2).sum()
+    total = n * (n - 1) / 2
+    expected = comb_a * comb_b / total if total else 0.0
+    max_index = (comb_a + comb_b) / 2
+    if max_index == expected:          # both partitions trivial -> perfect
+        return 1.0
+    return float((sum_comb - expected) / (max_index - expected))
+
+
+def nmi(labels_true: np.ndarray, labels_pred: np.ndarray) -> float:
+    """Normalized mutual information, arithmetic-mean normalization."""
+    C = contingency(labels_true, labels_pred).astype(np.float64)
+    n = C.sum()
+    pa = C.sum(axis=1) / n
+    pb = C.sum(axis=0) / n
+    nz = C > 0
+    pab = C / n
+    outer = pa[:, None] * pb[None, :]
+    mi = float((pab[nz] * np.log(pab[nz] / outer[nz])).sum())
+    ha = float(-(pa[pa > 0] * np.log(pa[pa > 0])).sum())
+    hb = float(-(pb[pb > 0] * np.log(pb[pb > 0])).sum())
+    denom = (ha + hb) / 2
+    if denom <= 0:                     # both partitions trivial
+        return 1.0
+    return max(0.0, min(1.0, mi / denom))
+
+
+def purity(labels_true: np.ndarray, labels_pred: np.ndarray) -> float:
+    """Fraction of points in their predicted cluster's majority true class."""
+    C = contingency(labels_true, labels_pred)
+    return float(C.max(axis=0).sum() / C.sum())

@@ -47,6 +47,12 @@ class NormalizedOperator:
     dense:     optional zero-arg callable materializing A (n_pad, n_pad)
                exactly — used by the ``eigh`` backend; falls back to
                applying ``matvec`` columnwise when absent.
+    stats:     backend-reported build statistics (e.g. the engine's
+               map/shuffle/reduce counters); merged into ``est.info_``.
+               Either a dict or a zero-arg callable returning one — a
+               callable is re-evaluated at read time, so backends whose
+               counters keep moving after construction (shard-store
+               spills during the eigensolve) report live numbers.
     """
 
     matvec: Callable[[jax.Array], jax.Array]
@@ -57,6 +63,10 @@ class NormalizedOperator:
     mesh: Any
     schedule: Any = None
     dense: Optional[Callable[[], jax.Array]] = None
+    stats: Any = field(default_factory=dict)
+
+    def stats_snapshot(self) -> dict:
+        return dict(self.stats() if callable(self.stats) else self.stats)
 
     def unpermute(self, values: jax.Array) -> jax.Array:
         """Per-(padded-)row values -> original point order, padding dropped."""
@@ -66,9 +76,12 @@ class NormalizedOperator:
 
     def materialize(self) -> jax.Array:
         """Dense A — exact if the backend provided ``dense``, else assembled
-        one column at a time through ``matvec`` (small-n fallback)."""
+        through ``matvec`` applied to identity columns (small-n fallback).
+        ``lax.map`` keeps one column in flight (an (n, n) batch of matvecs
+        would defeat streaming backends) without unrolling n_pad calls into
+        the trace like the old Python loop did."""
         if self.dense is not None:
             return self.dense()
         eye = jnp.eye(self.n_pad, dtype=self.valid.dtype)
-        cols = [self.matvec(eye[:, j]) for j in range(self.n_pad)]
-        return jnp.stack(cols, axis=1)
+        cols = jax.lax.map(self.matvec, eye)   # row j = A e_j = column j
+        return cols.T

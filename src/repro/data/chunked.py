@@ -1,0 +1,87 @@
+"""Chunked point readers for the out-of-core engine.
+
+A reader is anything with ``reader[c] -> (rows, d) float32 chunk`` plus
+``n`` / ``dim`` / ``chunk_size`` / ``ranges``; map tasks address chunks
+randomly and repeatedly, so ``__getitem__`` must be pure (same chunk every
+call).  Two implementations:
+
+  ArrayChunks   view over an in-memory array — the oracle/agreement path,
+                where engine and dense backends must see identical data.
+  BlobChunks    deterministic per-chunk synthesis of the Gaussian-blobs
+                dataset: chunk c is regenerated from a chunk-local seed on
+                every access, so datasets far beyond RAM/device memory
+                never exist as one array anywhere.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def chunk_ranges(n: int, chunk_size: int) -> list[tuple[int, int]]:
+    """[(start, stop), ...] covering [0, n) in fixed-size chunks; the last
+    chunk is ragged when ``chunk_size`` does not divide ``n``.  Lives in
+    the (numpy-only) data layer so readers and the engine planner share it
+    without ``import repro.data`` dragging in jax."""
+    if n <= 0:
+        raise ValueError(f"n must be positive, got {n}")
+    c = max(1, min(int(chunk_size), n))
+    return [(r0, min(r0 + c, n)) for r0 in range(0, n, c)]
+
+
+class ArrayChunks:
+    """Chunk view over an (n, d) in-memory array."""
+
+    def __init__(self, x: np.ndarray, chunk_size: int):
+        self.x = np.ascontiguousarray(np.asarray(x, np.float32))
+        if self.x.ndim != 2:
+            raise ValueError(f"expected (n, d) points, got {self.x.shape}")
+        self.n, self.dim = self.x.shape
+        self.chunk_size = chunk_size
+        self.ranges = chunk_ranges(self.n, chunk_size)
+
+    def __len__(self) -> int:
+        return len(self.ranges)
+
+    def __getitem__(self, c: int) -> np.ndarray:
+        r0, r1 = self.ranges[c]
+        return self.x[r0:r1]
+
+
+class BlobChunks:
+    """k Gaussian blobs synthesized chunk-by-chunk (never materialized).
+
+    Matches the *distribution* of :func:`repro.data.synthetic.blobs` —
+    cluster centers come from the same seeded draw; the per-point noise is
+    chunk-local so any chunk is reproducible in isolation.  ``labels(c)``
+    returns the planted labels of chunk ``c``; ``all_labels()`` the full
+    (n,) vector (labels are 8-byte ints — always RAM-cheap next to the
+    points).
+    """
+
+    def __init__(self, n: int, k: int, chunk_size: int, dim: int = 2,
+                 spread: float = 0.15, seed: int = 0):
+        self.n, self.k, self.dim = n, k, dim
+        self.spread = spread
+        self.seed = seed
+        self.chunk_size = chunk_size
+        self.ranges = chunk_ranges(n, chunk_size)
+        self.centers = np.random.RandomState(seed).randn(k, dim) * 4.0
+
+    def __len__(self) -> int:
+        return len(self.ranges)
+
+    def _rng(self, c: int) -> np.random.RandomState:
+        return np.random.RandomState((self.seed * 1_000_003 + c + 1)
+                                     % (2**31 - 1))
+
+    def labels(self, c: int) -> np.ndarray:
+        r0, r1 = self.ranges[c]
+        return (np.arange(r0, r1) % self.k).astype(np.int64)
+
+    def all_labels(self) -> np.ndarray:
+        return (np.arange(self.n) % self.k).astype(np.int64)
+
+    def __getitem__(self, c: int) -> np.ndarray:
+        r0, r1 = self.ranges[c]
+        noise = self._rng(c).randn(r1 - r0, self.dim) * self.spread
+        return (self.centers[self.labels(c)] + noise).astype(np.float32)

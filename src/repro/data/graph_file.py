@@ -6,38 +6,124 @@
 
 The parsed graph feeds ``SpectralClustering(affinity="precomputed")``
 (adjacency-weight similarity) — the paper clusters graph vertices
-directly."""
+directly.
+
+The parser streams the file in ~1 MiB line batches and converts each batch
+to integers with one numpy tokenize/reshape instead of per-line Python
+tuple appends, so multi-GB edge lists parse without a Python-object blowup;
+:func:`iter_topology_edges` exposes the same batches as a generator for
+consumers (the out-of-core engine) that never want the whole edge array.
+"""
 from __future__ import annotations
+
+from typing import Iterator, Optional
 
 import numpy as np
 
+_READ_HINT = 1 << 20  # ~1 MiB of lines per batch
 
-def parse_topology(path: str) -> tuple[int, np.ndarray]:
-    """Returns (num_vertices, edges (m, 3) int64 [src, dst, weight])."""
-    n = 0
-    edges = []
+
+def _parse_tagged_batch(lines: list[str], width: int,
+                        default_last: int) -> np.ndarray:
+    """Tokenize same-tag lines ('e i j w' / 'v i l') in one numpy pass.
+
+    ``width`` counts the integer fields; the last one defaults to
+    ``default_last`` when omitted.  Falls back to a row loop only for
+    batches that mix both arities (rare; the fast reshape handles the
+    uniform case).
+    """
+    if not lines:
+        return np.empty((0, width), np.int64)
+    toks = np.array("".join(lines).split())
+    nrows = len(lines)
+    if toks.size == nrows * (width + 1):          # tag + all fields
+        return toks.reshape(nrows, width + 1)[:, 1:].astype(np.int64)
+    if toks.size == nrows * width:                # tag + fields-but-last
+        out = np.empty((nrows, width), np.int64)
+        out[:, :-1] = toks.reshape(nrows, width)[:, 1:].astype(np.int64)
+        out[:, -1] = default_last
+        return out
+    rows = []                                     # mixed arities
+    for ln in lines:
+        parts = ln.split()
+        vals = [int(p) for p in parts[1:width + 1]]
+        if len(vals) < width - 1:                 # only the last field may
+            raise ValueError(                     # be omitted
+                f"malformed topology line {ln.strip()!r}: expected "
+                f"{width} or {width - 1} fields after the tag")
+        vals += [default_last] * (width - len(vals))
+        rows.append(vals)
+    return np.asarray(rows, np.int64).reshape(-1, width)
+
+
+def _tag(line: str) -> str:
+    """First whitespace-separated token ('' for blank lines) — tags must
+    match exactly, so ' v 1 0' still parses and 'edge ...' stays ignored."""
+    parts = line.split(None, 1)
+    return parts[0] if parts else ""
+
+
+def _batched_lines(path: str) -> Iterator[tuple[np.ndarray, np.ndarray]]:
+    """Yields (vertex (b, 2) [id, label], edge (b, 3) [src, dst, w]) batches."""
     with open(path) as f:
-        for line in f:
-            parts = line.split()
-            if not parts:
-                continue
-            tag = parts[0]
-            if tag == "v":
-                n = max(n, int(parts[1]) + 1)
-            elif tag == "e":
-                i, j = int(parts[1]), int(parts[2])
-                w = int(parts[3]) if len(parts) > 3 else 1
-                edges.append((i, j, w))
-                n = max(n, i + 1, j + 1)
-    return n, np.asarray(edges, np.int64).reshape(-1, 3)
+        while True:
+            lines = f.readlines(_READ_HINT)
+            if not lines:
+                return
+            v_lines = [ln for ln in lines if _tag(ln) == "v"]
+            e_lines = [ln for ln in lines if _tag(ln) == "e"]
+            yield (_parse_tagged_batch(v_lines, 2, 0),
+                   _parse_tagged_batch(e_lines, 3, 1))
 
 
-def write_topology(path: str, n: int, edges: np.ndarray, label: int = 0):
+def iter_topology_edges(path: str) -> Iterator[np.ndarray]:
+    """Stream (b, 3) int64 [src, dst, weight] edge batches (for consumers
+    that never materialize the full edge list)."""
+    for _verts, edges in _batched_lines(path):
+        if len(edges):
+            yield edges
+
+
+def parse_topology(path: str, with_labels: bool = False):
+    """Returns (num_vertices, edges (m, 3) int64 [src, dst, weight]) — and,
+    with ``with_labels=True``, a third (num_vertices,) int64 vertex-label
+    array (0 for vertices the file never declares)."""
+    n = 0
+    edge_batches = []
+    vert_batches = []
+    for verts, edges in _batched_lines(path):
+        if len(verts):
+            n = max(n, int(verts[:, 0].max()) + 1)
+            if with_labels:
+                vert_batches.append(verts)
+        if len(edges):
+            n = max(n, int(edges[:, :2].max()) + 1)
+            edge_batches.append(edges)
+    all_edges = (np.concatenate(edge_batches) if edge_batches
+                 else np.empty((0, 3), np.int64))
+    if not with_labels:
+        return n, all_edges
+    labels = np.zeros(n, np.int64)
+    for verts in vert_batches:
+        labels[verts[:, 0]] = verts[:, 1]
+    return n, all_edges, labels
+
+
+def write_topology(path: str, n: int, edges: np.ndarray, label: int = 0,
+                   vertex_labels: Optional[np.ndarray] = None):
+    """Inverse of :func:`parse_topology`: vertex labels round-trip (the old
+    writer hardcoded ``v {i} 0``, losing them)."""
+    if vertex_labels is None:
+        vertex_labels = np.zeros(n, np.int64)
+    vertex_labels = np.asarray(vertex_labels, np.int64)
+    if vertex_labels.shape != (n,):
+        raise ValueError(
+            f"vertex_labels must be ({n},), got {vertex_labels.shape}")
     with open(path, "w") as f:
         f.write(f"t # {label}\n")
         for i in range(n):
-            f.write(f"v {i} 0\n")
-        for i, j, w in edges:
+            f.write(f"v {i} {vertex_labels[i]}\n")
+        for i, j, w in np.asarray(edges).reshape(-1, 3):
             f.write(f"e {i} {j} {w}\n")
 
 

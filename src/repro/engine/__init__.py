@@ -1,0 +1,26 @@
+# MapReduce-style out-of-core execution engine (the paper's Hadoop phase
+# structure as staged map/shuffle/reduce tasks over fixed-size chunks):
+# map computes top-t sparse similarity tiles with the Pallas RBF kernel,
+# shuffle merges tile output into symmetrized per-row-range CSR shards
+# (spilled to disk under a memory budget), reduce wires the shards into a
+# streaming NormalizedOperator for Lanczos plus a chunked mini-batch
+# k-means.  See API.md §repro.engine for the job-plan and shard contracts.
+from repro.engine.kmeans import streaming_kmeans
+from repro.engine.operator import ShardedCSRGraph, make_normalized_operator
+from repro.engine.plan import JobPlan, chunk_ranges, map_tiles, num_chunks
+from repro.engine.runner import JobResult, build_graph, run_job
+from repro.engine.store import ShardStore
+
+__all__ = [
+    "JobPlan",
+    "JobResult",
+    "ShardStore",
+    "ShardedCSRGraph",
+    "build_graph",
+    "chunk_ranges",
+    "make_normalized_operator",
+    "map_tiles",
+    "num_chunks",
+    "run_job",
+    "streaming_kmeans",
+]

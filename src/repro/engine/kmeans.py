@@ -1,0 +1,99 @@
+"""Streaming mini-batch k-means: phase 3 when the embedding is consumed
+row-chunk by row-chunk.
+
+Sculley's per-center learning-rate update (the same math as
+``core.kmeans.minibatch_kmeans``) with the mini-batch being one embedding
+chunk per round — the natural fit for the engine, where embedding rows
+arrive in row-range order and nothing requires holding all n rows hot.
+Host-side numpy throughout: the embedding is (chunk, k), far below any
+device-memory concern, and determinism comes from one seeded RandomState.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import numpy as np
+
+
+def _kmeanspp(y: np.ndarray, k: int, rng: np.random.RandomState,
+              w: Optional[np.ndarray] = None) -> np.ndarray:
+    """k-means++ (D^2 sampling) on a sample that fits in RAM."""
+    n = len(y)
+    w = np.ones(n) if w is None else np.asarray(w, np.float64)
+    centers = np.empty((k, y.shape[1]), np.float64)
+    centers[0] = y[rng.choice(n, p=w / w.sum())]
+    d2 = np.sum((y - centers[0]) ** 2, axis=1) * w
+    for i in range(1, k):
+        s = d2.sum()
+        # all remaining distances zero (coincident points / k > #distinct):
+        # fall back to weight-uniform draws instead of an invalid p vector
+        p = d2 / s if s > 0 else w / w.sum()
+        centers[i] = y[rng.choice(n, p=p)]
+        d2 = np.minimum(d2, np.sum((y - centers[i]) ** 2, axis=1) * w)
+    return centers
+
+
+def _sq_dists(y: np.ndarray, centers: np.ndarray) -> np.ndarray:
+    yy = np.sum(y * y, axis=1)[:, None]
+    cc = np.sum(centers * centers, axis=1)[None, :]
+    return np.maximum(yy + cc - 2.0 * (y @ centers.T), 0.0)
+
+
+def streaming_kmeans(get_chunk: Callable[[int], np.ndarray], nchunks: int,
+                     k: int, *, rounds: int = 50, seed: int = 0,
+                     sample_rows: int = 4096,
+                     valid_chunk: Optional[Callable[[int], np.ndarray]] = None
+                     ) -> tuple[np.ndarray, np.ndarray]:
+    """Cluster rows served chunk-by-chunk by ``get_chunk(c)``.
+
+    Three streaming passes over the chunks: (1) reservoir-style sample for
+    the k-means++ init, (2) ``rounds`` Sculley updates, each consuming one
+    chunk (in seeded random order) as the mini-batch, (3) a final
+    assignment pass.  ``valid_chunk(c)`` optionally masks rows (padding);
+    masked rows get label of their nearest center anyway but never move
+    centers.  Returns ``(labels (n,), centers (k, dim))``.
+    """
+    rng = np.random.RandomState(seed)
+
+    # Pass 1: sample rows across chunks for the ++ init.
+    sample, sample_w = [], []
+    per_chunk = max(k, sample_rows // max(nchunks, 1))
+    for c in range(nchunks):
+        y = np.asarray(get_chunk(c), np.float64)
+        w = np.ones(len(y)) if valid_chunk is None \
+            else np.asarray(valid_chunk(c), np.float64)
+        take = min(per_chunk, len(y))
+        idx = rng.choice(len(y), take, replace=False)
+        sample.append(y[idx])
+        sample_w.append(w[idx])
+    sample = np.concatenate(sample)
+    sample_w = np.concatenate(sample_w)
+    if sample_w.sum() <= 0:
+        sample_w = np.ones_like(sample_w)
+    centers = _kmeanspp(sample, k, rng, sample_w)
+
+    # Pass 2: Sculley rounds, one chunk per round.
+    counts = np.zeros(k)
+    order = rng.permutation(nchunks)
+    for r in range(rounds):
+        c = int(order[r % nchunks])
+        if r % nchunks == nchunks - 1:
+            order = rng.permutation(nchunks)
+        y = np.asarray(get_chunk(c), np.float64)
+        w = np.ones(len(y)) if valid_chunk is None \
+            else np.asarray(valid_chunk(c), np.float64)
+        a = np.argmin(_sq_dists(y, centers), axis=1)
+        onehot = np.zeros((len(y), k))
+        onehot[np.arange(len(y)), a] = w
+        bc = onehot.sum(axis=0)
+        bmean = (onehot.T @ y) / np.maximum(bc[:, None], 1.0)
+        counts += bc
+        lr = bc / np.maximum(counts, 1.0)
+        moved = bc > 0
+        centers[moved] += lr[moved, None] * (bmean[moved] - centers[moved])
+
+    # Pass 3: final assignment, chunk by chunk.
+    labels = [np.argmin(_sq_dists(np.asarray(get_chunk(c), np.float64),
+                                  centers), axis=1)
+              for c in range(nchunks)]
+    return np.concatenate(labels).astype(np.int32), centers

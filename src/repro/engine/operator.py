@@ -1,0 +1,114 @@
+"""Sharded-CSR graph + the streaming :class:`NormalizedOperator` reduce
+tasks build on top of it.
+
+The whole point of the engine: the similarity graph exists only as
+per-row-range CSR shards inside a (possibly spilled) shard store, and the
+eigensolve consumes it through a matvec that *streams* the shards — one
+shard resident at a time, never a dense (n, n) anything.  The host-side
+stream is lifted into the jitted Lanczos loop with ``jax.pure_callback``,
+so the existing ``lanczos``/``eigh`` backends work unchanged.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.cluster.operator import NormalizedOperator
+from repro.engine.plan import JobPlan
+from repro.engine.store import ShardStore
+
+
+@dataclass
+class ShardedCSRGraph:
+    """Symmetrized top-t similarity graph as per-row-range CSR shards.
+
+    ``store`` holds one ``shard/<c>`` entry per row range (indptr/indices/
+    data, see the store docstring); ``deg`` is the full degree vector
+    (small: (n,)), accumulated by the reduce tasks.
+    """
+
+    store: ShardStore
+    plan: JobPlan
+    deg: np.ndarray                      # (n,) float32 row sums of S
+    nnz: int
+    stats: Dict = field(default_factory=dict)
+
+    @property
+    def n(self) -> int:
+        return self.plan.n
+
+    def shard(self, c: int) -> Dict[str, np.ndarray]:
+        return self.store.get(f"shard/{c}")
+
+    def stats_snapshot(self) -> Dict:
+        """Static stage counters + live store counters (the store keeps
+        spilling/loading while consumers stream the shards) — the one
+        merge every stats reporter uses."""
+        return dict(self.stats, nnz=self.nnz,
+                    spilled_shards=len(self.store.spilled_keys()),
+                    **{f"store_{k}": v for k, v in self.store.stats.items()})
+
+    def matvec(self, v: np.ndarray) -> np.ndarray:
+        """S @ v streaming one shard at a time (the reduce-side matvec)."""
+        v = np.asarray(v)
+        y = np.zeros(self.n, np.float32)
+        for c, (r0, r1) in enumerate(self.plan.ranges):
+            sh = self.shard(c)
+            indptr, indices, data = sh["indptr"], sh["indices"], sh["data"]
+            prods = data * v[indices]
+            rows = np.repeat(np.arange(r1 - r0), np.diff(indptr))
+            y[r0:r1] = np.bincount(rows, weights=prods, minlength=r1 - r0)
+        return y
+
+    def to_dense(self) -> np.ndarray:
+        """Dense S — test/oracle path only; defeats the engine if used at
+        scale."""
+        S = np.zeros((self.n, self.n), np.float32)
+        for c, (r0, r1) in enumerate(self.plan.ranges):
+            sh = self.shard(c)
+            indptr, indices, data = sh["indptr"], sh["indices"], sh["data"]
+            rows = np.repeat(np.arange(r0, r1), np.diff(indptr))
+            S[rows, indices] = data
+        return S
+
+
+def make_normalized_operator(graph: ShardedCSRGraph, dtype=jnp.float32,
+                             mesh=None, pad_to: int | None = None
+                             ) -> NormalizedOperator:
+    """Wrap the sharded graph as the estimator's common operator interface:
+    ``A v = valid*v + D^{-1/2} S D^{-1/2} v`` with the S-matvec streaming
+    shards through a host callback.
+
+    ``pad_to`` rounds n_pad up (the estimator's mesh-divisibility
+    invariant — every other affinity pads to a device-count multiple, and
+    downstream shard_map stages require it); padding rows are zero-degree
+    and masked out of ``valid`` exactly like the dense backends'.
+    """
+    n = graph.n
+    n_pad = max(n, pad_to or n)
+    deg = jnp.zeros((n_pad,), dtype).at[:n].set(jnp.asarray(graph.deg, dtype))
+    inv_sqrt = jnp.where(deg > 0, 1.0 / jnp.sqrt(jnp.maximum(deg, 1e-12)), 0.0)
+    valid = (jnp.arange(n_pad) < n).astype(dtype)
+    out_shape = jax.ShapeDtypeStruct((n,), jnp.float32)
+
+    def host_matvec(v):
+        return graph.matvec(np.asarray(v, np.float32))
+
+    def matvec(v: jax.Array) -> jax.Array:
+        sv = jax.pure_callback(host_matvec, out_shape,
+                               (inv_sqrt * v)[:n].astype(jnp.float32))
+        sv = jnp.zeros((n_pad,), dtype).at[:n].set(sv.astype(dtype))
+        return valid * v + inv_sqrt * sv
+
+    def dense() -> jax.Array:
+        S = jnp.zeros((n_pad, n_pad), dtype).at[:n, :n].set(
+            jnp.asarray(graph.to_dense(), dtype))
+        return jnp.diag(valid) + S * (inv_sqrt[:, None] * inv_sqrt[None, :])
+
+    return NormalizedOperator(
+        matvec=matvec, valid=valid, inv_sqrt=inv_sqrt, n=n, n_pad=n_pad,
+        mesh=mesh, schedule=None, dense=dense, stats=graph.stats_snapshot)

@@ -1,0 +1,87 @@
+"""Job plans: the static description a driver hands to the engine.
+
+A :class:`JobPlan` is the analogue of the paper's Hadoop job configuration —
+it fixes the chunking of the n points, the top-t sparsity of the similarity
+graph, and the resource envelope (memory budget, spill directory), and the
+planner derives the static task lists from it: one **map** task per
+upper-triangle (i-chunk, j-chunk) tile, one **reduce** task per row-range
+shard.  Everything here is host-side and deterministic, so a job can be
+re-planned (and individual tasks re-executed) without any hidden state —
+the same property Hadoop gets from its immutable job config.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+from repro.data.chunked import chunk_ranges  # noqa: F401  (re-exported)
+
+
+def num_chunks(n: int, chunk_size: int) -> int:
+    return len(chunk_ranges(n, chunk_size))
+
+
+def map_tiles(nc: int) -> list[tuple[int, int]]:
+    """Upper-triangle tile list (i <= j): each unordered chunk pair is
+    computed once (the paper's Alg. 4.2 triangle), and the map task emits
+    candidates for both row ranges."""
+    return [(i, j) for i in range(nc) for j in range(i, nc)]
+
+
+@dataclass(frozen=True)
+class JobPlan:
+    """Static configuration of one out-of-core clustering job.
+
+    n:              number of points.
+    chunk_size:     rows per chunk (clamped to [1, n] by the planner).
+    t:              top-t neighbours kept per row before symmetrization.
+    k:              number of clusters / embedding dims.
+    sigma:          RBF bandwidth; None = median heuristic on a sample.
+    memory_budget:  shard-store RAM budget in bytes; None = unlimited
+                    (nothing spills).
+    spill_dir:      where spilled shards go; None = fresh temp dir.
+    lanczos_steps:  None = max(4k, 32), capped below n.
+    kmeans_rounds:  streaming mini-batch rounds (one chunk per round).
+    seed:           base seed for Lanczos start vector and k-means init.
+    """
+
+    n: int
+    chunk_size: int = 1024
+    t: int = 16
+    k: int = 8
+    sigma: Optional[float] = None
+    memory_budget: Optional[int] = None
+    spill_dir: Optional[str] = None
+    lanczos_steps: Optional[int] = None
+    kmeans_rounds: int = 50
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.n <= 0:
+            raise ValueError(f"n must be positive, got {self.n}")
+        if self.t <= 0:
+            raise ValueError(f"t must be positive, got {self.t}")
+        if self.memory_budget is not None and self.memory_budget <= 0:
+            raise ValueError(
+                f"memory_budget must be positive bytes or None, "
+                f"got {self.memory_budget}")
+
+    @property
+    def ranges(self) -> list[tuple[int, int]]:
+        return chunk_ranges(self.n, self.chunk_size)
+
+    @property
+    def nchunks(self) -> int:
+        return len(self.ranges)
+
+    @property
+    def tiles(self) -> list[tuple[int, int]]:
+        return map_tiles(self.nchunks)
+
+    @property
+    def t_eff(self) -> int:
+        return int(min(self.t, self.n))
+
+    def num_lanczos_steps(self) -> int:
+        m = self.lanczos_steps or max(4 * self.k, 32)
+        return int(max(1, min(m, self.n - 1))) if self.n > 1 else 1

@@ -1,0 +1,128 @@
+"""The job runner: executes a :class:`JobPlan` as staged map/shuffle/reduce
+tasks and drives the eigensolve + streaming k-means off the resulting
+shards — ``engine.run_job(plan, reader)`` is the out-of-core analogue of
+``SpectralClustering.fit``.
+
+The runner is deliberately a dumb sequential scheduler: tasks within a
+stage are independent (Hadoop would fan them out over workers; here they
+share one host and the device executes the Pallas tiles), and all state
+between stages lives in the ShardStore, so the working set is bounded by
+the memory budget regardless of n.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import kmeans as km
+from repro.core import lanczos as lz
+from repro.core import similarity as sim
+from repro.engine import kmeans as skm
+from repro.engine import tasks
+from repro.engine.operator import (ShardedCSRGraph, make_normalized_operator)
+from repro.engine.plan import JobPlan
+from repro.engine.store import ShardStore
+
+
+@dataclass
+class JobResult:
+    labels: np.ndarray           # (n,) int32
+    embedding: np.ndarray        # (n, k) row-normalized
+    eigenvalues: np.ndarray      # (k,) smallest of L_sym, ascending
+    centers: np.ndarray          # (k, k)
+    sigma: float
+    graph: ShardedCSRGraph
+    stats: Dict = field(default_factory=dict)
+
+
+def _resolve_sigma(reader, plan: JobPlan, sample_rows: int = 1024) -> float:
+    """Median-distance heuristic on a streamed sample (first rows of the
+    leading chunks; the heuristic only needs a representative handful)."""
+    if plan.sigma is not None:
+        return float(plan.sigma)
+    rows, have = [], 0
+    for c in range(plan.nchunks):
+        x = np.asarray(reader[c])
+        rows.append(x)
+        have += len(x)
+        if have >= sample_rows:
+            break
+    xs = np.concatenate(rows)[:sample_rows]
+    return float(sim.median_sigma(jnp.asarray(xs)))
+
+
+def build_graph(reader, plan: JobPlan,
+                store: Optional[ShardStore] = None
+                ) -> tuple[ShardedCSRGraph, float]:
+    """Run the map + shuffle + reduce stages; returns the sharded graph
+    (with per-stage stats attached) and the resolved sigma."""
+    store = store or ShardStore(memory_budget=plan.memory_budget,
+                                spill_dir=plan.spill_dir)
+    sigma = _resolve_sigma(reader, plan)
+    t0 = time.perf_counter()
+
+    tiles = plan.tiles
+    for (i, j) in tiles:
+        tasks.run_map_task(reader, sigma, plan, i, j, store)
+    t_map = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    for c in range(plan.nchunks):
+        tasks.run_shuffle_task(plan, c, store)
+    t_shuffle = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    deg = np.zeros(plan.n, np.float32)
+    nnz = 0
+    for c, (r0, r1) in enumerate(plan.ranges):
+        out = tasks.run_reduce_task(plan, c, store)
+        deg[r0:r1] = out["deg"]
+        nnz += out["nnz"]
+    t_reduce = time.perf_counter() - t0
+
+    # static stage counters only — live store numbers are merged in by
+    # ShardedCSRGraph.stats_snapshot() at read time
+    stats = {
+        "map_tasks": len(tiles), "shuffle_tasks": plan.nchunks,
+        "reduce_tasks": plan.nchunks, "chunks": plan.nchunks,
+        "chunk_size": plan.chunk_size, "t": plan.t_eff,
+        "map_s": round(t_map, 4), "shuffle_s": round(t_shuffle, 4),
+        "reduce_s": round(t_reduce, 4),
+    }
+    return ShardedCSRGraph(store=store, plan=plan, deg=deg, nnz=nnz,
+                           stats=stats), sigma
+
+
+def run_job(plan: JobPlan, reader) -> JobResult:
+    """Full out-of-core pipeline: staged graph build, shard-streaming
+    Lanczos, chunked mini-batch k-means.  ``reader[c]`` must yield the
+    (rows, d) point chunk for range ``plan.ranges[c]``."""
+    graph, sigma = build_graph(reader, plan)
+    op = make_normalized_operator(graph)
+
+    key = jax.random.PRNGKey(plan.seed)
+    _, k_lan, _k_km = jax.random.split(key, 3)
+    steps = plan.num_lanczos_steps()
+    t0 = time.perf_counter()
+    state = lz.lanczos(op.matvec, plan.n, steps, k_lan)
+    evals, Z = lz.topk_of_shifted(state, plan.k)
+    t_eig = time.perf_counter() - t0
+
+    Y = np.asarray(km.normalize_rows(Z))
+    ranges = plan.ranges
+    t0 = time.perf_counter()
+    labels, centers = skm.streaming_kmeans(
+        lambda c: Y[ranges[c][0]:ranges[c][1]], plan.nchunks, plan.k,
+        rounds=plan.kmeans_rounds, seed=plan.seed)
+    t_km = time.perf_counter() - t0
+
+    stats = dict(graph.stats_snapshot(), lanczos_steps=steps,
+                 eigensolve_s=round(t_eig, 4), kmeans_s=round(t_km, 4))
+    return JobResult(labels=labels, embedding=Y,
+                     eigenvalues=np.asarray(evals), centers=centers,
+                     sigma=sigma, graph=graph, stats=stats)

@@ -1,0 +1,141 @@
+"""Spillable shard store: the engine's HDFS stand-in.
+
+Every intermediate of the map/shuffle/reduce pipeline — map-task candidate
+blocks, shuffle mirror partials, final CSR shards — lives in one
+:class:`ShardStore`: a key -> {name: ndarray} map with an LRU RAM cache
+bounded by ``memory_budget`` bytes.  When a put/get pushes the resident set
+over budget, least-recently-used entries are written to ``spill_dir`` as
+``.npz`` files and dropped from RAM; a later ``get`` transparently reloads
+them.  With ``memory_budget=None`` nothing ever spills (pure in-RAM mode).
+
+On-disk format (the shard-store contract, see API.md): one
+``<mangled-key>.npz`` per spilled entry, containing exactly the named
+arrays that were ``put``; keys mangle ``/`` to ``__``.  CSR shards use the
+names ``indptr`` (int64, rows+1), ``indices`` (int64, nnz) and ``data``
+(float32, nnz).
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+import weakref
+from collections import OrderedDict
+from typing import Dict, Iterator, Optional
+
+import numpy as np
+
+
+def _nbytes(arrays: Dict[str, np.ndarray]) -> int:
+    return int(sum(a.nbytes for a in arrays.values()))
+
+
+class ShardStore:
+    def __init__(self, memory_budget: Optional[int] = None,
+                 spill_dir: Optional[str] = None):
+        self.memory_budget = memory_budget
+        self._own_dir = spill_dir is None
+        self.spill_dir = spill_dir or tempfile.mkdtemp(prefix="repro-shards-")
+        os.makedirs(self.spill_dir, exist_ok=True)
+        if self._own_dir:
+            # a store-created temp dir must not outlive the store: clean it
+            # up at GC / interpreter exit (caller-supplied dirs are the
+            # caller's to manage)
+            self._finalizer = weakref.finalize(
+                self, shutil.rmtree, self.spill_dir, ignore_errors=True)
+        self._ram: "OrderedDict[str, Dict[str, np.ndarray]]" = OrderedDict()
+        self._disk: Dict[str, str] = {}          # key -> npz path
+        self.ram_bytes = 0
+        self.stats = {
+            "puts": 0, "gets": 0, "spills": 0, "loads": 0,
+            "bytes_spilled": 0, "peak_ram_bytes": 0,
+        }
+
+    # -- core ops -----------------------------------------------------------
+
+    def put(self, key: str, arrays: Dict[str, np.ndarray]) -> None:
+        arrays = {name: np.asarray(a) for name, a in arrays.items()}
+        self.delete(key)
+        self._ram[key] = arrays
+        self.ram_bytes += _nbytes(arrays)
+        self.stats["puts"] += 1
+        self.stats["peak_ram_bytes"] = max(self.stats["peak_ram_bytes"],
+                                           self.ram_bytes)
+        self._enforce_budget()
+
+    def get(self, key: str) -> Dict[str, np.ndarray]:
+        self.stats["gets"] += 1
+        if key in self._ram:
+            self._ram.move_to_end(key)           # LRU touch
+            return self._ram[key]
+        path = self._disk.get(key)
+        if path is None:
+            raise KeyError(f"shard store has no entry {key!r}")
+        with np.load(path) as z:
+            arrays = {name: z[name] for name in z.files}
+        self.stats["loads"] += 1
+        self._ram[key] = arrays
+        self.ram_bytes += _nbytes(arrays)
+        self.stats["peak_ram_bytes"] = max(self.stats["peak_ram_bytes"],
+                                           self.ram_bytes)
+        self._enforce_budget(keep=key)
+        return arrays
+
+    def delete(self, key: str) -> None:
+        arrays = self._ram.pop(key, None)
+        if arrays is not None:
+            self.ram_bytes -= _nbytes(arrays)
+        path = self._disk.pop(key, None)
+        if path is not None and os.path.exists(path):
+            os.remove(path)
+
+    def __contains__(self, key: str) -> bool:
+        return key in self._ram or key in self._disk
+
+    def keys(self, prefix: str = "") -> Iterator[str]:
+        seen = set(self._ram) | set(self._disk)
+        return iter(sorted(k for k in seen if k.startswith(prefix)))
+
+    def spilled_keys(self) -> tuple[str, ...]:
+        """Entries currently resident on disk only (spilled and not since
+        reloaded)."""
+        return tuple(sorted(k for k in self._disk if k not in self._ram))
+
+    # -- spilling -----------------------------------------------------------
+
+    def _path(self, key: str) -> str:
+        return os.path.join(self.spill_dir, key.replace("/", "__") + ".npz")
+
+    def _spill_one(self, key: str) -> None:
+        arrays = self._ram.pop(key)
+        nbytes = _nbytes(arrays)
+        self.ram_bytes -= nbytes
+        if key not in self._disk:                # already on disk if reloaded
+            path = self._path(key)
+            np.savez(path, **arrays)
+            self._disk[key] = path
+            self.stats["bytes_spilled"] += nbytes
+        self.stats["spills"] += 1
+
+    def _enforce_budget(self, keep: Optional[str] = None) -> None:
+        if self.memory_budget is None:
+            return
+        while self.ram_bytes > self.memory_budget and self._ram:
+            victim = next(iter(self._ram))       # least recently used
+            if victim == keep and len(self._ram) > 1:
+                self._ram.move_to_end(victim)
+                victim = next(iter(self._ram))
+            self._spill_one(victim)
+
+    def close(self) -> None:
+        """Drop everything (RAM and spill files; removes the spill dir only
+        when the store created it — also triggered automatically when a
+        store-owned dir's ShardStore is garbage collected)."""
+        for key in list(self._disk):
+            path = self._disk.pop(key)
+            if os.path.exists(path):
+                os.remove(path)
+        self._ram.clear()
+        self.ram_bytes = 0
+        if self._own_dir:
+            self._finalizer()     # rmtree now; disarms the GC finalizer

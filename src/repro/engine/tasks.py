@@ -1,0 +1,144 @@
+"""The engine's three task kinds — map, shuffle-merge, reduce — as plain
+deterministic functions over a :class:`~repro.engine.store.ShardStore`.
+
+Stage layout (the paper's Hadoop phases, chunk-granular):
+
+  map        one task per upper-triangle (i, j) chunk tile: compute the
+             RBF tile with the Pallas kernel, reduce it on-device to
+             per-row top-t candidates for row range i (and, mirrored,
+             for row range j), emit candidate blocks keyed by the
+             destination row range               -> ``cand/<c>/<i>-<j>``
+  shuffle    one merge task per row range: fold all candidate blocks
+             into the final per-row top-t, then re-emit the transposed
+             triplets toward each neighbour's row range (the
+             symmetrization shuffle)             -> ``topt/<c>``,
+                                                    ``mirror/<dest>/<c>``
+  reduce     one task per row range: max-merge the row's own top-t with
+             every incoming mirror block into a sorted CSR shard
+                                                 -> ``shard/<c>``
+
+All intermediates flow through the store, so they count against the memory
+budget and spill exactly like Hadoop's map-side spill files.  Map tasks
+are pure (re-running one just overwrites its candidate blocks); shuffle
+and reduce tasks *consume* their inputs to keep the working set bounded,
+so re-executing one after a failure means re-running its producing stage
+for that row range first — the same recovery granularity Hadoop gets by
+re-fetching map output.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.engine.plan import JobPlan
+from repro.engine.store import ShardStore
+from repro.kernels import ops as kops
+from repro.kernels import topt
+
+
+def _chunk_of(cols: np.ndarray, plan: JobPlan) -> np.ndarray:
+    c = max(1, min(int(plan.chunk_size), plan.n))
+    return cols // c
+
+
+def run_map_task(reader, sigma, plan: JobPlan, i: int, j: int,
+                 store: ShardStore) -> None:
+    """Compute tile (i, j) (i <= j) and emit top-t candidate blocks."""
+    t = plan.t_eff
+    xi = np.asarray(reader[i])
+    xj = xi if i == j else np.asarray(reader[j])
+    tile = kops.rbf_similarity(xi, xj, sigma)
+    vals, cols = topt.tile_topt(tile, plan.ranges[j][0], t)
+    store.put(f"cand/{i}/{i}-{j}", {"vals": vals, "cols": cols})
+    if i != j:
+        vals_t, cols_t = topt.tile_topt(tile.T, plan.ranges[i][0], t)
+        store.put(f"cand/{j}/{i}-{j}", {"vals": vals_t, "cols": cols_t})
+
+
+def run_shuffle_task(plan: JobPlan, c: int, store: ShardStore) -> None:
+    """Merge row range ``c``'s candidate blocks into its final top-t and
+    emit the mirror triplets that symmetrize the graph."""
+    # fold candidate blocks one at a time (running width <= 2t): the
+    # shuffle working set stays O(chunk * t) under any n, and each block
+    # is dropped from the store the moment it is folded — concatenating
+    # all blocks first would pin an O(n * t) buffer regardless of the
+    # memory budget
+    vals = cols = None
+    for k in list(store.keys(f"cand/{c}/")):
+        b = store.get(k)
+        if vals is None:
+            vals, cols = b["vals"], b["cols"]
+        else:
+            vals = np.concatenate([vals, b["vals"]], axis=1)
+            cols = np.concatenate([cols, b["cols"]], axis=1)
+            vals, cols = topt.merge_topt(vals, cols, plan.t_eff)
+        store.delete(k)
+    vals, cols = topt.merge_topt(vals, cols, plan.t_eff)
+
+    r0, r1 = plan.ranges[c]
+    rows = np.repeat(np.arange(r0, r1, dtype=np.int64), vals.shape[1])
+    cols = cols.reshape(-1)
+    vals = vals.reshape(-1)
+    keep = cols >= 0                      # drop the ragged-tile sentinels
+    rows, cols, vals = rows[keep], cols[keep], vals[keep]
+    store.put(f"topt/{c}", {"rows": rows, "cols": cols,
+                            "vals": vals.astype(np.float32)})
+
+    # Symmetrization shuffle: ship each kept entry to its column's row range
+    # as a transposed triplet (max-merged there by the reduce task).
+    dest = _chunk_of(cols, plan)
+    order = np.argsort(dest, kind="stable")
+    rows, cols, vals, dest = rows[order], cols[order], vals[order], dest[order]
+    bounds = np.flatnonzero(np.diff(dest)) + 1
+    dests = dest[np.r_[0, bounds]] if len(dest) else np.empty(0, np.int64)
+    groups = zip(np.split(cols, bounds), np.split(rows, bounds),
+                 np.split(vals, bounds))
+    for (m_rows, m_cols, m_vals), d in zip(groups, dests):
+        store.put(f"mirror/{int(d)}/{c}",
+                  {"rows": m_rows, "cols": m_cols,
+                   "vals": m_vals.astype(np.float32)})
+
+
+def _dedupe_max(rows: np.ndarray, cols: np.ndarray, vals: np.ndarray):
+    """Lexsort (row, col) triplets and max-merge duplicates — the
+    max(S, S^T) symmetrization on whatever is resident."""
+    order = np.lexsort((cols, rows))
+    rows, cols, vals = rows[order], cols[order], vals[order]
+    if len(rows):
+        new = np.r_[True, (np.diff(rows) != 0) | (np.diff(cols) != 0)]
+        starts = np.flatnonzero(new)
+        rows, cols = rows[starts], cols[starts]
+        vals = np.maximum.reduceat(vals, starts)
+    return rows, cols, vals
+
+
+def run_reduce_task(plan: JobPlan, c: int, store: ShardStore) -> dict:
+    """Max-merge row range ``c``'s top-t with all incoming mirrors into a
+    sorted CSR shard ``shard/<c>``.  Returns {"nnz": ..., "deg": (rows,)}.
+
+    Mirrors are folded one block at a time (dedupe after each) so the
+    resident triplet set never exceeds the final shard size plus one
+    block, even when data skew routes most mirrors to one row range.
+    """
+    r0, r1 = plan.ranges[c]
+    nrows = r1 - r0
+    rows = cols = vals = None
+    for k in [f"topt/{c}"] + list(store.keys(f"mirror/{c}/")):
+        b = store.get(k)
+        if rows is None:
+            rows, cols, vals = b["rows"], b["cols"], b["vals"]
+        else:
+            rows = np.concatenate([rows, b["rows"]])
+            cols = np.concatenate([cols, b["cols"]])
+            vals = np.concatenate([vals, b["vals"]])
+        store.delete(k)
+        rows, cols, vals = _dedupe_max(rows, cols, vals)
+
+    rows_local = rows - r0
+    counts = np.bincount(rows_local, minlength=nrows)
+    indptr = np.zeros(nrows + 1, np.int64)
+    np.cumsum(counts, out=indptr[1:])
+    data = vals.astype(np.float32)
+    store.put(f"shard/{c}", {"indptr": indptr, "indices": cols.astype(np.int64),
+                             "data": data})
+    deg = np.bincount(rows_local, weights=data, minlength=nrows)
+    return {"nnz": int(len(data)), "deg": deg.astype(np.float32)}

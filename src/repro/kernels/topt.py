@@ -1,0 +1,60 @@
+"""Tile-level top-t selection for the out-of-core map stage.
+
+A map task computes one (rows, cols) similarity tile with the Pallas RBF
+kernel and immediately reduces it to the per-row top-t candidates (value +
+*global* column id) before anything leaves the device — the tile itself is
+never shipped to the shuffle.  Candidate blocks are padded to a fixed width
+``t`` with value -1 / column -1 (RBF similarities are positive, so the
+sentinel can never win a merge), which keeps every shuffle record the same
+shape regardless of ragged edge chunks.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_PAD_VAL = -1.0
+_PAD_COL = -1
+
+
+@functools.partial(jax.jit, static_argnames=("t",))
+def _tile_topt(tile: jax.Array, t: int):
+    return jax.lax.top_k(tile, t)
+
+
+def tile_topt(tile, col0: int, t: int) -> tuple[np.ndarray, np.ndarray]:
+    """Per-row top-t of one tile. ``tile`` is (rows, cols) similarities,
+    ``col0`` the tile's global column offset.  Returns host arrays
+    ``(vals (rows, t) f32, cols (rows, t) i64)`` padded with the -1
+    sentinels when the tile has fewer than ``t`` columns."""
+    tile = jnp.asarray(tile)
+    rows, cols = tile.shape
+    te = int(min(t, cols))
+    vals, idx = _tile_topt(tile, te)
+    vals = np.asarray(vals, np.float32)
+    # global ids in host int64: device ints are 32-bit without jax x64,
+    # which would wrap past 2^31 rows
+    gcols = np.asarray(idx, np.int64) + col0
+    if te < t:
+        vals = np.concatenate(
+            [vals, np.full((rows, t - te), _PAD_VAL, np.float32)], axis=1)
+        gcols = np.concatenate(
+            [gcols, np.full((rows, t - te), _PAD_COL, np.int64)], axis=1)
+    return vals, gcols
+
+
+def merge_topt(vals: np.ndarray, cols: np.ndarray, t: int
+               ) -> tuple[np.ndarray, np.ndarray]:
+    """Reduce-side merge: candidates (rows, c) from several map tasks ->
+    final per-row top-t, sentinel-padded like :func:`tile_topt`."""
+    rows, c = vals.shape
+    if c > t:
+        part = np.argpartition(-vals, t - 1, axis=1)[:, :t]
+        vals = np.take_along_axis(vals, part, axis=1)
+        cols = np.take_along_axis(cols, part, axis=1)
+    order = np.argsort(-vals, axis=1, kind="stable")
+    return (np.take_along_axis(vals, order, axis=1),
+            np.take_along_axis(cols, order, axis=1))

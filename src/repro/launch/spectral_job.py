@@ -8,6 +8,8 @@ Each pipeline phase is a registry-selected backend of
     PYTHONPATH=src python -m repro.launch.spectral_job --rings 512 --k 2 \\
         --affinity compact --eigensolver lanczos --assigner minibatch
     PYTHONPATH=src python -m repro.launch.spectral_job --graph topo.txt --k 8
+    PYTHONPATH=src python -m repro.launch.spectral_job --blobs 4096 --k 3 \\
+        --engine mapreduce --chunk-size 512 --memory-budget 1048576
 """
 from __future__ import annotations
 
@@ -41,7 +43,17 @@ def main(argv=None):
                     help="deprecated alias: triangular/full -> "
                          "--affinity triangular/dense")
     ap.add_argument("--sparsify-t", type=int, default=None,
-                    help="top-t per row for --affinity knn-topt")
+                    help="top-t per row for --affinity knn-topt / ooc-topt")
+    ap.add_argument("--engine", default=None, choices=["mapreduce"],
+                    help="run phase 1 out-of-core through repro.engine "
+                         "(forces --affinity ooc-topt)")
+    ap.add_argument("--chunk-size", type=int, default=1024,
+                    help="rows per engine chunk (--engine mapreduce)")
+    ap.add_argument("--memory-budget", type=int, default=None,
+                    help="engine shard-store RAM budget in bytes; shards "
+                         "beyond it spill to --spill-dir")
+    ap.add_argument("--spill-dir", default=None,
+                    help="engine spill directory (default: temp dir)")
     ap.add_argument("--lanczos-steps", type=int, default=48)
     ap.add_argument("--ckpt-dir", default=None)
     args = ap.parse_args(argv)
@@ -49,6 +61,11 @@ def main(argv=None):
     affinity = args.affinity
     if args.mode is not None:
         affinity = {"triangular": "triangular", "full": "dense"}[args.mode]
+    if args.engine:
+        if args.graph:
+            ap.error("--engine applies to point datasets; --graph feeds the "
+                     "precomputed affinity directly")
+        affinity = "ooc-topt"
 
     mesh = mesh_utils.local_mesh("rows")
     mgr = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
@@ -56,7 +73,8 @@ def main(argv=None):
         k=args.k, affinity="precomputed" if args.graph else affinity,
         eigensolver=args.eigensolver, assigner=args.assigner,
         lanczos_steps=args.lanczos_steps, sparsify_t=args.sparsify_t,
-        mesh=mesh)
+        chunk_size=args.chunk_size, memory_budget=args.memory_budget,
+        spill_dir=args.spill_dir, mesh=mesh)
 
     t0 = time.time()
     if args.graph:
@@ -81,6 +99,15 @@ def main(argv=None):
           f"time={dt:.2f}s")
     print(f"[spectral] eigenvalues: {np.asarray(est.eigenvalues_)}")
     print(f"[spectral] cluster sizes: {sizes}")
+    eng = est.info_.get("engine")
+    if eng:
+        print(f"[engine] map={eng['map_tasks']} shuffle={eng['shuffle_tasks']} "
+              f"reduce={eng['reduce_tasks']} chunks={eng['chunks']} "
+              f"nnz={eng['nnz']}")
+        print(f"[engine] spilled_shards={eng['spilled_shards']} "
+              f"spills={eng['store_spills']} "
+              f"bytes_spilled={eng['store_bytes_spilled']} "
+              f"peak_ram={eng['store_peak_ram_bytes']}")
     if truth is not None:
         from itertools import permutations
         k = args.k

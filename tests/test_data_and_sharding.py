@@ -21,6 +21,48 @@ def test_topology_roundtrip(tmp_path):
                                   np.sort(edges[:, :2], axis=0))
 
 
+def test_topology_vertex_labels_roundtrip(tmp_path):
+    edges, labels = synthetic.synthetic_graph(n=50, n_edges=120, k=3, seed=1)
+    path = str(tmp_path / "topo.txt")
+    graph_file.write_topology(path, 50, edges, vertex_labels=labels)
+    n, back, labels_back = graph_file.parse_topology(path, with_labels=True)
+    assert n == 50
+    np.testing.assert_array_equal(labels_back, labels)
+    np.testing.assert_array_equal(back, edges)
+
+
+def test_topology_streaming_batches_and_weightless_edges(tmp_path):
+    path = str(tmp_path / "topo.txt")
+    with open(path, "w") as f:
+        f.write("t # 0\n")
+        for i in range(7):
+            f.write(f"v {i} {i % 2}\n")
+        f.write("e 0 1\n")            # weight omitted -> 1
+        f.write("e 1 2 5\n")
+        f.write("e 5 6 2\n")
+    n, edges, labels = graph_file.parse_topology(path, with_labels=True)
+    assert n == 7
+    np.testing.assert_array_equal(edges, [[0, 1, 1], [1, 2, 5], [5, 6, 2]])
+    np.testing.assert_array_equal(labels, np.arange(7) % 2)
+    batches = list(graph_file.iter_topology_edges(path))
+    np.testing.assert_array_equal(np.concatenate(batches), edges)
+
+
+def test_topology_parser_tag_matching(tmp_path):
+    # tags match the whole first token: leading whitespace is tolerated,
+    # unknown tags starting with v/e are NOT misparsed as vertices/edges
+    path = str(tmp_path / "topo.txt")
+    with open(path, "w") as f:
+        f.write(" v 0 1\n")          # leading space, still a vertex
+        f.write("edge 7 8 9\n")      # unknown tag, ignored
+        f.write("vertex 9 9\n")      # unknown tag, ignored
+        f.write("e 0 1 3\n")
+    n, edges, labels = graph_file.parse_topology(path, with_labels=True)
+    assert n == 2
+    np.testing.assert_array_equal(edges, [[0, 1, 3]])
+    np.testing.assert_array_equal(labels, [1, 0])
+
+
 def test_adjacency_symmetric():
     edges, _ = synthetic.synthetic_graph(n=40, n_edges=100, k=2, seed=2)
     A = graph_file.adjacency_dense(40, edges)
