@@ -20,16 +20,26 @@ Prints ``name,us_per_call,derived`` CSV rows.
                     reference problem, (b) clustering an n whose dense
                     (n, n) similarity would not fit the shard-store
                     budget — shards demonstrably spilled to disk.
+  eigensolver_sweep lanczos vs block-lanczos vs chebdav on the dense and
+                    out-of-core paths at n=4096: matrix passes per
+                    eigenpair, wall time, shard-store loads per
+                    eigensolve, and chebdav-vs-eigh label agreement on
+                    the paper config.  Writes BENCH_eigensolvers.json.
+
+Run ``python benchmarks/run.py [mode ...]`` — no mode runs the full
+default suite; ``eigensolver_sweep`` runs just the sweep.
 """
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.cluster import SpectralClustering
+from repro.cluster import SpectralClustering, ari
 from repro.core import kmeans as km
 from repro.core import lanczos as lz
 from repro.core import laplacian as lp
@@ -176,6 +186,13 @@ def kernels():
     us_r, _ = _timeit(lambda: ref.block_matvec(A, v))
     row("kernels/block_matvec_ref", us_r, "jnp oracle")
 
+    V8 = jax.random.normal(jax.random.PRNGKey(6), (1024, 8))
+    us, _ = _timeit(lambda: ops.block_matmat(A, V8, interpret=True))
+    row("kernels/block_matmat_b8_interp", us,
+        f"{2 * 8 * 1024**2 / us / 1e3:.2f} GFLOP/s (8 vectors, one A pass)")
+    us_r, _ = _timeit(lambda: ref.block_matmat(A, V8))
+    row("kernels/block_matmat_b8_ref", us_r, "jnp oracle")
+
     p = jax.random.normal(jax.random.PRNGKey(4), (2048, 16))
     c = jax.random.normal(jax.random.PRNGKey(5), (16, 16))
     us, _ = _timeit(lambda: ops.kmeans_assign(p, c, interpret=True))
@@ -231,15 +248,136 @@ def engine_ooc(n_ref: int = 512, n_big: int = 4096, k: int = 3):
     assert st["store_bytes_spilled"] > 0, "budget was meant to force spills"
 
 
-def main() -> None:
+def eigensolver_sweep(n: int = 4096, k: int = 3, block_size: int = 8,
+                      out_json: str = "BENCH_eigensolvers.json"):
+    """lanczos vs block-lanczos vs chebdav: matrix passes per eigenpair,
+    wall time, and (out-of-core) shard-store loads per eigensolve.
+
+    The block contract this validates: at block width b the same Krylov
+    dimension costs ~1/b the matrix passes, and on the engine path each
+    pass pulls every CSR shard from the (spilling) store once per BLOCK
+    instead of once per vector — so store loads per eigensolve drop by
+    the same factor.
+    """
+    from repro import engine
+    from repro.cluster.affinity import AFFINITIES
+    from repro.cluster.eigensolvers import EIGENSOLVERS
+    from repro.data.chunked import BlobChunks
+    from repro.distrib import mesh_utils
+
+    results: dict = {"n": n, "k": k, "block_size": block_size, "rows": []}
+    solvers = ("lanczos", "block-lanczos", "chebdav")
+
+    def solve(est, op, path, extra=None):
+        key = jax.random.PRNGKey(1)
+        t0 = time.perf_counter()
+        evals, Z, info = EIGENSOLVERS.get(est.eigensolver)(est, op, key)
+        jax.block_until_ready(Z)
+        wall = time.perf_counter() - t0
+        rec = {"path": path, "solver": est.eigensolver,
+               "matrix_passes": int(info["matrix_passes"]),
+               "passes_per_eigenpair": info["matrix_passes"] / est.k,
+               "wall_s": round(wall, 4),
+               "eigenvalues": np.asarray(evals).tolist()}
+        rec.update(extra or {})
+        results["rows"].append(rec)
+        row(f"eigsweep/{path}_{est.eigensolver}", wall * 1e6,
+            f"passes={rec['matrix_passes']} "
+            f"per_pair={rec['passes_per_eigenpair']:.1f}")
+        return rec
+
+    def est_for(solver):
+        return SpectralClustering(
+            k=k, eigensolver=solver, sigma=1.0, lanczos_steps=64,
+            block_size=block_size if solver == "block-lanczos" else None)
+
+    # ---- dense in-memory path ------------------------------------------
+    pts, _ = synthetic.blobs(n, k, dim=4, spread=0.8, seed=0)
+    mesh = mesh_utils.local_mesh("rows")
+    op = AFFINITIES.get("dense")(est_for("lanczos"), jnp.asarray(pts),
+                                 jnp.asarray(1.0), mesh)
+    dense_recs = {s: solve(est_for(s), op, "dense") for s in solvers}
+
+    # ---- out-of-core engine path (budget forces spills) ----------------
+    budget = 1 << 19
+    reader = BlobChunks(n, k, chunk_size=512, dim=4, spread=0.8, seed=0)
+    plan = engine.JobPlan(n=n, chunk_size=512, t=16, k=k, sigma=1.0,
+                          memory_budget=budget, seed=0)
+    graph, _sig = engine.build_graph(reader, plan)
+    op_ooc = engine.make_normalized_operator(graph)
+    ooc_recs = {}
+    for s in solvers:
+        before = dict(graph.store.stats)
+        ooc_recs[s] = solve(
+            est_for(s), op_ooc, "ooc-topt",
+            extra={"store_gets": None})  # filled below
+        after = graph.store.stats
+        ooc_recs[s]["store_gets"] = after["gets"] - before["gets"]
+        ooc_recs[s]["store_loads"] = after["loads"] - before["loads"]
+        row(f"eigsweep/ooc_store_{s}", 0.0,
+            f"gets={ooc_recs[s]['store_gets']} "
+            f"loads={ooc_recs[s]['store_loads']}")
+
+    for path, recs in (("dense", dense_recs), ("ooc", ooc_recs)):
+        red = (recs["lanczos"]["matrix_passes"]
+               / max(recs["block-lanczos"]["matrix_passes"], 1))
+        results[f"{path}_pass_reduction_b{block_size}"] = red
+        row(f"eigsweep/{path}_pass_reduction", 0.0,
+            f"b={block_size} -> {red:.1f}x fewer passes/eigenpair")
+        assert red >= 4, (path, red)
+    load_red = (ooc_recs["lanczos"]["store_gets"]
+                / max(ooc_recs["block-lanczos"]["store_gets"], 1))
+    results["ooc_store_get_reduction"] = load_red
+    row("eigsweep/ooc_store_get_reduction", 0.0, f"{load_red:.1f}x")
+
+    # ---- chebdav vs eigh oracle on the paper config --------------------
+    from repro.configs import spectral_paper
+    kk = spectral_paper.CONFIG.k
+    pts_p, _ = synthetic.blobs(600, kk, dim=8, spread=0.6, seed=0)
+    xp = jnp.asarray(pts_p)
+    base = dict(affinity="triangular", sigma=1.0, seed=0,
+                lanczos_steps=spectral_paper.CONFIG.lanczos_steps)
+    eigh_est = SpectralClustering(kk, eigensolver="eigh", **base).fit(xp)
+    chb_est = SpectralClustering(kk, eigensolver="chebdav", **base).fit(xp)
+    a = ari(np.asarray(eigh_est.labels_), np.asarray(chb_est.labels_))
+    results["chebdav_vs_eigh_ari"] = float(a)
+    row("eigsweep/chebdav_vs_eigh", 0.0,
+        f"paper config k={kk} ari={a:.3f} "
+        f"passes={chb_est.info_['matrix_passes']}")
+    assert a >= 0.95, a
+
+    with open(out_json, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"# wrote {out_json}")
+
+
+MODES = {
+    "table1_phases": table1_phases,
+    "fig5_speedup": fig5_speedup,
+    "rings_quality": rings_quality,
+    "lanczos_residual": lanczos_residual,
+    "assigner_backends": assigner_backends,
+    "kernels": kernels,
+    "engine_ooc": engine_ooc,
+    "eigensolver_sweep": eigensolver_sweep,
+}
+
+# modes the bare invocation runs (the sweep is opt-in: it is a benchmark
+# of its own with a JSON artifact)
+DEFAULT_MODES = ("table1_phases", "fig5_speedup", "rings_quality",
+                 "lanczos_residual", "assigner_backends", "kernels",
+                 "engine_ooc")
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("modes", nargs="*", choices=[[], *MODES],
+                    help="benchmark modes to run (default: full suite "
+                         "minus eigensolver_sweep)")
+    args = ap.parse_args(argv)
     print("name,us_per_call,derived")
-    table1_phases()
-    fig5_speedup()
-    rings_quality()
-    lanczos_residual()
-    assigner_backends()
-    kernels()
-    engine_ooc()
+    for mode in (args.modes or DEFAULT_MODES):
+        MODES[mode]()
     print(f"# {len(ROWS)} rows")
 
 

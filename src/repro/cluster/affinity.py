@@ -22,8 +22,12 @@ Backends:
               the graph symmetric via max(S, S^T).
   ooc-topt    the same top-t graph built out-of-core by the repro.engine
               map/shuffle/reduce pipeline: chunked Pallas tiles -> spillable
-              CSR shards -> shard-streaming matvec; n is bounded by disk,
-              not device memory.
+              CSR shards -> shard-streaming matmat (each shard loaded once
+              per block); n is bounded by disk, not device memory.
+
+Every backend returns a NormalizedOperator with a NATIVE matmat — one
+pass over its similarity storage per (n_pad, b) block — and lets the
+operator derive the width-1 matvec view (see operator.py).
 """
 from __future__ import annotations
 
@@ -48,16 +52,18 @@ def _row_constraint(A: jax.Array, mesh) -> jax.Array:
 
 def operator_from_dense(S: jax.Array, n: int, mesh) -> NormalizedOperator:
     """Shared tail for every dense-S backend: pad, row-shard, build the
-    shifted operator via :func:`laplacian.make_dense_operator`."""
+    shifted operator via :func:`laplacian.make_dense_operator` — a native
+    matmat (S stays row-sharded, the (n_pad, b) block replicated, so one
+    GSPMD pass of S serves the whole block)."""
     m = mesh_utils.mesh_size(mesh)
     n_pad = mesh_utils.pad_to_multiple(n, m)
     if n_pad != int(S.shape[0]):
         S = jnp.zeros((n_pad, n_pad), S.dtype).at[:n, :n].set(S[:n, :n])
     S = _row_constraint(S, mesh)
     valid = (jnp.arange(n_pad) < n).astype(S.dtype)
-    matvec, inv_sqrt = lp.make_dense_operator(S, valid)
+    matmat, inv_sqrt = lp.make_dense_operator(S, valid)
     return NormalizedOperator(
-        matvec=matvec, valid=valid, inv_sqrt=inv_sqrt, n=n, n_pad=n_pad,
+        matmat=matmat, valid=valid, inv_sqrt=inv_sqrt, n=n, n_pad=n_pad,
         mesh=mesh, schedule=None,
         dense=lambda: lp.dense_shifted_matrix(S, valid))
 
@@ -74,9 +80,9 @@ def triangular_affinity(est, x, sigma, mesh) -> NormalizedOperator:
     """Paper-faithful balanced triangular schedule, wide storage."""
     upper = sim.similarity_upper_blocks(x, sigma, mesh)
     deg = lp.degrees(upper)
-    matvec = lp.make_shifted_operator(upper, deg)
+    matmat = lp.make_shifted_matmat(upper, deg)
     return NormalizedOperator(
-        matvec=matvec, valid=upper.diag, inv_sqrt=lp.masked_inv_sqrt(deg),
+        matmat=matmat, valid=upper.diag, inv_sqrt=lp.masked_inv_sqrt(deg),
         n=upper.schedule.n, n_pad=upper.schedule.n_pad, mesh=mesh,
         schedule=upper.schedule,
         dense=lambda: lp.dense_shifted_matrix(sim.materialize(upper),
@@ -91,12 +97,12 @@ def compact_affinity(est, x, sigma, mesh) -> NormalizedOperator:
     inv_sqrt = lp.masked_inv_sqrt(deg)
     valid = upper.diag
 
-    def matvec(v: jax.Array) -> jax.Array:
-        return valid * v + inv_sqrt * sim.sym_matvec_compact(
-            upper, inv_sqrt * v)
+    def matmat(V: jax.Array) -> jax.Array:
+        SV = sim.sym_matmat_compact(upper, inv_sqrt[:, None] * V)
+        return valid[:, None] * V + inv_sqrt[:, None] * SV
 
     return NormalizedOperator(
-        matvec=matvec, valid=valid, inv_sqrt=inv_sqrt,
+        matmat=matmat, valid=valid, inv_sqrt=inv_sqrt,
         n=upper.schedule.n, n_pad=upper.schedule.n_pad, mesh=mesh,
         schedule=upper.schedule,
         dense=lambda: lp.dense_shifted_matrix(sim.materialize_compact(upper),
@@ -144,8 +150,9 @@ def ooc_topt_affinity(est, x, sigma, mesh) -> NormalizedOperator:
     The similarity matrix never exists densely: map tasks turn Pallas RBF
     tiles into per-row top-t candidates, the shuffle/reduce stages merge
     them into symmetrized CSR shards spilled to disk under
-    ``est.memory_budget``, and the returned operator's matvec streams the
-    shards through a host callback.  Drop-in for any eigensolver/assigner.
+    ``est.memory_budget``, and the returned operator's matmat streams the
+    shards through a host callback (one shard load per block).  Drop-in
+    for any eigensolver/assigner.
     """
     import numpy as np
 

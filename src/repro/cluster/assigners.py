@@ -30,6 +30,8 @@ ASSIGNERS = Registry("assigner")
 
 @ASSIGNERS.register("lloyd")
 def lloyd_assigner(est, Y, valid, key, mesh):
+    # seeding happens inside distributed_kmeans via the one shared
+    # D^2 sampler, core.seeding.kmeans_plusplus_init
     labels_pad, state = km.distributed_kmeans(
         Y, valid, est.k, key, mesh, iters=est.kmeans_iters)
     return labels_pad, state.centers

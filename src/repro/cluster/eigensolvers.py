@@ -7,18 +7,31 @@ Signature:
 ``op`` is a :class:`~repro.cluster.operator.NormalizedOperator`;
 ``eigenvalues`` are the k smallest of L_sym (ascending) and ``Z`` the
 matching (n_pad, k) eigenvector columns (unit norm), still in the
-operator's (possibly permuted) row order.
+operator's (possibly permuted) row order.  Every backend reports
+``info["matrix_passes"]`` — full sweeps over the similarity matrix
+(one ``matmat`` of any width = one pass), the distributed cost unit of
+the paper's §4.3 hot spot.
 
 Backends:
-  lanczos  shifted Lanczos with full reorthogonalization — the paper's
-           Alg. 4.3, distributed through ``op.matvec``.
-  eigh     exact dense eigendecomposition of the materialized operator —
-           the oracle, O(n^3), for tests / small n.
+  lanczos        shifted single-vector Lanczos with full
+                 reorthogonalization — the paper's Alg. 4.3, distributed
+                 through ``op.matvec``; one matrix pass per step.
+  block-lanczos  the block-tridiagonal recurrence through ``op.matmat``:
+                 the same Krylov dimension in ~1/b the matrix passes
+                 (each pass amortized over the b-wide block).
+  chebdav        block Chebyshev–Davidson (Pang & Yang 2022): degree-d
+                 Chebyshev filtering of the current Ritz block between
+                 Rayleigh–Ritz steps; ``est.block_size`` and
+                 ``est.cheb_degree`` control the block width and filter
+                 degree.
+  eigh           exact dense eigendecomposition of the materialized
+                 operator — the oracle, O(n^3), for tests / small n.
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
 
+from repro.core import chebdav as cd
 from repro.core import lanczos as lz
 from repro.cluster.registry import Registry
 
@@ -32,7 +45,32 @@ def lanczos_solver(est, op, key):
     steps = est.num_lanczos_steps(op.n)
     state = lz.lanczos(op.matvec, op.n_pad, steps, key, dtype=est.dtype)
     evals, Z = lz.topk_of_shifted(state, est.k, shift=_SHIFT)
-    return evals, Z, {"lanczos_steps": steps}
+    return evals, Z, {"lanczos_steps": steps, "matrix_passes": steps}
+
+
+@EIGENSOLVERS.register("block-lanczos")
+def block_lanczos_solver(est, op, key):
+    b = est.num_block_size(op.n)       # same n as the step count below,
+    steps = est.num_block_steps(op.n)  # so width and steps stay consistent
+    state = lz.block_lanczos(op.matmat, op.n_pad, steps, key,
+                             block_size=b, dtype=est.dtype)
+    evals, Z = lz.block_topk_of_shifted(state, est.k, shift=_SHIFT)
+    return evals, Z, {"block_size": b, "block_steps": steps,
+                      "matrix_passes": steps}
+
+
+@EIGENSOLVERS.register("chebdav")
+def chebdav_solver(est, op, key):
+    b = est.num_block_size(op.n)
+    res = cd.chebdav(op.matmat, op.n_pad, est.k, key, block_size=b,
+                     degree=est.cheb_degree, valid=op.valid,
+                     dtype=est.dtype)
+    # res.evals are the largest of A, descending <-> smallest of L ascending
+    vals = _SHIFT - res.evals
+    return vals, res.evecs, {
+        "block_size": b, "cheb_degree": est.cheb_degree,
+        "chebdav_iters": res.iters, "matrix_passes": res.passes,
+        "max_residual": res.max_residual}
 
 
 @EIGENSOLVERS.register("eigh")
@@ -44,4 +82,4 @@ def eigh_solver(est, op, key):
     # spectrum floor (eigenvalue 0) and never reach the top-k.
     Z = evecs[:, -k:][:, ::-1]
     vals = (_SHIFT - evals_A[-k:])[::-1]
-    return vals, Z, {"solver": "eigh"}
+    return vals, Z, {"solver": "eigh", "matrix_passes": 0}

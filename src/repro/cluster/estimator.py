@@ -48,11 +48,17 @@ class SpectralClustering:
                     similarity matrix; "ooc-topt" builds the graph
                     out-of-core through ``repro.engine``.
     eigensolver:    name in :data:`~repro.cluster.EIGENSOLVERS`
-                    ("lanczos" | "eigh").
+                    ("lanczos" | "block-lanczos" | "chebdav" | "eigh").
     assigner:       name in :data:`~repro.cluster.ASSIGNERS`
                     ("lloyd" | "minibatch" | "streaming").
     sigma:          RBF bandwidth; None = median heuristic.
-    lanczos_steps:  None = max(4k, 32), capped below n.
+    lanczos_steps:  None = max(4k, 32), capped below n.  For
+                    "block-lanczos" this is the target Krylov dimension:
+                    the solver runs ceil(steps / block_size) block steps
+                    (same subspace, ~1/block_size the matrix passes).
+    block_size:     block width b for "block-lanczos" / "chebdav"
+                    (None = 8 for block-lanczos, max(2, k) for chebdav).
+    cheb_degree:    Chebyshev filter degree for "chebdav".
     sparsify_t:     top-t per row for the "knn-topt" / "ooc-topt"
                     affinities (None = max(k + 2, 10)).
     chunk_size:     rows per chunk for the out-of-core "ooc-topt"
@@ -69,6 +75,7 @@ class SpectralClustering:
     def __init__(self, k: int = 8, *, affinity: str = "triangular",
                  eigensolver: str = "lanczos", assigner: str = "lloyd",
                  sigma: float | None = None, lanczos_steps: int | None = None,
+                 block_size: int | None = None, cheb_degree: int = 12,
                  kmeans_iters: int = 50, sparsify_t: int | None = None,
                  minibatch_size: int = 256, chunk_size: int | None = None,
                  memory_budget: int | None = None,
@@ -79,12 +86,17 @@ class SpectralClustering:
         self._affinity_fn = AFFINITIES.get(affinity)
         self._eigensolver_fn = EIGENSOLVERS.get(eigensolver)
         self._assigner_fn = ASSIGNERS.get(assigner)
+        if cheb_degree < 1:
+            raise ValueError(
+                f"cheb_degree must be >= 1, got {cheb_degree}")
         self.k = k
         self.affinity = affinity
         self.eigensolver = eigensolver
         self.assigner = assigner
         self.sigma = sigma
         self.lanczos_steps = lanczos_steps
+        self.block_size = block_size
+        self.cheb_degree = cheb_degree
         self.kmeans_iters = kmeans_iters
         self.sparsify_t = sparsify_t
         self.minibatch_size = minibatch_size
@@ -101,6 +113,23 @@ class SpectralClustering:
     def num_lanczos_steps(self, n: int) -> int:
         m = self.lanczos_steps or max(4 * self.k, 32)
         return int(min(m, n - 1))
+
+    def num_block_size(self, n: int | None = None) -> int:
+        if self.block_size is not None:
+            if self.block_size <= 0:
+                raise ValueError(
+                    f"block_size must be positive, got {self.block_size}")
+            b = int(self.block_size)
+        else:
+            b = 8 if self.eigensolver == "block-lanczos" else max(2, self.k)
+        return b if n is None else max(1, min(b, n))
+
+    def num_block_steps(self, n: int) -> int:
+        """Block steps covering the same Krylov dimension as the
+        single-vector iteration would (ceil division by the block width),
+        so accuracy is comparable at ~1/b the matrix passes."""
+        b = self.num_block_size(n)
+        return max(1, -(-self.num_lanczos_steps(n) // b))
 
     def _mesh(self) -> Mesh:
         return self.mesh or mesh_utils.local_mesh("rows")

@@ -37,7 +37,14 @@ class NormalizedOperator:
     """Shifted normalized-similarity operator plus its padding/permutation
     bookkeeping.
 
-    matvec:    (n_pad,) -> (n_pad,) replicated; ``A v`` as above.
+    matmat:    (n_pad, b) -> (n_pad, b) replicated; ``A V`` as above — the
+               CANONICAL product.  Every in-tree affinity backend supplies
+               a native matmat (one pass over the similarity per block);
+               when a third-party backend supplies only ``matvec``, a
+               column-loop fallback is derived (correct, but it pays one
+               matrix pass per column — see API.md's migration note).
+    matvec:    (n_pad,) -> (n_pad,) replicated; derived width-1 view of
+               ``matmat`` unless the backend supplied its own.
     valid:     (n_pad,) 1/0 mask — 0 on padding rows.
     inv_sqrt:  (n_pad,) D^{-1/2} of the (padded) similarity; kept so the
                estimator can Nystrom-extend the embedding to new points.
@@ -46,7 +53,7 @@ class NormalizedOperator:
     schedule:  ``BlockSchedule`` when rows are block-permuted, else None.
     dense:     optional zero-arg callable materializing A (n_pad, n_pad)
                exactly — used by the ``eigh`` backend; falls back to
-               applying ``matvec`` columnwise when absent.
+               applying ``matmat`` to identity blocks when absent.
     stats:     backend-reported build statistics (e.g. the engine's
                map/shuffle/reduce counters); merged into ``est.info_``.
                Either a dict or a zero-arg callable returning one — a
@@ -55,15 +62,34 @@ class NormalizedOperator:
                spills during the eigensolve) report live numbers.
     """
 
-    matvec: Callable[[jax.Array], jax.Array]
     valid: jax.Array
     inv_sqrt: jax.Array
     n: int
     n_pad: int
     mesh: Any
+    matmat: Optional[Callable[[jax.Array], jax.Array]] = None
+    matvec: Optional[Callable[[jax.Array], jax.Array]] = None
     schedule: Any = None
     dense: Optional[Callable[[], jax.Array]] = None
     stats: Any = field(default_factory=dict)
+
+    def __post_init__(self):
+        if self.matmat is None and self.matvec is None:
+            raise ValueError(
+                "NormalizedOperator needs matmat (preferred) or matvec")
+        if self.matmat is None:
+            # Third-party matvec-only backend: column loop.  ``lax.map``
+            # keeps one column in flight (a vmap batch would defeat
+            # streaming backends) without unrolling b calls per trace.
+            mv = self.matvec
+
+            def matmat(V: jax.Array) -> jax.Array:
+                return jax.lax.map(mv, V.T).T
+
+            self.matmat = matmat
+        if self.matvec is None:
+            mm = self.matmat
+            self.matvec = lambda v: mm(v[:, None])[:, 0]
 
     def stats_snapshot(self) -> dict:
         return dict(self.stats() if callable(self.stats) else self.stats)
@@ -74,14 +100,15 @@ class NormalizedOperator:
             return values[jnp.asarray(self.schedule.inv_perm)][: self.n]
         return values[: self.n]
 
-    def materialize(self) -> jax.Array:
+    def materialize(self, block: int = 128) -> jax.Array:
         """Dense A — exact if the backend provided ``dense``, else assembled
-        through ``matvec`` applied to identity columns (small-n fallback).
-        ``lax.map`` keeps one column in flight (an (n, n) batch of matvecs
-        would defeat streaming backends) without unrolling n_pad calls into
-        the trace like the old Python loop did."""
+        through ``matmat`` applied to identity column blocks (small-n
+        fallback).  Blocks keep the working set bounded for streaming
+        backends while still amortizing each matrix pass over ``block``
+        columns."""
         if self.dense is not None:
             return self.dense()
         eye = jnp.eye(self.n_pad, dtype=self.valid.dtype)
-        cols = jax.lax.map(self.matvec, eye)   # row j = A e_j = column j
-        return cols.T
+        cols = [self.matmat(eye[:, c0: c0 + block])
+                for c0 in range(0, self.n_pad, block)]
+        return jnp.concatenate(cols, axis=1)

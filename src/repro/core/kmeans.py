@@ -19,6 +19,8 @@ from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.distrib import mesh_utils
+from repro.core.seeding import kmeans_plusplus_init  # noqa: F401  (shared
+# D^2-sampling seeder, re-exported: callers historically import it from here)
 from repro.core.similarity import pairwise_sq_dists
 
 
@@ -42,30 +44,6 @@ def normalize_rows(Z: jax.Array, eps: float = 1e-12) -> jax.Array:
     """Alg. 4.1 step 5: Y = Z with unit-norm rows."""
     norms = jnp.linalg.norm(Z, axis=1, keepdims=True)
     return Z / jnp.maximum(norms, eps)
-
-
-def kmeans_plusplus_init(y: jax.Array, k: int, key: jax.Array,
-                         weights: jax.Array | None = None) -> jax.Array:
-    """k-means++ seeding (D^2 sampling)."""
-    n = y.shape[0]
-    w = weights if weights is not None else jnp.ones((n,), y.dtype)
-    key, sub = jax.random.split(key)
-    first = jax.random.choice(sub, n, p=w / jnp.sum(w))
-    centers = jnp.zeros((k, y.shape[1]), y.dtype).at[0].set(y[first])
-    d2 = jnp.sum((y - y[first]) ** 2, axis=1) * w
-
-    def body(i, carry):
-        centers, d2, key = carry
-        key, sub = jax.random.split(key)
-        p = d2 / jnp.maximum(jnp.sum(d2), 1e-12)
-        idx = jax.random.choice(sub, n, p=p)
-        c = y[idx]
-        centers = centers.at[i].set(c)
-        d2 = jnp.minimum(d2, jnp.sum((y - c) ** 2, axis=1) * w)
-        return centers, d2, key
-
-    centers, _, _ = lax.fori_loop(1, k, body, (centers, d2, key))
-    return centers
 
 
 def assign(y: jax.Array, centers: jax.Array) -> jax.Array:

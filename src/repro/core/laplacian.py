@@ -12,7 +12,7 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
-from repro.core.similarity import UpperSim, sym_matvec
+from repro.core.similarity import UpperSim, sym_matmat, sym_matvec
 
 
 def dense_degrees(S: jax.Array) -> jax.Array:
@@ -28,20 +28,23 @@ def masked_inv_sqrt(deg: jax.Array) -> jax.Array:
 def make_dense_operator(S: jax.Array, valid: jax.Array):
     """Shifted normalized operator from a dense padded similarity matrix.
 
-    ``A v = valid * v + D^{-1/2} S D^{-1/2} v`` — the single construction
-    shared by the full/dense/precomputed affinity paths (previously
-    copy-pasted between ``spectral.fit`` full-mode and
-    ``fit_from_similarity``).  ``S`` is (n_pad, n_pad) with zero padding
-    rows/cols; ``valid`` the (n_pad,) 1/0 mask.  Returns ``(matvec,
-    inv_sqrt)`` so callers can keep D^{-1/2} for out-of-sample extension.
+    ``A V = valid * V + D^{-1/2} S D^{-1/2} V`` — the single construction
+    shared by the full/dense/precomputed affinity paths.  ``S`` is
+    (n_pad, n_pad) with zero padding rows/cols; ``valid`` the (n_pad,)
+    1/0 mask.  Returns ``(matmat, inv_sqrt)``: the canonical multi-vector
+    product (one pass of S per (n_pad, b) block — with S row-sharded and
+    the block replicated, ``S @ .`` is the one collective) plus D^{-1/2}
+    for out-of-sample extension.  The width-1 matvec view is derived by
+    :class:`~repro.cluster.operator.NormalizedOperator`.
     """
     deg = S @ valid  # padded cols are zero already
     inv_sqrt = masked_inv_sqrt(deg)
 
-    def matvec(v: jax.Array) -> jax.Array:
-        return valid * v + inv_sqrt * (S @ (inv_sqrt * v))
+    def matmat(V: jax.Array) -> jax.Array:
+        return valid[:, None] * V + inv_sqrt[:, None] * (
+            S @ (inv_sqrt[:, None] * V))
 
-    return matvec, inv_sqrt
+    return matmat, inv_sqrt
 
 
 def dense_shifted_matrix(S: jax.Array, valid: jax.Array) -> jax.Array:
@@ -63,30 +66,55 @@ def degrees(upper: UpperSim) -> jax.Array:
     return sym_matvec(upper, ones)
 
 
-def make_shifted_operator(
+def make_shifted_matmat(
     upper: UpperSim, deg: jax.Array
 ) -> Callable[[jax.Array], jax.Array]:
-    """A v = v + D^{-1/2} S D^{-1/2} v, padding rows mapped to 0.
+    """A V = V + D^{-1/2} S D^{-1/2} V on (n_pad, b) blocks, padding rows
+    mapped to 0.
 
     Padding rows have degree 0; we pin their inv-sqrt to 0 so they stay in
     the null space of the S-term and contribute nothing.  The identity term
     is masked to valid rows so pad rows don't pollute the Krylov basis.
+    The inner :func:`~repro.core.similarity.sym_matmat` streams each
+    device's triangle tiles once per block.
     """
     valid = upper.diag  # (n_pad,) 1/0
     inv_sqrt = jnp.where(deg > 0, 1.0 / jnp.sqrt(jnp.maximum(deg, 1e-12)), 0.0)
 
+    def matmat(V: jax.Array) -> jax.Array:
+        SV = sym_matmat(upper, inv_sqrt[:, None] * V)
+        return valid[:, None] * V + inv_sqrt[:, None] * SV
+
+    return matmat
+
+
+def make_shifted_operator(
+    upper: UpperSim, deg: jax.Array
+) -> Callable[[jax.Array], jax.Array]:
+    """Width-1 matvec view of :func:`make_shifted_matmat` (kept for
+    single-vector consumers like the dry-run lowering harness)."""
+    matmat = make_shifted_matmat(upper, deg)
+
     def matvec(v: jax.Array) -> jax.Array:
-        sv = sym_matvec(upper, inv_sqrt * v)
-        return valid * v + inv_sqrt * sv
+        return matmat(v[:, None])[:, 0]
 
     return matvec
 
 
-def make_dense_shifted_operator(S: jax.Array) -> Callable[[jax.Array], jax.Array]:
+def make_dense_shifted_matmat(S: jax.Array) -> Callable[[jax.Array], jax.Array]:
     d = dense_degrees(S)
     inv_sqrt = jnp.where(d > 0, 1.0 / jnp.sqrt(jnp.maximum(d, 1e-12)), 0.0)
 
+    def matmat(V: jax.Array) -> jax.Array:
+        return V + inv_sqrt[:, None] * (S @ (inv_sqrt[:, None] * V))
+
+    return matmat
+
+
+def make_dense_shifted_operator(S: jax.Array) -> Callable[[jax.Array], jax.Array]:
+    matmat = make_dense_shifted_matmat(S)
+
     def matvec(v: jax.Array) -> jax.Array:
-        return v + inv_sqrt * (S @ (inv_sqrt * v))
+        return matmat(v[:, None])[:, 0]
 
     return matvec

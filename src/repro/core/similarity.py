@@ -222,12 +222,14 @@ def similarity_upper_blocks(
     return UpperSim(U=U, diag=diag, schedule=sched, mesh=mesh, axis=axes)
 
 
-def sym_matvec(upper: UpperSim, v: jax.Array) -> jax.Array:
-    """S @ v without materializing the mirror:  Sv = Uv + Uᵀv - diag*v.
+def sym_matmat(upper: UpperSim, V: jax.Array) -> jax.Array:
+    """S @ V without materializing the mirror:  SV = UV + UᵀV - diag*V.
 
-    ``v`` replicated (n_pad,), result replicated (n_pad,).  One psum per call
-    — this is the paper's "move the vector to the data" MapReduce, with the
-    transpose term folded in locally (beyond-paper: Hadoop would store both
+    ``V`` replicated (n_pad, b), result replicated (n_pad, b).  One psum
+    per call *regardless of the block width* — each device streams its
+    row block of U once and amortizes it over all b columns, the matmat
+    generalization of the paper's "move the vector to the data" MapReduce
+    (with the transpose term folded in locally; Hadoop would store both
     triangles or shuffle twice).
     """
     sched: BlockSchedule = upper.schedule
@@ -235,16 +237,17 @@ def sym_matvec(upper: UpperSim, v: jax.Array) -> jax.Array:
     axes = upper.axis
     axis = axes[0] if len(axes) == 1 else axes
     b2 = 2 * sched.b
+    width = int(V.shape[1])
 
-    def body(U_local, diag_local, v_full):
+    def body(U_local, diag_local, V_full):
         idx = lax.axis_index(axis)
         r0 = idx * b2
-        v_rows = lax.dynamic_slice(v_full, (r0,), (b2,))
-        part = jnp.zeros_like(v_full)
-        part = lax.dynamic_update_slice(part, U_local @ v_full, (r0,))
-        part = part + U_local.T @ v_rows
+        V_rows = lax.dynamic_slice(V_full, (r0, 0), (b2, width))
+        part = jnp.zeros_like(V_full)
+        part = lax.dynamic_update_slice(part, U_local @ V_full, (r0, 0))
+        part = part + U_local.T @ V_rows
         part = part - lax.dynamic_update_slice(
-            jnp.zeros_like(v_full), diag_local * v_rows, (r0,))
+            jnp.zeros_like(V_full), diag_local[:, None] * V_rows, (r0, 0))
         return lax.psum(part, axis)
 
     shard = mesh_utils.shard_map(
@@ -253,7 +256,12 @@ def sym_matvec(upper: UpperSim, v: jax.Array) -> jax.Array:
         in_specs=(P(axes, None), P(axes), P()),
         out_specs=P(),
     )
-    return shard(upper.U, upper.diag, v)
+    return shard(upper.U, upper.diag, V)
+
+
+def sym_matvec(upper: UpperSim, v: jax.Array) -> jax.Array:
+    """S @ v — the width-1 view of :func:`sym_matmat`."""
+    return sym_matmat(upper, v[:, None])[:, 0]
 
 
 def materialize(upper: UpperSim) -> jax.Array:
@@ -347,17 +355,19 @@ def similarity_upper_blocks_compact(
                            schedule=sched, mesh=mesh, axis=axes)
 
 
-def sym_matvec_compact(upper: UpperSimCompact, v: jax.Array) -> jax.Array:
-    """S @ v from compact tiles: each tile is read once; only two
-    b-slices of the vector are touched per tile; one psum combines."""
+def sym_matmat_compact(upper: UpperSimCompact, V: jax.Array) -> jax.Array:
+    """S @ V from compact tiles: each tile is read ONCE PER BLOCK (not
+    once per vector); only two b-row slices of the block are touched per
+    tile; one psum combines."""
     sched: BlockSchedule = upper.schedule
     axes = upper.axis
     axis = axes[0] if len(axes) == 1 else axes
     b = sched.b
     m = sched.m
     n_tiles = 2 * m + 1
+    width = int(V.shape[1])
 
-    def body(tiles_local, table_local, diag_local, v_full):
+    def body(tiles_local, table_local, diag_local, V_full):
         idx = lax.axis_index(axis)
         dev_r0 = idx * 2 * b
         tbl = table_local[0]
@@ -367,23 +377,25 @@ def sym_matvec_compact(upper: UpperSimCompact, v: jax.Array) -> jax.Array:
             r0 = dev_r0 + p_local * b
             c0 = q * b
             tile = tiles_local[t]
-            vr = lax.dynamic_slice(v_full, (r0,), (b,))
-            vc = lax.dynamic_slice(v_full, (c0,), (b,))
-            # rows += tile @ v[cols]
-            cur = lax.dynamic_slice(partial, (r0,), (b,))
-            partial = lax.dynamic_update_slice(partial, cur + tile @ vc, (r0,))
-            # cols += tile^T @ v[rows]  (the mirror, never materialized)
-            cur = lax.dynamic_slice(partial, (c0,), (b,))
-            partial = lax.dynamic_update_slice(partial, cur + tile.T @ vr, (c0,))
+            Vr = lax.dynamic_slice(V_full, (r0, 0), (b, width))
+            Vc = lax.dynamic_slice(V_full, (c0, 0), (b, width))
+            # rows += tile @ V[cols]
+            cur = lax.dynamic_slice(partial, (r0, 0), (b, width))
+            partial = lax.dynamic_update_slice(partial, cur + tile @ Vc,
+                                               (r0, 0))
+            # cols += tile^T @ V[rows]  (the mirror, never materialized)
+            cur = lax.dynamic_slice(partial, (c0, 0), (b, width))
+            partial = lax.dynamic_update_slice(partial, cur + tile.T @ Vr,
+                                               (c0, 0))
             return partial
 
-        partial = jnp.zeros_like(v_full)
+        partial = jnp.zeros_like(V_full)
         partial = mesh_utils.pvary(partial, tuple(axes))
         partial = lax.fori_loop(0, n_tiles, one, partial)
         # diagonal tiles contribute their diagonal twice via the mirror
-        vr2 = lax.dynamic_slice(v_full, (dev_r0,), (2 * b,))
+        Vr2 = lax.dynamic_slice(V_full, (dev_r0, 0), (2 * b, width))
         corr = lax.dynamic_update_slice(
-            jnp.zeros_like(v_full), diag_local * vr2, (dev_r0,))
+            jnp.zeros_like(V_full), diag_local[:, None] * Vr2, (dev_r0, 0))
         return lax.psum(partial - corr, axis)
 
     shard = mesh_utils.shard_map(
@@ -392,7 +404,12 @@ def sym_matvec_compact(upper: UpperSimCompact, v: jax.Array) -> jax.Array:
         out_specs=P(),
     )
     table = jnp.asarray(sched.table)
-    return shard(upper.tiles, table, upper.diag, v)
+    return shard(upper.tiles, table, upper.diag, V)
+
+
+def sym_matvec_compact(upper: UpperSimCompact, v: jax.Array) -> jax.Array:
+    """S @ v — the width-1 view of :func:`sym_matmat_compact`."""
+    return sym_matmat_compact(upper, v[:, None])[:, 0]
 
 
 def materialize_compact(upper: UpperSimCompact) -> jax.Array:

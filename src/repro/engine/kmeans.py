@@ -14,23 +14,7 @@ from typing import Callable, Optional
 
 import numpy as np
 
-
-def _kmeanspp(y: np.ndarray, k: int, rng: np.random.RandomState,
-              w: Optional[np.ndarray] = None) -> np.ndarray:
-    """k-means++ (D^2 sampling) on a sample that fits in RAM."""
-    n = len(y)
-    w = np.ones(n) if w is None else np.asarray(w, np.float64)
-    centers = np.empty((k, y.shape[1]), np.float64)
-    centers[0] = y[rng.choice(n, p=w / w.sum())]
-    d2 = np.sum((y - centers[0]) ** 2, axis=1) * w
-    for i in range(1, k):
-        s = d2.sum()
-        # all remaining distances zero (coincident points / k > #distinct):
-        # fall back to weight-uniform draws instead of an invalid p vector
-        p = d2 / s if s > 0 else w / w.sum()
-        centers[i] = y[rng.choice(n, p=p)]
-        d2 = np.minimum(d2, np.sum((y - centers[i]) ** 2, axis=1) * w)
-    return centers
+from repro.core.seeding import kmeans_plusplus_np as _kmeanspp
 
 
 def _sq_dists(y: np.ndarray, centers: np.ndarray) -> np.ndarray:

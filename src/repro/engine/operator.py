@@ -3,10 +3,12 @@ tasks build on top of it.
 
 The whole point of the engine: the similarity graph exists only as
 per-row-range CSR shards inside a (possibly spilled) shard store, and the
-eigensolve consumes it through a matvec that *streams* the shards — one
-shard resident at a time, never a dense (n, n) anything.  The host-side
-stream is lifted into the jitted Lanczos loop with ``jax.pure_callback``,
-so the existing ``lanczos``/``eigh`` backends work unchanged.
+eigensolve consumes it through a **matmat** that *streams* the shards —
+one shard resident at a time, never a dense (n, n) anything, and each
+shard pulled once per (n, b) block rather than once per vector.  The
+host-side stream is lifted into the jitted eigensolver loops with
+``jax.pure_callback``, so every registry backend (``lanczos``,
+``block-lanczos``, ``chebdav``, ``eigh``) works unchanged.
 """
 from __future__ import annotations
 
@@ -52,17 +54,29 @@ class ShardedCSRGraph:
                     spilled_shards=len(self.store.spilled_keys()),
                     **{f"store_{k}": v for k, v in self.store.stats.items()})
 
-    def matvec(self, v: np.ndarray) -> np.ndarray:
-        """S @ v streaming one shard at a time (the reduce-side matvec)."""
-        v = np.asarray(v)
-        y = np.zeros(self.n, np.float32)
+    def matmat(self, V: np.ndarray) -> np.ndarray:
+        """S @ V streaming one shard at a time — each CSR shard is pulled
+        from the (possibly spilled) store ONCE PER BLOCK and its product
+        amortized over all b columns, instead of once per vector; under a
+        memory budget this divides the spill-reload traffic of an
+        eigensolve by the block width."""
+        V = np.asarray(V)
+        if V.ndim == 1:
+            V = V[:, None]
+        Y = np.zeros((self.n, V.shape[1]), np.float32)
         for c, (r0, r1) in enumerate(self.plan.ranges):
             sh = self.shard(c)
             indptr, indices, data = sh["indptr"], sh["indices"], sh["data"]
-            prods = data * v[indices]
+            prods = data[:, None] * V[indices]              # (nnz_c, b)
             rows = np.repeat(np.arange(r1 - r0), np.diff(indptr))
-            y[r0:r1] = np.bincount(rows, weights=prods, minlength=r1 - r0)
-        return y
+            for j in range(V.shape[1]):                     # bincount beats
+                Y[r0:r1, j] = np.bincount(rows, weights=prods[:, j],
+                                          minlength=r1 - r0)
+        return Y
+
+    def matvec(self, v: np.ndarray) -> np.ndarray:
+        """S @ v — the width-1 view of :meth:`matmat`."""
+        return self.matmat(np.asarray(v)[:, None])[:, 0]
 
     def to_dense(self) -> np.ndarray:
         """Dense S — test/oracle path only; defeats the engine if used at
@@ -93,16 +107,17 @@ def make_normalized_operator(graph: ShardedCSRGraph, dtype=jnp.float32,
     deg = jnp.zeros((n_pad,), dtype).at[:n].set(jnp.asarray(graph.deg, dtype))
     inv_sqrt = jnp.where(deg > 0, 1.0 / jnp.sqrt(jnp.maximum(deg, 1e-12)), 0.0)
     valid = (jnp.arange(n_pad) < n).astype(dtype)
-    out_shape = jax.ShapeDtypeStruct((n,), jnp.float32)
 
-    def host_matvec(v):
-        return graph.matvec(np.asarray(v, np.float32))
+    def host_matmat(V):
+        return graph.matmat(np.asarray(V, np.float32))
 
-    def matvec(v: jax.Array) -> jax.Array:
-        sv = jax.pure_callback(host_matvec, out_shape,
-                               (inv_sqrt * v)[:n].astype(jnp.float32))
-        sv = jnp.zeros((n_pad,), dtype).at[:n].set(sv.astype(dtype))
-        return valid * v + inv_sqrt * sv
+    def matmat(V: jax.Array) -> jax.Array:
+        b = V.shape[1]
+        out_shape = jax.ShapeDtypeStruct((n, b), jnp.float32)
+        SV = jax.pure_callback(host_matmat, out_shape,
+                               (inv_sqrt[:, None] * V)[:n].astype(jnp.float32))
+        SV = jnp.zeros((n_pad, b), dtype).at[:n].set(SV.astype(dtype))
+        return valid[:, None] * V + inv_sqrt[:, None] * SV
 
     def dense() -> jax.Array:
         S = jnp.zeros((n_pad, n_pad), dtype).at[:n, :n].set(
@@ -110,5 +125,5 @@ def make_normalized_operator(graph: ShardedCSRGraph, dtype=jnp.float32,
         return jnp.diag(valid) + S * (inv_sqrt[:, None] * inv_sqrt[None, :])
 
     return NormalizedOperator(
-        matvec=matvec, valid=valid, inv_sqrt=inv_sqrt, n=n, n_pad=n_pad,
+        matmat=matmat, valid=valid, inv_sqrt=inv_sqrt, n=n, n_pad=n_pad,
         mesh=mesh, schedule=None, dense=dense, stats=graph.stats_snapshot)

@@ -40,9 +40,14 @@ class JobPlan:
     memory_budget:  shard-store RAM budget in bytes; None = unlimited
                     (nothing spills).
     spill_dir:      where spilled shards go; None = fresh temp dir.
-    lanczos_steps:  None = max(4k, 32), capped below n.
+    lanczos_steps:  target Krylov dimension; None = max(4k, 32), capped
+                    below n.
+    block_size:     eigensolve block width b: the shard-streaming matmat
+                    pulls each CSR shard from the store once per b-wide
+                    block, so one Krylov dimension costs ~1/b the
+                    spill-reload traffic of the single-vector iteration.
     kmeans_rounds:  streaming mini-batch rounds (one chunk per round).
-    seed:           base seed for Lanczos start vector and k-means init.
+    seed:           base seed for Lanczos start block and k-means init.
     """
 
     n: int
@@ -53,6 +58,7 @@ class JobPlan:
     memory_budget: Optional[int] = None
     spill_dir: Optional[str] = None
     lanczos_steps: Optional[int] = None
+    block_size: int = 8
     kmeans_rounds: int = 50
     seed: int = 0
 
@@ -65,6 +71,9 @@ class JobPlan:
             raise ValueError(
                 f"memory_budget must be positive bytes or None, "
                 f"got {self.memory_budget}")
+        if self.block_size <= 0:
+            raise ValueError(
+                f"block_size must be positive, got {self.block_size}")
 
     @property
     def ranges(self) -> list[tuple[int, int]]:
@@ -85,3 +94,11 @@ class JobPlan:
     def num_lanczos_steps(self) -> int:
         m = self.lanczos_steps or max(4 * self.k, 32)
         return int(max(1, min(m, self.n - 1))) if self.n > 1 else 1
+
+    def eff_block_size(self) -> int:
+        return int(max(1, min(self.block_size, self.n)))
+
+    def num_block_steps(self) -> int:
+        """Block steps spanning the same Krylov dimension as
+        ``num_lanczos_steps`` single-vector iterations."""
+        return max(1, -(-self.num_lanczos_steps() // self.eff_block_size()))

@@ -1,12 +1,20 @@
-"""Pallas TPU kernel for the Lanczos hot spot: row-blocked mat-vec (paper §4.3.2).
+"""Pallas TPU kernels for the eigensolver hot spot: row-blocked mat-vec and
+its multi-vector generalization, the row-blocked **mat-mat** (paper §4.3.2).
 
 Grid = (row tiles, col tiles); the output row tile is revisited across the
 column dimension and accumulated in place (initialized at j == 0), so the
-matrix streams HBM->VMEM once while the vector tile stays resident — the
-TPU translation of the paper's "move the vector to the data, not the data".
+matrix streams HBM->VMEM once while the vector/block tile stays resident —
+the TPU translation of the paper's "move the vector to the data, not the
+data".
 
-The vector is reshaped to (m, 1) so the product is an MXU ``dot`` rather
-than a VPU reduction.
+``block_matmat`` is the canonical kernel: an MXU-shaped
+``(bm, bn) @ (bn, b)`` tile product per grid step, amortizing each sweep of
+``A`` over all ``b`` columns of ``V`` at once (one matrix pass per block
+instead of one per vector).  ``block_matvec`` is its width-1 view.
+
+``interpret`` defaults to auto-detection from ``jax.default_backend()``:
+compiled on TPU, interpreter elsewhere — so real TPU runs never silently
+take the interpreter path.
 """
 from __future__ import annotations
 
@@ -17,7 +25,13 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _matvec_kernel(a_ref, v_ref, o_ref):
+def interpret_default() -> bool:
+    """Interpret only off-TPU (CPU/GPU run the kernel body in Python for
+    correctness; TPU compiles it)."""
+    return jax.default_backend() != "tpu"
+
+
+def _matmat_kernel(a_ref, v_ref, o_ref):
     j = pl.program_id(1)
 
     @pl.when(j == 0)
@@ -25,30 +39,50 @@ def _matvec_kernel(a_ref, v_ref, o_ref):
         o_ref[...] = jnp.zeros_like(o_ref)
 
     a = a_ref[...]                       # (bm, bn)
-    v = v_ref[...]                       # (bn, 1)
+    v = v_ref[...]                       # (bn, b)
     acc = jax.lax.dot_general(
         a, v, (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)  # (bm, 1)
+        preferred_element_type=jnp.float32)  # (bm, b)
     o_ref[...] += acc.astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
-def block_matvec(A: jax.Array, v: jax.Array, *, bm: int = 256, bn: int = 512,
-                 interpret: bool = True) -> jax.Array:
-    """A @ v with (bm, bn) VMEM tiles; shapes must divide — see ops.py."""
+def _matmat(A: jax.Array, V: jax.Array, *, bm: int, bn: int,
+            interpret: bool) -> jax.Array:
     n, m = A.shape
-    assert n % bm == 0 and m % bn == 0, (n, m, bm, bn)
-    v2 = v.reshape(m, 1)
+    b = V.shape[1]
     grid = (n // bm, m // bn)
-    out = pl.pallas_call(
-        _matvec_kernel,
+    return pl.pallas_call(
+        _matmat_kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
-            pl.BlockSpec((bn, 1), lambda i, j: (j, 0)),
+            pl.BlockSpec((bn, b), lambda i, j: (j, 0)),
         ],
-        out_specs=pl.BlockSpec((bm, 1), lambda i, j: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((n, 1), jnp.float32),
+        out_specs=pl.BlockSpec((bm, b), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, b), jnp.float32),
         interpret=interpret,
-    )(A, v2)
-    return out.reshape(n).astype(v.dtype)
+    )(A, V)
+
+
+def block_matmat(A: jax.Array, V: jax.Array, *, bm: int = 256, bn: int = 512,
+                 interpret: bool | None = None) -> jax.Array:
+    """A @ V with (bm, bn) VMEM tiles; A (n, m), V (m, b); shapes must
+    divide the tiles — see ops.py for the padding wrapper."""
+    if interpret is None:
+        interpret = interpret_default()
+    n, m = A.shape
+    assert V.ndim == 2 and V.shape[0] == m, (A.shape, V.shape)
+    assert n % bm == 0 and m % bn == 0, (n, m, bm, bn)
+    out = _matmat(A, V, bm=bm, bn=bn, interpret=bool(interpret))
+    return out.astype(V.dtype)
+
+
+def block_matvec(A: jax.Array, v: jax.Array, *, bm: int = 256, bn: int = 512,
+                 interpret: bool | None = None) -> jax.Array:
+    """A @ v — the width-1 view of :func:`block_matmat` (the vector is
+    reshaped to (m, 1) so the product is an MXU ``dot``, not a VPU
+    reduction)."""
+    n, m = A.shape
+    out = block_matmat(A, v.reshape(m, 1), bm=bm, bn=bn, interpret=interpret)
+    return out.reshape(n)

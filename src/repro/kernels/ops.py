@@ -17,8 +17,7 @@ from repro.kernels import rbf_similarity as _rbf
 from repro.kernels import ref
 
 
-def _interpret_default() -> bool:
-    return jax.default_backend() != "tpu"
+_interpret_default = _mv.interpret_default   # one TPU-detection rule
 
 
 def _pad_rows(a: jax.Array, mult: int) -> tuple[jax.Array, int]:
@@ -41,9 +40,9 @@ def rbf_similarity(x: jax.Array, y: jax.Array, sigma, *, bm: int = 128,
     return out[:n, :m]
 
 
-def block_matvec(A: jax.Array, v: jax.Array, *, bm: int = 256, bn: int = 512,
+def block_matmat(A: jax.Array, V: jax.Array, *, bm: int = 256, bn: int = 512,
                  interpret: bool | None = None) -> jax.Array:
-    """A @ v for any (n, m) A."""
+    """A @ V for any (n, m) A and (m, b) V (one matrix pass per block)."""
     if interpret is None:
         interpret = _interpret_default()
     n, m = A.shape
@@ -51,11 +50,18 @@ def block_matvec(A: jax.Array, v: jax.Array, *, bm: int = 256, bn: int = 512,
     if m % bn:
         m_pad = ((m + bn - 1) // bn) * bn
         Ap = jnp.pad(Ap, ((0, 0), (0, m_pad - m)))
-        vp = jnp.pad(v, (0, m_pad - m))
+        Vp = jnp.pad(V, ((0, m_pad - m), (0, 0)))
     else:
-        vp = v
-    out = _mv.block_matvec(Ap, vp, bm=bm, bn=bn, interpret=interpret)
+        Vp = V
+    out = _mv.block_matmat(Ap, Vp, bm=bm, bn=bn, interpret=interpret)
     return out[:n]
+
+
+def block_matvec(A: jax.Array, v: jax.Array, *, bm: int = 256, bn: int = 512,
+                 interpret: bool | None = None) -> jax.Array:
+    """A @ v for any (n, m) A — the width-1 view of :func:`block_matmat`."""
+    return block_matmat(A, v.reshape(-1, 1), bm=bm, bn=bn,
+                        interpret=interpret).reshape(A.shape[0])
 
 
 def _mv_pad(n: int, bm: int) -> int:

@@ -18,6 +18,11 @@ def block_matvec(A: jax.Array, v: jax.Array) -> jax.Array:
     return A @ v
 
 
+def block_matmat(A: jax.Array, V: jax.Array) -> jax.Array:
+    """A @ V."""
+    return A @ V
+
+
 def flash_attention(q, k, v, scale=None, causal=True, window=-1):
     """Oracle softmax attention. q/k/v: (B, H, S|T, hd)."""
     hd = q.shape[-1]

@@ -284,6 +284,29 @@ def lower_spectral_cell(phase: str, multi_pod: bool, n: int | None = None):
 
         lowered = jax.jit(fn, in_shardings=(u_shard, None, None),
                           donate_argnums=(2,)).lower(U_abs, diag_abs, st_abs)
+    elif phase == "block_lanczos":
+        # one BLOCK Lanczos step against row-sharded upper blocks: the
+        # (n_pad, b) block stays replicated, each device streams its row
+        # block of U once per step — b vectors advanced per matrix pass
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        blk = 8
+        U_abs = jax.ShapeDtypeStruct((n_pad, n_pad), jnp.float32)
+        diag_abs = jax.ShapeDtypeStruct((n_pad,), jnp.float32)
+        st_abs = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype),
+            lz.init_block_state(n_pad, 8, jax.random.PRNGKey(0), blk))
+        u_shard = NamedSharding(mesh, P("rows", None))
+
+        def fn(U, diag, state):
+            up = sim.UpperSim(U=U, diag=diag, schedule=sched, mesh=mesh,
+                              axis=("rows",))
+            from repro.core import laplacian as lp
+            deg = lp.degrees(up)
+            mm = lp.make_shifted_matmat(up, deg)
+            return lz.block_run(mm, state, 1)
+
+        lowered = jax.jit(fn, in_shardings=(u_shard, None, None),
+                          donate_argnums=(2,)).lower(U_abs, diag_abs, st_abs)
     elif phase == "kmeans":
         from jax.sharding import NamedSharding, PartitionSpec as P
         from repro.core import kmeans as km
@@ -378,7 +401,7 @@ def all_cells():
     for arch in configs.ARCHS:
         for shape in SHAPES_BY_NAME:
             yield arch, shape
-    for phase in ("similarity", "lanczos", "kmeans"):
+    for phase in ("similarity", "lanczos", "block_lanczos", "kmeans"):
         yield "spectral", phase
 
 

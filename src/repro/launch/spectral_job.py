@@ -54,7 +54,15 @@ def main(argv=None):
                          "beyond it spill to --spill-dir")
     ap.add_argument("--spill-dir", default=None,
                     help="engine spill directory (default: temp dir)")
-    ap.add_argument("--lanczos-steps", type=int, default=48)
+    ap.add_argument("--lanczos-steps", type=int, default=48,
+                    help="target Krylov dimension (block solvers run "
+                         "ceil(steps / block-size) block steps)")
+    ap.add_argument("--block-size", type=int, default=None,
+                    help="eigensolve block width b for --eigensolver "
+                         "block-lanczos / chebdav (each matrix pass is "
+                         "amortized over b vectors)")
+    ap.add_argument("--cheb-degree", type=int, default=12,
+                    help="Chebyshev filter degree (--eigensolver chebdav)")
     ap.add_argument("--ckpt-dir", default=None)
     args = ap.parse_args(argv)
 
@@ -72,7 +80,8 @@ def main(argv=None):
     est = SpectralClustering(
         k=args.k, affinity="precomputed" if args.graph else affinity,
         eigensolver=args.eigensolver, assigner=args.assigner,
-        lanczos_steps=args.lanczos_steps, sparsify_t=args.sparsify_t,
+        lanczos_steps=args.lanczos_steps, block_size=args.block_size,
+        cheb_degree=args.cheb_degree, sparsify_t=args.sparsify_t,
         chunk_size=args.chunk_size, memory_budget=args.memory_budget,
         spill_dir=args.spill_dir, mesh=mesh)
 
@@ -98,6 +107,8 @@ def main(argv=None):
           f"assigner={est.assigner} devices={mesh_utils.mesh_size(mesh)} "
           f"time={dt:.2f}s")
     print(f"[spectral] eigenvalues: {np.asarray(est.eigenvalues_)}")
+    if "matrix_passes" in est.info_:
+        print(f"[spectral] matrix_passes={est.info_['matrix_passes']}")
     print(f"[spectral] cluster sizes: {sizes}")
     eng = est.info_.get("engine")
     if eng:

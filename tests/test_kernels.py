@@ -38,6 +38,36 @@ def test_block_matvec(n, m, dtype):
                                atol=tol * np.abs(np.asarray(want)).max(), rtol=tol)
 
 
+@pytest.mark.parametrize("n,m,b", [(256, 512, 8), (300, 700, 3),
+                                   (1024, 256, 16), (65, 130, 1)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_block_matmat(n, m, b, dtype):
+    A = _rand((n, m), dtype, 6)
+    V = _rand((m, b), dtype, 7)
+    got = ops.block_matmat(A, V, interpret=True)
+    want = ref.block_matmat(A.astype(jnp.float32), V.astype(jnp.float32))
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32), np.asarray(want),
+                               atol=tol * np.abs(np.asarray(want)).max(),
+                               rtol=tol)
+    assert got.shape == (n, b)
+
+
+def test_block_kernels_interpret_autodetect():
+    """No hardcoded interpret default: off-TPU the wrappers auto-select
+    interpret mode (and still match the oracle) without the caller
+    passing anything."""
+    from repro.kernels import block_matvec as raw
+    assert raw.interpret_default() == (jax.default_backend() != "tpu")
+    A = _rand((128, 128), jnp.float32, 8)
+    v = _rand((128,), jnp.float32, 9)
+    np.testing.assert_allclose(np.asarray(ops.block_matvec(A, v)),
+                               np.asarray(ref.block_matvec(A, v)), atol=1e-4)
+    V = _rand((128, 4), jnp.float32, 10)
+    np.testing.assert_allclose(np.asarray(ops.block_matmat(A, V)),
+                               np.asarray(ref.block_matmat(A, V)), atol=1e-4)
+
+
 @pytest.mark.parametrize("n,d,k", [(512, 8, 7), (513, 16, 3), (1000, 4, 11),
                                    (64, 32, 2)])
 def test_kmeans_assign(n, d, k):
