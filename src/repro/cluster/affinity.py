@@ -24,6 +24,12 @@ Backends:
               map/shuffle/reduce pipeline: chunked Pallas tiles -> spillable
               CSR shards -> shard-streaming matmat (each shard loaded once
               per block); n is bounded by disk, not device memory.
+  fused-rbf   matrix-free: a flash-style Pallas kernel recomputes RBF tiles
+              in-register on every matmat and applies the D^{-1/2}
+              normalization in place, so the similarity matrix NEVER
+              exists — affinity memory is O(n*d), and a mixed-precision
+              knob (est.compute_dtype) runs the tile products in bf16
+              with f32 accumulation.
 
 Every backend returns a NormalizedOperator with a NATIVE matmat — one
 pass over its similarity storage per (n_pad, b) block — and lets the
@@ -33,6 +39,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+from jax import lax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import laplacian as lp
@@ -62,10 +69,12 @@ def operator_from_dense(S: jax.Array, n: int, mesh) -> NormalizedOperator:
     S = _row_constraint(S, mesh)
     valid = (jnp.arange(n_pad) < n).astype(S.dtype)
     matmat, inv_sqrt = lp.make_dense_operator(S, valid)
+    # inv_sqrt threaded through so materializing for eigh doesn't pay a
+    # second degree pass over S
     return NormalizedOperator(
         matmat=matmat, valid=valid, inv_sqrt=inv_sqrt, n=n, n_pad=n_pad,
         mesh=mesh, schedule=None,
-        dense=lambda: lp.dense_shifted_matrix(S, valid))
+        dense=lambda: lp.dense_shifted_matrix(S, valid, inv_sqrt))
 
 
 @AFFINITIES.register("dense")
@@ -81,12 +90,13 @@ def triangular_affinity(est, x, sigma, mesh) -> NormalizedOperator:
     upper = sim.similarity_upper_blocks(x, sigma, mesh)
     deg = lp.degrees(upper)
     matmat = lp.make_shifted_matmat(upper, deg)
+    inv_sqrt = lp.masked_inv_sqrt(deg)
     return NormalizedOperator(
-        matmat=matmat, valid=upper.diag, inv_sqrt=lp.masked_inv_sqrt(deg),
+        matmat=matmat, valid=upper.diag, inv_sqrt=inv_sqrt,
         n=upper.schedule.n, n_pad=upper.schedule.n_pad, mesh=mesh,
         schedule=upper.schedule,
         dense=lambda: lp.dense_shifted_matrix(sim.materialize(upper),
-                                              upper.diag))
+                                              upper.diag, inv_sqrt))
 
 
 @AFFINITIES.register("compact")
@@ -106,7 +116,7 @@ def compact_affinity(est, x, sigma, mesh) -> NormalizedOperator:
         n=upper.schedule.n, n_pad=upper.schedule.n_pad, mesh=mesh,
         schedule=upper.schedule,
         dense=lambda: lp.dense_shifted_matrix(sim.materialize_compact(upper),
-                                              valid))
+                                              valid, inv_sqrt))
 
 
 @AFFINITIES.register("precomputed")
@@ -141,6 +151,147 @@ def knn_topt_affinity(est, x, sigma, mesh) -> NormalizedOperator:
     # max(S, S^T) symmetrization inside sparsify_topt is the one transpose
     St = sim.sparsify_topt(S, int(min(t, n)))
     return operator_from_dense(St, n, mesh)
+
+
+def _fused_tile(n: int) -> int:
+    """MXU-aligned tile side for the fused kernel.  Larger tiles quarter
+    the grid-cell count (which is what interpret mode pays for) and on TPU
+    amortize more MXU work per VMEM fill; small problems stay at 128 so
+    padding overhead stays bounded."""
+    return 256 if n >= 2048 else 128
+
+
+def build_fused_rbf_operator(x, sigma, mesh, *, compute_dtype=None,
+                             dtype=jnp.float32) -> NormalizedOperator:
+    """Matrix-free shifted normalized operator over raw points.
+
+    Two fused passes, both row-sharded over the mesh with ONE psum each:
+    the degree pass (the fused kernel against a ones column, masked to
+    valid rows) and then, per matmat call, the normalized product
+    ``D^{-1/2} S D^{-1/2} V`` with both scales applied inside the kernel.
+    The (n, n) similarity never exists anywhere — points, scales and the
+    (n_pad, b) block are the whole working set.
+
+    Exposed directly (besides ``affinity="fused-rbf"``) so the engine's
+    planner can route beyond-dense-memory jobs here without an estimator.
+    """
+    from repro.kernels import fused_rbf_matmat as frm
+
+    n, d = int(x.shape[0]), int(x.shape[1])
+    m = mesh_utils.mesh_size(mesh)
+    axes = mesh_utils.flat_axes(mesh)
+    axis = axes[0] if len(axes) == 1 else axes
+    tile = _fused_tile(n)
+    # local row count must divide the row-tile side AND the mesh
+    n_pad = mesh_utils.pad_to_multiple(n, m * tile)
+    rows_local = n_pad // m
+    xp = jnp.zeros((n_pad, d), jnp.float32).at[:n].set(
+        jnp.asarray(x, jnp.float32))
+    valid = (jnp.arange(n_pad) < n).astype(dtype)
+    sigma32 = jnp.asarray(sigma, jnp.float32)
+    cdtype = frm.resolve_compute_dtype(compute_dtype)
+
+    def _sharded_pass(width: int):
+        """Row-sharded fused pass for one block width: each device
+        computes its (local, b) output stripe from its point rows vs the
+        all-gathered columns, then one psum assembles the replicated
+        (n_pad, b) block."""
+
+        def body(x_local, rs_local, V_full, cs_full):
+            x_full = lax.all_gather(x_local, axis, tiled=True)
+            O_local = frm.fused_rbf_matmat(
+                x_local, x_full, V_full, sigma32, rs_local[:, 0],
+                cs_full[:, 0], bm=tile, bn=tile, compute_dtype=cdtype)
+            out = jnp.zeros((n_pad, width), jnp.float32)
+            out = lax.dynamic_update_slice(
+                out, O_local, (lax.axis_index(axis) * rows_local, 0))
+            return lax.psum(out, axis)
+
+        return jax.jit(mesh_utils.shard_map(
+            body, mesh=mesh,
+            in_specs=(P(axes, None), P(axes, None), P(), P()),
+            out_specs=P()))
+
+    # the eigensolvers call matmat at a handful of widths, each possibly
+    # hundreds of times — cache one jitted pass per width so the shard_map
+    # (and the interpret-mode kernel on CPU) traces once, not per call
+    _passes: dict = {}
+
+    def fused(V, row_scale, col_scale):
+        if m == 1:  # no collective needed: the kernel IS the whole pass
+            return frm.fused_rbf_matmat(
+                xp, xp, V.astype(jnp.float32), sigma32, row_scale,
+                col_scale, bm=tile, bn=tile, compute_dtype=cdtype)
+        width = int(V.shape[1])
+        fn = _passes.get(width)
+        if fn is None:
+            fn = _passes.setdefault(width, _sharded_pass(width))
+        return fn(xp, row_scale[:, None].astype(jnp.float32),
+                  V.astype(jnp.float32),
+                  col_scale[:, None].astype(jnp.float32))
+
+    # pass 1: degrees = S @ 1 with padding masked on both sides
+    deg = fused(jnp.ones((n_pad, 1), jnp.float32), valid, valid)[:, 0]
+    inv_sqrt = lp.masked_inv_sqrt(deg).astype(dtype)
+
+    # live HBM-traffic accounting (the dense paths stream n_pad^2 floats
+    # per pass; the fused path streams point tiles instead)
+    counters = {"matrix_passes": 1,
+                "bytes_streamed": frm.pass_bytes(n_pad, n_pad, d, 1,
+                                                 bm=tile, bn=tile)}
+
+    def _bump(width) -> None:
+        counters["matrix_passes"] += 1
+        counters["bytes_streamed"] += frm.pass_bytes(
+            n_pad, n_pad, d, int(width), bm=tile, bn=tile)
+
+    def matmat(V: jax.Array) -> jax.Array:
+        SV = fused(V.astype(jnp.float32), inv_sqrt, inv_sqrt)
+        # debug.callback fires once per *execution* (also inside scans),
+        # so the counters stay honest under jitted eigensolver loops
+        jax.debug.callback(_bump, V.shape[1])
+        return valid[:, None] * V + SV.astype(V.dtype)
+
+    def dense() -> jax.Array:
+        # oracle/eigh-only escape hatch: the one place the matrix exists
+        from repro.core import similarity as sim_mod
+        S = sim_mod.rbf_kernel(xp, xp, sigma32) \
+            * valid[:, None] * valid[None, :]
+        return lp.dense_shifted_matrix(jnp.asarray(S, dtype), valid,
+                                       inv_sqrt)
+
+    # O(n*d) affinity working set vs the dense paths' O(n^2) matrix
+    peak = (n_pad * d + 3 * n_pad) * 4 \
+        + (2 * tile * d + tile * tile + tile * 2) * 4  # + VMEM tiles
+
+    def stats():
+        try:                         # flush pending debug callbacks so the
+            jax.effects_barrier()    # pass counters are read-consistent
+        except Exception:
+            pass
+        return dict(counters, affinity_peak_bytes=peak,
+                    dense_equiv_bytes=n_pad * n_pad * 4,
+                    compute_dtype=jnp.dtype(cdtype).name, tile=tile)
+
+    return NormalizedOperator(
+        matmat=matmat, valid=valid, inv_sqrt=inv_sqrt, n=n, n_pad=n_pad,
+        mesh=mesh, schedule=None, dense=dense, stats=stats)
+
+
+@AFFINITIES.register("fused-rbf")
+def fused_rbf_affinity(est, x, sigma, mesh) -> NormalizedOperator:
+    """Flash-style matrix-free RBF affinity (O(n*d) memory).
+
+    The similarity matrix is recomputed tile-by-tile inside a Pallas
+    kernel on every pass and normalized in-register; ``est.compute_dtype``
+    ('float32' | 'bfloat16') selects the MXU product precision (f32
+    accumulation always).  Runs problem sizes whose dense similarity
+    would not fit in memory at in-memory speed — the in-RAM complement
+    of ``ooc-topt``.
+    """
+    return build_fused_rbf_operator(
+        x, sigma, mesh, compute_dtype=getattr(est, "compute_dtype", None),
+        dtype=est.dtype)
 
 
 @AFFINITIES.register("ooc-topt")

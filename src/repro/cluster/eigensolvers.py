@@ -82,4 +82,7 @@ def eigh_solver(est, op, key):
     # spectrum floor (eigenvalue 0) and never reach the top-k.
     Z = evecs[:, -k:][:, ::-1]
     vals = (_SHIFT - evals_A[-k:])[::-1]
-    return vals, Z, {"solver": "eigh", "matrix_passes": 0}
+    # Pass accounting for cross-solver comparability (the benchmark
+    # sweep): the O(n^3) dense factorization sweeps the n_pad-row matrix
+    # ~n_pad times — the iterative solvers' cost unit applied to eigh.
+    return vals, Z, {"solver": "eigh", "matrix_passes": int(op.n_pad)}

@@ -43,10 +43,12 @@ class SpectralClustering:
     k:              number of clusters (and embedding dimensions).
     affinity:       name in :data:`~repro.cluster.AFFINITIES`
                     ("dense" | "triangular" | "compact" | "precomputed"
-                    | "knn-topt" | "ooc-topt").  With "precomputed",
-                    ``fit(S)`` treats its argument as the (n, n)
-                    similarity matrix; "ooc-topt" builds the graph
-                    out-of-core through ``repro.engine``.
+                    | "knn-topt" | "ooc-topt" | "fused-rbf").  With
+                    "precomputed", ``fit(S)`` treats its argument as the
+                    (n, n) similarity matrix; "ooc-topt" builds the graph
+                    out-of-core through ``repro.engine``; "fused-rbf"
+                    never materializes the similarity at all (O(n*d)
+                    affinity memory, see ``compute_dtype``).
     eigensolver:    name in :data:`~repro.cluster.EIGENSOLVERS`
                     ("lanczos" | "block-lanczos" | "chebdav" | "eigh").
     assigner:       name in :data:`~repro.cluster.ASSIGNERS`
@@ -61,6 +63,11 @@ class SpectralClustering:
     cheb_degree:    Chebyshev filter degree for "chebdav".
     sparsify_t:     top-t per row for the "knn-topt" / "ooc-topt"
                     affinities (None = max(k + 2, 10)).
+    compute_dtype:  MXU product precision inside the "fused-rbf" kernel:
+                    None/"float32" (default) or "bfloat16"/"bf16"
+                    (halved MXU operand volume; accumulation stays f32
+                    either way, so only the similarity entries lose
+                    precision).
     chunk_size:     rows per chunk for the out-of-core "ooc-topt"
                     affinity and "streaming" assigner (None = 1024/4096).
     memory_budget:  engine shard-store RAM budget in bytes
@@ -77,6 +84,7 @@ class SpectralClustering:
                  sigma: float | None = None, lanczos_steps: int | None = None,
                  block_size: int | None = None, cheb_degree: int = 12,
                  kmeans_iters: int = 50, sparsify_t: int | None = None,
+                 compute_dtype: Any = None,
                  minibatch_size: int = 256, chunk_size: int | None = None,
                  memory_budget: int | None = None,
                  spill_dir: str | None = None, seed: int = 0,
@@ -99,6 +107,10 @@ class SpectralClustering:
         self.cheb_degree = cheb_degree
         self.kmeans_iters = kmeans_iters
         self.sparsify_t = sparsify_t
+        # validate eagerly (same philosophy as the registry lookups)
+        from repro.kernels.fused_rbf_matmat import resolve_compute_dtype
+        resolve_compute_dtype(compute_dtype)
+        self.compute_dtype = compute_dtype
         self.minibatch_size = minibatch_size
         self.chunk_size = chunk_size
         self.memory_budget = memory_budget

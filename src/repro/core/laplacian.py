@@ -47,15 +47,19 @@ def make_dense_operator(S: jax.Array, valid: jax.Array):
     return matmat, inv_sqrt
 
 
-def dense_shifted_matrix(S: jax.Array, valid: jax.Array) -> jax.Array:
-    """Materialized A = diag(valid) + D^{-1/2} S D^{-1/2} (for exact eigh)."""
-    inv_sqrt = masked_inv_sqrt(S @ valid)
+def dense_shifted_matrix(S: jax.Array, valid: jax.Array,
+                         inv_sqrt: jax.Array | None = None) -> jax.Array:
+    """Materialized A = diag(valid) + D^{-1/2} S D^{-1/2} (for exact eigh).
+
+    Pass the operator build's ``inv_sqrt`` when you have it — recomputing
+    it here costs a redundant full pass over S."""
+    if inv_sqrt is None:
+        inv_sqrt = masked_inv_sqrt(S @ valid)
     return jnp.diag(valid) + S * (inv_sqrt[:, None] * inv_sqrt[None, :])
 
 
-def dense_lsym(S: jax.Array) -> jax.Array:
-    d = dense_degrees(S)
-    inv_sqrt = jnp.where(d > 0, 1.0 / jnp.sqrt(jnp.maximum(d, 1e-12)), 0.0)
+def dense_lsym(S: jax.Array, deg: jax.Array | None = None) -> jax.Array:
+    inv_sqrt = masked_inv_sqrt(dense_degrees(S) if deg is None else deg)
     N = S * inv_sqrt[:, None] * inv_sqrt[None, :]
     return jnp.eye(S.shape[0], dtype=S.dtype) - N
 
@@ -101,9 +105,12 @@ def make_shifted_operator(
     return matvec
 
 
-def make_dense_shifted_matmat(S: jax.Array) -> Callable[[jax.Array], jax.Array]:
-    d = dense_degrees(S)
-    inv_sqrt = jnp.where(d > 0, 1.0 / jnp.sqrt(jnp.maximum(d, 1e-12)), 0.0)
+def make_dense_shifted_matmat(
+    S: jax.Array, deg: jax.Array | None = None
+) -> Callable[[jax.Array], jax.Array]:
+    """``deg`` threads a degree vector the caller already computed through
+    (one full pass over S saved per operator construction)."""
+    inv_sqrt = masked_inv_sqrt(dense_degrees(S) if deg is None else deg)
 
     def matmat(V: jax.Array) -> jax.Array:
         return V + inv_sqrt[:, None] * (S @ (inv_sqrt[:, None] * V))
@@ -111,8 +118,10 @@ def make_dense_shifted_matmat(S: jax.Array) -> Callable[[jax.Array], jax.Array]:
     return matmat
 
 
-def make_dense_shifted_operator(S: jax.Array) -> Callable[[jax.Array], jax.Array]:
-    matmat = make_dense_shifted_matmat(S)
+def make_dense_shifted_operator(
+    S: jax.Array, deg: jax.Array | None = None
+) -> Callable[[jax.Array], jax.Array]:
+    matmat = make_dense_shifted_matmat(S, deg)
 
     def matvec(v: jax.Array) -> jax.Array:
         return matmat(v[:, None])[:, 0]

@@ -7,7 +7,8 @@
 # k-means.  See API.md §repro.engine for the job-plan and shard contracts.
 from repro.engine.kmeans import streaming_kmeans
 from repro.engine.operator import ShardedCSRGraph, make_normalized_operator
-from repro.engine.plan import JobPlan, chunk_ranges, map_tiles, num_chunks
+from repro.engine.plan import (JobPlan, chunk_ranges, map_tiles, num_chunks,
+                               route_path)
 from repro.engine.runner import JobResult, build_graph, run_job
 from repro.engine.store import ShardStore
 
@@ -21,6 +22,7 @@ __all__ = [
     "make_normalized_operator",
     "map_tiles",
     "num_chunks",
+    "route_path",
     "run_job",
     "streaming_kmeans",
 ]

@@ -25,7 +25,7 @@ from repro.core import similarity as sim
 from repro.engine import kmeans as skm
 from repro.engine import tasks
 from repro.engine.operator import (ShardedCSRGraph, make_normalized_operator)
-from repro.engine.plan import JobPlan
+from repro.engine.plan import JobPlan, route_path
 from repro.engine.store import ShardStore
 
 
@@ -36,7 +36,7 @@ class JobResult:
     eigenvalues: np.ndarray      # (k,) smallest of L_sym, ascending
     centers: np.ndarray          # (k, k)
     sigma: float
-    graph: ShardedCSRGraph
+    graph: Optional[ShardedCSRGraph]   # None on the fused (matrix-free) path
     stats: Dict = field(default_factory=dict)
 
 
@@ -98,15 +98,72 @@ def build_graph(reader, plan: JobPlan,
                            stats=stats), sigma
 
 
+def _run_fused(plan: JobPlan, reader) -> JobResult:
+    """The planner's fused route: the points fit in memory even though the
+    dense similarity would not, so instead of spilling CSR shards the job
+    runs the matrix-free fused-RBF operator (O(n*d) affinity memory) with
+    the same block eigensolve + streaming k-means tail as the ooc path."""
+    from repro.cluster.affinity import build_fused_rbf_operator
+    from repro.distrib import mesh_utils
+
+    sigma = _resolve_sigma(reader, plan)
+    x = np.concatenate([np.asarray(reader[c], np.float32)
+                        for c in range(plan.nchunks)])
+    mesh = mesh_utils.local_mesh("rows")
+    t0 = time.perf_counter()
+    op = build_fused_rbf_operator(jnp.asarray(x), sigma, mesh,
+                                  compute_dtype=plan.compute_dtype)
+    t_build = time.perf_counter() - t0
+
+    key = jax.random.PRNGKey(plan.seed)
+    _, k_lan, _k_km = jax.random.split(key, 3)
+    b = plan.eff_block_size()
+    block_steps = plan.num_block_steps()
+    t0 = time.perf_counter()
+    state = lz.block_lanczos(op.matmat, op.n_pad, block_steps, k_lan,
+                             block_size=b)
+    evals, Z = lz.block_topk_of_shifted(state, plan.k)
+    t_eig = time.perf_counter() - t0
+
+    Y = np.asarray(km.normalize_rows(Z) * op.valid[:, None])[:plan.n]
+    ranges = plan.ranges
+    t0 = time.perf_counter()
+    labels, centers = skm.streaming_kmeans(
+        lambda c: Y[ranges[c][0]:ranges[c][1]], plan.nchunks, plan.k,
+        rounds=plan.kmeans_rounds, seed=plan.seed)
+    t_km = time.perf_counter() - t0
+
+    stats = dict(op.stats_snapshot(), path="fused", chunks=plan.nchunks,
+                 points_bytes=int(x.nbytes),
+                 lanczos_steps=plan.num_lanczos_steps(),
+                 block_size=b, block_steps=block_steps,
+                 build_s=round(t_build, 4),
+                 eigensolve_s=round(t_eig, 4), kmeans_s=round(t_km, 4))
+    return JobResult(labels=labels, embedding=Y,
+                     eigenvalues=np.asarray(evals), centers=centers,
+                     sigma=sigma, graph=None, stats=stats)
+
+
 def run_job(plan: JobPlan, reader) -> JobResult:
     """Full out-of-core pipeline: staged graph build, shard-streaming
     block Lanczos, chunked mini-batch k-means.  ``reader[c]`` must yield
     the (rows, d) point chunk for range ``plan.ranges[c]``.
 
-    The eigensolve is the *block* recurrence: each block step pulls every
-    CSR shard from the store exactly once and amortizes it over the
-    b-wide block, so the same Krylov dimension costs ~1/b the shard
-    loads (and spill-reloads) of the single-vector iteration."""
+    Phase 1 honours the planner's routing (:func:`repro.engine.plan.
+    route_path`): jobs whose points fit the memory budget but whose dense
+    similarity does not take the fused matrix-free path instead of
+    spilling CSR shards (``plan.path`` forces either way).
+
+    On the ooc path the eigensolve is the *block* recurrence: each block
+    step pulls every CSR shard from the store exactly once and amortizes
+    it over the b-wide block, so the same Krylov dimension costs ~1/b the
+    shard loads (and spill-reloads) of the single-vector iteration."""
+    if plan.path == "fused":
+        return _run_fused(plan, reader)
+    if plan.path == "auto":         # probe d only when routing needs it
+        d = int(np.asarray(reader[0]).shape[1])
+        if route_path(plan, d) == "fused":
+            return _run_fused(plan, reader)
     graph, sigma = build_graph(reader, plan)
     op = make_normalized_operator(graph)
 
@@ -128,7 +185,7 @@ def run_job(plan: JobPlan, reader) -> JobResult:
         rounds=plan.kmeans_rounds, seed=plan.seed)
     t_km = time.perf_counter() - t0
 
-    stats = dict(graph.stats_snapshot(),
+    stats = dict(graph.stats_snapshot(), path="ooc",
                  lanczos_steps=plan.num_lanczos_steps(),
                  block_size=b, block_steps=block_steps,
                  matrix_passes=block_steps,

@@ -40,6 +40,34 @@ def rbf_similarity(x: jax.Array, y: jax.Array, sigma, *, bm: int = 128,
     return out[:n, :m]
 
 
+def fused_rbf_matmat(x: jax.Array, y: jax.Array, V: jax.Array, sigma,
+                     row_scale: jax.Array | None = None,
+                     col_scale: jax.Array | None = None, *,
+                     bm: int = 128, bn: int = 128, compute_dtype=None,
+                     interpret: bool | None = None) -> jax.Array:
+    """diag(row_scale) @ RBF(x, y; sigma) @ diag(col_scale) @ V for any
+    (n, d)/(m, d)/(m, b) — the similarity tile is recomputed in-register,
+    never materialized.  Omitted scales default to ones; padded rows get
+    scale 0 so they contribute nothing."""
+    from repro.kernels import fused_rbf_matmat as _frm
+    if interpret is None:
+        interpret = _interpret_default()
+    n, m = x.shape[0], y.shape[0]
+    rs = jnp.ones((n,), jnp.float32) if row_scale is None \
+        else jnp.asarray(row_scale, jnp.float32)
+    cs = jnp.ones((m,), jnp.float32) if col_scale is None \
+        else jnp.asarray(col_scale, jnp.float32)
+    xp, _ = _pad_rows(x, bm)
+    yp, _ = _pad_rows(y, bn)
+    Vp, _ = _pad_rows(V, bn)
+    rsp, _ = _pad_rows(rs, bm)
+    csp, _ = _pad_rows(cs, bn)
+    out = _frm.fused_rbf_matmat(xp, yp, Vp, sigma, rsp, csp, bm=bm, bn=bn,
+                                compute_dtype=compute_dtype,
+                                interpret=interpret)
+    return out[:n]
+
+
 def block_matmat(A: jax.Array, V: jax.Array, *, bm: int = 256, bn: int = 512,
                  interpret: bool | None = None) -> jax.Array:
     """A @ V for any (n, m) A and (m, b) V (one matrix pass per block)."""

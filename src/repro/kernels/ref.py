@@ -13,6 +13,13 @@ def rbf_similarity(x: jax.Array, y: jax.Array, sigma) -> jax.Array:
     return jnp.exp(-d2 / (2.0 * jnp.asarray(sigma, x.dtype) ** 2))
 
 
+def fused_rbf_matmat(x: jax.Array, y: jax.Array, V: jax.Array, sigma,
+                     row_scale: jax.Array, col_scale: jax.Array) -> jax.Array:
+    """diag(row_scale) @ RBF(x, y) @ diag(col_scale) @ V — materialized."""
+    S = rbf_similarity(x, y, sigma)
+    return row_scale[:, None] * (S @ (col_scale[:, None] * V))
+
+
 def block_matvec(A: jax.Array, v: jax.Array) -> jax.Array:
     """A @ v."""
     return A @ v

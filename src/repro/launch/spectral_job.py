@@ -44,6 +44,10 @@ def main(argv=None):
                          "--affinity triangular/dense")
     ap.add_argument("--sparsify-t", type=int, default=None,
                     help="top-t per row for --affinity knn-topt / ooc-topt")
+    ap.add_argument("--compute-dtype", default=None,
+                    choices=["float32", "f32", "bfloat16", "bf16"],
+                    help="MXU product precision inside --affinity fused-rbf "
+                         "(accumulation is always f32)")
     ap.add_argument("--engine", default=None, choices=["mapreduce"],
                     help="run phase 1 out-of-core through repro.engine "
                          "(forces --affinity ooc-topt)")
@@ -82,8 +86,9 @@ def main(argv=None):
         eigensolver=args.eigensolver, assigner=args.assigner,
         lanczos_steps=args.lanczos_steps, block_size=args.block_size,
         cheb_degree=args.cheb_degree, sparsify_t=args.sparsify_t,
-        chunk_size=args.chunk_size, memory_budget=args.memory_budget,
-        spill_dir=args.spill_dir, mesh=mesh)
+        compute_dtype=args.compute_dtype, chunk_size=args.chunk_size,
+        memory_budget=args.memory_budget, spill_dir=args.spill_dir,
+        mesh=mesh)
 
     t0 = time.time()
     if args.graph:
@@ -111,7 +116,7 @@ def main(argv=None):
         print(f"[spectral] matrix_passes={est.info_['matrix_passes']}")
     print(f"[spectral] cluster sizes: {sizes}")
     eng = est.info_.get("engine")
-    if eng:
+    if eng and "map_tasks" in eng:
         print(f"[engine] map={eng['map_tasks']} shuffle={eng['shuffle_tasks']} "
               f"reduce={eng['reduce_tasks']} chunks={eng['chunks']} "
               f"nnz={eng['nnz']}")
@@ -119,6 +124,15 @@ def main(argv=None):
               f"spills={eng['store_spills']} "
               f"bytes_spilled={eng['store_bytes_spilled']} "
               f"peak_ram={eng['store_peak_ram_bytes']}")
+        if "prefetch_hits" in eng:
+            print(f"[engine] prefetch_hits={eng['prefetch_hits']} "
+                  f"prefetch_misses={eng['prefetch_misses']}")
+    elif eng and "bytes_streamed" in eng:  # the fused matrix-free affinity
+        print(f"[fused] compute_dtype={eng['compute_dtype']} "
+              f"passes={eng['matrix_passes']} "
+              f"bytes_streamed={eng['bytes_streamed']} "
+              f"peak_affinity_bytes={eng['affinity_peak_bytes']} "
+              f"(dense equiv {eng['dense_equiv_bytes']})")
     if truth is not None:
         from itertools import permutations
         k = args.k

@@ -30,7 +30,7 @@ from repro.distrib import mesh_utils
 
 # every affinity must satisfy the matmat == stacked-matvec law
 BACKENDS = ("dense", "triangular", "compact", "precomputed", "knn-topt",
-            "ooc-topt")
+            "ooc-topt", "fused-rbf")
 
 
 @functools.lru_cache(maxsize=None)
@@ -237,12 +237,16 @@ def test_block_lanczos_cuts_engine_shard_gets():
     for solver in ("lanczos", "block-lanczos"):
         est = SpectralClustering(3, eigensolver=solver, sigma=1.0,
                                  lanczos_steps=32, block_size=8, seed=0)
+        graph._drain_prefetch()          # settle the async warm-start get
         before = graph.store.stats["gets"]
         _, Z, info = EIGENSOLVERS.get(solver)(est, op, jax.random.PRNGKey(0))
         jax.block_until_ready(Z)
+        graph._drain_prefetch()          # ...so both counts are exact
         gets[solver] = graph.store.stats["gets"] - before
-    # 32 scalar passes vs ceil(32/8)=4 block passes over 4 shards
-    assert gets["lanczos"] >= 8 * gets["block-lanczos"] > 0
+    # 32 scalar passes vs ceil(32/8)=4 block passes over 4 shards; each
+    # eigensolve pays one extra warm-start get (129 vs 17), so the
+    # reduction bound is 7x, not the asymptotic 8x
+    assert gets["lanczos"] >= 7 * gets["block-lanczos"] > 0
 
 
 def test_cli_chebdav_selectable(capsys):
