@@ -29,6 +29,11 @@ Prints ``name,us_per_call,derived`` CSV rows.
                     time, peak affinity-stage bytes, ARI vs dense/eigh
                     labels, and the engine's prefetch hit counters under
                     a spill-forcing budget.  Writes BENCH_fused.json.
+  serve_sweep       the serving path: fused vs dense out-of-sample
+                    transform (wall + peak bytes + label parity) at
+                    m queries vs an n=8192 model, save/load round-trip
+                    bitwise predict parity, and the batched predict
+                    service's throughput.  Writes BENCH_serve.json.
 
 Run ``python benchmarks/run.py [mode ...]`` — no mode runs the full
 default suite; ``eigensolver_sweep`` / ``fused_sweep`` run just the
@@ -508,6 +513,141 @@ def fused_sweep(ns=(1024, 2048, 8192), k: int = 8,
     print(f"# wrote {out_json}")
 
 
+def serve_sweep(n: int = 8192, k: int = 8, ms=(1024, 8192),
+                out_json: str = "BENCH_serve.json"):
+    """The serving path (ISSUE 5 acceptance): fused vs dense out-of-sample
+    transform at m queries against an n=8192-point fitted model.
+
+    Per m: wall seconds and peak transform-stage bytes for both paths
+    (dense: the materialized (m, n) query-vs-train kernel; fused: the
+    O((m+n)*d + n*k) working set the serving layer advertises), plus
+    predict-label parity.  Then the persistence contract — save -> load ->
+    predict must be bitwise-equal to the fitted estimator — and the
+    batched predict service's throughput/latency on the loaded model.
+
+    Acceptance gates asserted here: fused peak <= 5% of dense at m=n=8192
+    with label parity, and the round-trip bitwise equality.
+    """
+    import os
+    import tempfile
+
+    from repro.cluster import serving
+    from repro.launch.cluster_serve import (ClusterServer, PredictRequest,
+                                            summarize)
+
+    results: dict = {"n": n, "k": k, "dim": 8, "rows": []}
+    pts, _ = synthetic.blobs(n, k, dim=8, spread=0.6, seed=0)
+    est = SpectralClustering(k=k, affinity="fused-rbf",
+                             eigensolver="block-lanczos", block_size=8,
+                             sigma=1.0, seed=0, lanczos_steps=64)
+    t0 = time.perf_counter()
+    est.fit(jnp.asarray(pts))
+    fit_s = time.perf_counter() - t0
+    results["fit_wall_s"] = round(fit_s, 3)
+    row("serve_sweep/fit", fit_s * 1e6, f"n={n} affinity=fused-rbf")
+
+    rng = np.random.RandomState(1)
+    for m in ms:
+        idx = rng.choice(n, size=m)
+        q = jnp.asarray((pts[idx] + 0.05 * rng.randn(m, pts.shape[1])
+                         ).astype(np.float32))
+
+        def timed_labels(path):
+            est.transform_path = path
+            jax.block_until_ready(est.predict(q))        # warm/compile
+            t0 = time.perf_counter()
+            labels = jax.block_until_ready(est.predict(q))
+            return np.asarray(labels), time.perf_counter() - t0
+
+        dense_labels, dense_s = timed_labels("dense")
+        dense_peak = m * n * 4                           # the (m, n) kernel
+        row(f"serve_sweep/dense_m{m}", dense_s * 1e6,
+            f"peak_transform_bytes={dense_peak}")
+
+        fused_labels, fused_s = timed_labels("fused")
+        fused_peak = serving.transform_peak_bytes(m, n, pts.shape[1], k)
+        a = ari(dense_labels, fused_labels)
+        exact = float(np.mean(dense_labels == fused_labels))
+        row(f"serve_sweep/fused_m{m}", fused_s * 1e6,
+            f"peak_transform_bytes={fused_peak} "
+            f"({fused_peak / dense_peak:.4f}x dense) "
+            f"ari_vs_dense={a:.3f} label_match={exact:.4f}")
+        results["rows"].append({
+            "m": m, "dense_wall_s": round(dense_s, 4),
+            "fused_wall_s": round(fused_s, 4),
+            "dense_peak_transform_bytes": dense_peak,
+            "fused_peak_transform_bytes": int(fused_peak),
+            "fused_vs_dense_ari": float(a),
+            "fused_vs_dense_label_match": exact,
+        })
+
+    big = results["rows"][-1]
+    mem_ratio = (big["fused_peak_transform_bytes"]
+                 / big["dense_peak_transform_bytes"])
+    results["fused_mem_ratio_at_max_m"] = mem_ratio
+    row("serve_sweep/acceptance", 0.0,
+        f"m={big['m']} mem_ratio={mem_ratio:.4f} "
+        f"ari={big['fused_vs_dense_ari']:.3f}")
+    assert mem_ratio <= 0.05, mem_ratio
+    assert big["fused_vs_dense_ari"] >= 0.99, big
+
+    # -- persistence round trip: bitwise predict parity -------------------
+    est.transform_path = "auto"
+    with tempfile.TemporaryDirectory() as d:
+        model_dir = os.path.join(d, "model")
+        t0 = time.perf_counter()
+        est.save(model_dir)
+        save_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        est2 = SpectralClustering.load(model_dir)
+        load_s = time.perf_counter() - t0
+        q = jnp.asarray((pts[:2048] + 0.05).astype(np.float32))
+        p1 = np.asarray(est.predict(q))
+        p2 = np.asarray(est2.predict(q))
+        bitwise = bool((p1 == p2).all())
+        e1 = np.asarray(est.transform(q))
+        e2 = np.asarray(est2.transform(q))
+        bitwise = bitwise and bool((e1 == e2).all())
+        results["save_wall_s"] = round(save_s, 3)
+        results["load_wall_s"] = round(load_s, 3)
+        results["roundtrip_predict_bitwise_equal"] = bitwise
+        row("serve_sweep/roundtrip", (save_s + load_s) * 1e6,
+            f"save={save_s:.2f}s load={load_s:.2f}s bitwise={bitwise}")
+        assert bitwise
+
+        # -- batched predict service on the loaded model ------------------
+        est2.transform_path = "fused"
+        queue = []
+        for rid in range(16):
+            mi = 512 + rng.randint(-64, 65)
+            idx = rng.choice(n, size=mi)
+            queue.append(PredictRequest(
+                rid=rid, points=(pts[idx]
+                                 + 0.05 * rng.randn(mi, pts.shape[1])
+                                 ).astype(np.float32)))
+        srv = ClusterServer(est2, batch_rows=1024)
+        t0 = time.perf_counter()
+        done = srv.run(queue)
+        wall = time.perf_counter() - t0
+        s = summarize(done, wall)
+        fill = srv.stats["rows_live"] / max(
+            srv.stats["rows_live"] + srv.stats["rows_padded"], 1)
+        results["service"] = {
+            "batch_rows": 1024, **{k2: (round(v, 2) if isinstance(v, float)
+                                        else v) for k2, v in s.items()},
+            "batch_steps": srv.steps, "fill": round(fill, 3),
+        }
+        row("serve_sweep/service", wall * 1e6,
+            f"{s['points']} pts in {srv.steps} steps "
+            f"{s['points_per_s']:.0f} pts/s fill={fill:.0%} "
+            f"p50={s['latency_p50_ms']:.0f}ms")
+        assert all(r.done for r in done)
+
+    with open(out_json, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"# wrote {out_json}")
+
+
 MODES = {
     "table1_phases": table1_phases,
     "fig5_speedup": fig5_speedup,
@@ -518,6 +658,7 @@ MODES = {
     "engine_ooc": engine_ooc,
     "eigensolver_sweep": eigensolver_sweep,
     "fused_sweep": fused_sweep,
+    "serve_sweep": serve_sweep,
 }
 
 # modes the bare invocation runs (the sweep is opt-in: it is a benchmark

@@ -71,7 +71,7 @@ class CheckpointManager:
 
     def _gc(self, name: str):
         with self._lock:
-            steps = self.all_steps(name)
+            steps = self._list_steps(name)
             for s in steps[: -self.keep]:
                 try:
                     os.remove(os.path.join(self.dir, f"{name}_{s:010d}.npz"))
@@ -79,7 +79,10 @@ class CheckpointManager:
                     pass
 
     # -- read ----------------------------------------------------------------
-    def all_steps(self, name: str = "state") -> list[int]:
+    def _list_steps(self, name: str) -> list[int]:
+        """Directory scan WITHOUT the lock — callers must hold ``_lock``
+        (the async writer GCs under it, so an unlocked listing can observe
+        a torn set of files mid-removal)."""
         pat = re.compile(rf"{re.escape(name)}_(\d+)\.npz$")
         steps = []
         for fn in os.listdir(self.dir):
@@ -87,6 +90,10 @@ class CheckpointManager:
             if m:
                 steps.append(int(m.group(1)))
         return sorted(steps)
+
+    def all_steps(self, name: str = "state") -> list[int]:
+        with self._lock:
+            return self._list_steps(name)
 
     def latest_step(self, name: str = "state") -> int | None:
         steps = self.all_steps(name)
@@ -105,11 +112,19 @@ class CheckpointManager:
         with np.load(path) as data:
             flat = dict(data)
         paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+        keys = ["/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                         for p in path_keys) for path_keys, _ in paths]
+        missing = sorted(k for k in keys if k not in flat)
+        extra = sorted(set(flat) - set(keys))
+        if missing or extra:
+            raise ValueError(
+                f"checkpoint '{name}' step {step} does not match the "
+                f"restore template: missing from checkpoint {missing}, "
+                f"not in template {extra}")
         leaves = []
         shard_leaves = (jax.tree.leaves(shardings) if shardings is not None
                         else [None] * len(paths))
-        for (path_keys, tmpl), shard in zip(paths, shard_leaves):
-            key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path_keys)
+        for key, shard in zip(keys, shard_leaves):
             arr = flat[key]
             if shard is not None:
                 leaves.append(jax.device_put(arr, shard))

@@ -2,6 +2,7 @@
 # SpectralClustering entry point, three backend registries (affinity,
 # eigensolver, assigner) meeting at the NormalizedOperator interface.
 # See API.md at the repo root for the backend protocols.
+from repro.cluster import serving
 from repro.cluster.affinity import AFFINITIES
 from repro.cluster.assigners import ASSIGNERS
 from repro.cluster.eigensolvers import EIGENSOLVERS
@@ -21,4 +22,5 @@ __all__ = [
     "ari",
     "nmi",
     "purity",
+    "serving",
 ]

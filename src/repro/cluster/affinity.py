@@ -154,11 +154,8 @@ def knn_topt_affinity(est, x, sigma, mesh) -> NormalizedOperator:
 
 
 def _fused_tile(n: int) -> int:
-    """MXU-aligned tile side for the fused kernel.  Larger tiles quarter
-    the grid-cell count (which is what interpret mode pays for) and on TPU
-    amortize more MXU work per VMEM fill; small problems stay at 128 so
-    padding overhead stays bounded."""
-    return 256 if n >= 2048 else 128
+    from repro.kernels.fused_rbf_matmat import default_tile
+    return default_tile(n)
 
 
 def build_fused_rbf_operator(x, sigma, mesh, *, compute_dtype=None,

@@ -28,11 +28,17 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.core import kmeans as km
 from repro.core import laplacian as lp
 from repro.core import similarity as sim
+from repro.cluster import serving
 from repro.cluster.affinity import AFFINITIES
 from repro.cluster.assigners import ASSIGNERS
 from repro.cluster.eigensolvers import EIGENSOLVERS
 from repro.cluster.operator import SpectralResult
 from repro.distrib import mesh_utils
+
+# on-disk model layout version (est.save / SpectralClustering.load)
+MODEL_FORMAT = 1
+_MODEL_ARRAYS = ("train_x", "eigvecs", "inv_sqrt", "eigenvalues", "centers",
+                 "sigma", "labels", "embedding")
 
 
 class SpectralClustering:
@@ -67,7 +73,13 @@ class SpectralClustering:
                     None/"float32" (default) or "bfloat16"/"bf16"
                     (halved MXU operand volume; accumulation stays f32
                     either way, so only the similarity entries lose
-                    precision).
+                    precision).  Also read by the fused transform path.
+    transform_path: out-of-sample extension path for transform/predict:
+                    "auto" (default — the (m, n) kernel's bytes against
+                    ``memory_budget`` or a 64 MiB default decide, like
+                    ``engine.route_path``), "dense" (materialize the
+                    query-vs-train kernel) or "fused" (matrix-free
+                    dual-output kernel, O((m+n)*d + n*k) memory).
     chunk_size:     rows per chunk for the out-of-core "ooc-topt"
                     affinity and "streaming" assigner (None = 1024/4096).
     memory_budget:  engine shard-store RAM budget in bytes
@@ -84,7 +96,7 @@ class SpectralClustering:
                  sigma: float | None = None, lanczos_steps: int | None = None,
                  block_size: int | None = None, cheb_degree: int = 12,
                  kmeans_iters: int = 50, sparsify_t: int | None = None,
-                 compute_dtype: Any = None,
+                 compute_dtype: Any = None, transform_path: str = "auto",
                  minibatch_size: int = 256, chunk_size: int | None = None,
                  memory_budget: int | None = None,
                  spill_dir: str | None = None, seed: int = 0,
@@ -111,6 +123,9 @@ class SpectralClustering:
         from repro.kernels.fused_rbf_matmat import resolve_compute_dtype
         resolve_compute_dtype(compute_dtype)
         self.compute_dtype = compute_dtype
+        serving.check_transform_path(transform_path)
+        self.transform_path = transform_path
+        self._transform_cache: dict = {}
         self.minibatch_size = minibatch_size
         self.chunk_size = chunk_size
         self.memory_budget = memory_budget
@@ -224,6 +239,12 @@ class SpectralClustering:
         N the degree-normalized kernel and mu_j = 1 - lambda_j the
         eigenvalue of N; rows are then unit-normalized like the training
         embedding.  Requires a feature-space fit (not "precomputed").
+
+        Routed per ``transform_path``: the dense path materializes the
+        (m, n) query-vs-train kernel (fine for small problems); the fused
+        path streams it through the dual-output Pallas kernel and never
+        builds it (O((m+n)*d + n*k) memory).  Both agree to <= 1e-4 in
+        f32; the route taken is recorded in ``info_["transform"]``.
         """
         self._check_fitted()
         if self._train_x is None:
@@ -232,13 +253,28 @@ class SpectralClustering:
                 "fitted from a precomputed similarity matrix cannot embed "
                 "new points")
         x = jnp.asarray(x, self.dtype)
-        K = sim.rbf_kernel(x, self._train_x, self.sigma_)
-        inv_new = lp.masked_inv_sqrt(jnp.sum(K, axis=1))
-        N_new = K * inv_new[:, None] * self._inv_sqrt[None, :]
-        mu = 1.0 - self.eigenvalues_                       # eigvals of N
-        mu = jnp.where(jnp.abs(mu) > 1e-6, mu, 1e-6)
-        emb = (N_new @ self._eigvecs) / mu[None, :]
-        return km.normalize_rows(emb)
+        m, n = int(x.shape[0]), int(self._train_x.shape[0])
+        path = serving.route_transform(n, m, path=self.transform_path,
+                                       memory_budget=self.memory_budget)
+        mu = serving.shifted_mu(self.eigenvalues_)
+        if path == "dense":
+            K = sim.rbf_kernel(x, self._train_x, self.sigma_)
+            O = K @ (self._inv_sqrt[:, None] * self._eigvecs)
+            emb = serving.extension_from_product(O, jnp.sum(K, axis=1), mu)
+            peak = m * n * 4
+        else:
+            emb = serving.fused_transform(
+                x, self._train_x, self._eigvecs, self._inv_sqrt,
+                self.sigma_, mu, mesh=self._mesh(),
+                compute_dtype=self.compute_dtype,
+                _cache=self._transform_cache)
+            peak = serving.transform_peak_bytes(
+                m, n, int(x.shape[1]), self.k,
+                mesh_size=mesh_utils.mesh_size(self._mesh()))
+        self.info_.setdefault("transform", {}).update(
+            path=path, m=m, peak_bytes=int(peak),
+            dense_equiv_bytes=m * n * 4)
+        return emb
 
     def predict(self, x: jax.Array) -> jax.Array:
         """Nearest-center cluster assignment of new points in embedding
@@ -249,3 +285,104 @@ class SpectralClustering:
         if self.result_ is None:
             raise ValueError("this SpectralClustering instance is not "
                              "fitted yet; call fit() first")
+
+    # -- persistence ----------------------------------------------------------
+
+    def save(self, directory: str) -> str:
+        """Persist the fitted model (the Nystrom serving state: training
+        points, eigenvector block, D^{-1/2}, eigenvalues, centers, sigma,
+        plus labels/embedding) to ``directory`` — one ``CheckpointManager``
+        npz of logical, unsharded arrays plus a ``config.json`` of the
+        constructor parameters.  Restore with
+        :meth:`SpectralClustering.load`, on any device count (elastic:
+        arrays re-place onto whatever mesh the loading process has)."""
+        import json
+        import os
+
+        from repro.checkpoint import CheckpointManager
+        from repro.kernels.fused_rbf_matmat import resolve_compute_dtype
+
+        self._check_fitted()
+        if self._train_x is None:
+            raise ValueError(
+                "cannot save a model fitted from a precomputed similarity "
+                "matrix; transform/predict would have no training points")
+        os.makedirs(directory, exist_ok=True)
+        state = {"train_x": self._train_x, "eigvecs": self._eigvecs,
+                 "inv_sqrt": self._inv_sqrt,
+                 "eigenvalues": self.eigenvalues_, "centers": self.centers_,
+                 "sigma": self.sigma_, "labels": self.labels_,
+                 "embedding": self.embedding_}
+        mgr = CheckpointManager(directory, keep=1, async_write=False)
+        path = mgr.save(0, state, name="model")
+        cfg = {
+            "format": MODEL_FORMAT,
+            "params": {
+                "k": self.k, "affinity": self.affinity,
+                "eigensolver": self.eigensolver, "assigner": self.assigner,
+                "sigma": self.sigma, "lanczos_steps": self.lanczos_steps,
+                "block_size": self.block_size,
+                "cheb_degree": self.cheb_degree,
+                "kmeans_iters": self.kmeans_iters,
+                "sparsify_t": self.sparsify_t,
+                # normalize to the string form (the constructor may have
+                # been handed a dtype object, which JSON can't encode)
+                "compute_dtype": None if self.compute_dtype is None else
+                jnp.dtype(resolve_compute_dtype(self.compute_dtype)).name,
+                "transform_path": self.transform_path,
+                "minibatch_size": self.minibatch_size,
+                "chunk_size": self.chunk_size,
+                "memory_budget": self.memory_budget,
+                "seed": self.seed, "dtype": jnp.dtype(self.dtype).name,
+            },
+            "fitted": {"n": int(self._train_x.shape[0]),
+                       "d": int(self._train_x.shape[1]),
+                       "info": {k: v for k, v in self.info_.items()
+                                if isinstance(v, (str, int, float))}},
+        }
+        tmp = os.path.join(directory, "config.json.tmp")
+        with open(tmp, "w") as f:
+            json.dump(cfg, f, indent=2)
+        os.replace(tmp, os.path.join(directory, "config.json"))
+        return path
+
+    @classmethod
+    def load(cls, directory: str, *,
+             mesh: Optional[Mesh] = None) -> "SpectralClustering":
+        """Rebuild a fitted estimator from :meth:`save` output.  The
+        restored model predicts bitwise-identically to the estimator that
+        was saved (same routing, same kernel passes); ``mesh`` defaults to
+        all local devices, whatever their count was at save time."""
+        import json
+        import os
+
+        from repro.checkpoint import CheckpointManager
+
+        with open(os.path.join(directory, "config.json")) as f:
+            cfg = json.load(f)
+        if cfg.get("format") != MODEL_FORMAT:
+            raise ValueError(
+                f"unsupported model format {cfg.get('format')!r} in "
+                f"{directory} (this build reads format {MODEL_FORMAT})")
+        params = dict(cfg["params"])
+        params["dtype"] = jnp.dtype(params["dtype"])
+        est = cls(mesh=mesh, **params)
+        mgr = CheckpointManager(directory, keep=1, async_write=False)
+        # the template only supplies the pytree structure; leaf values and
+        # shapes come from the checkpoint itself
+        state = mgr.restore({name: 0 for name in _MODEL_ARRAYS},
+                            name="model")
+        est._train_x = jnp.asarray(state["train_x"], est.dtype)
+        est._eigvecs = state["eigvecs"]
+        est._inv_sqrt = state["inv_sqrt"]
+        est.eigenvalues_ = state["eigenvalues"]
+        est.centers_ = state["centers"]
+        est.sigma_ = state["sigma"]
+        est.labels_ = state["labels"]
+        est.embedding_ = state["embedding"]
+        est.info_ = dict(cfg["fitted"].get("info", {}))
+        est.result_ = SpectralResult(
+            labels=est.labels_, embedding=est.embedding_,
+            eigenvalues=est.eigenvalues_, centers=est.centers_,
+            sigma=est.sigma_, info=est.info_)
+        return est

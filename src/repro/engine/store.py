@@ -47,7 +47,7 @@ class ShardStore:
         self._disk: Dict[str, str] = {}          # key -> npz path
         self.ram_bytes = 0
         self.stats = {
-            "puts": 0, "gets": 0, "spills": 0, "loads": 0,
+            "puts": 0, "gets": 0, "spills": 0, "drops": 0, "loads": 0,
             "bytes_spilled": 0, "peak_ram_bytes": 0,
         }
 
@@ -110,19 +110,26 @@ class ShardStore:
         arrays = self._ram.pop(key)
         nbytes = _nbytes(arrays)
         self.ram_bytes -= nbytes
-        if key not in self._disk:                # already on disk if reloaded
+        if key not in self._disk:                # first eviction: write it
             path = self._path(key)
             np.savez(path, **arrays)
             self._disk[key] = path
             self.stats["bytes_spilled"] += nbytes
-        self.stats["spills"] += 1
+            self.stats["spills"] += 1
+        else:                                    # reloaded copy: just drop —
+            self.stats["drops"] += 1             # the npz is already current
 
     def _enforce_budget(self, keep: Optional[str] = None) -> None:
         if self.memory_budget is None:
             return
         while self.ram_bytes > self.memory_budget and self._ram:
             victim = next(iter(self._ram))       # least recently used
-            if victim == keep and len(self._ram) > 1:
+            if victim == keep:
+                if len(self._ram) == 1:
+                    # the caller holds a reference to ``keep`` — evicting
+                    # it here would make every over-budget get() reload
+                    # and re-drop the same entry forever
+                    break
                 self._ram.move_to_end(victim)
                 victim = next(iter(self._ram))
             self._spill_one(victim)

@@ -67,6 +67,15 @@ def resolve_compute_dtype(spec) -> jnp.dtype:
     return jnp.bfloat16 if dt == jnp.dtype(jnp.bfloat16) else jnp.float32
 
 
+def default_tile(n: int) -> int:
+    """MXU-aligned tile side for the fused kernels (fit- and serving-side
+    share one rule): larger tiles quarter the grid-cell count — which is
+    what interpret mode pays for — and on TPU amortize more MXU work per
+    VMEM fill; small problems stay at 128 so padding overhead stays
+    bounded."""
+    return 256 if n >= 2048 else 128
+
+
 def _fused_kernel(x_ref, y_ref, v_ref, rs_ref, cs_ref, inv2s2_ref, o_ref,
                   *, compute_dtype):
     j = pl.program_id(1)
@@ -93,6 +102,105 @@ def _fused_kernel(x_ref, y_ref, v_ref, rs_ref, cs_ref, inv2s2_ref, o_ref,
         (((1,), (0,)), ((), ())),
         preferred_element_type=jnp.float32)     # (bm, b), f32 accumulate
     o_ref[...] += rs_ref[...] * acc             # row D^{-1/2}, in place
+
+
+def _nystrom_kernel(x_ref, y_ref, v_ref, cs_ref, cv_ref, inv2s2_ref,
+                    o_ref, deg_ref, *, compute_dtype):
+    """Rectangular serving twin of :func:`_fused_kernel`: one sweep over the
+    training tiles accumulates BOTH the product ``K @ (col_scale * V)`` and
+    the query-side degree column ``K @ col_valid`` — the two quantities the
+    Nystrom out-of-sample extension needs, so ``transform`` costs exactly
+    one pass over the training set per query batch."""
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        deg_ref[...] = jnp.zeros_like(deg_ref)
+
+    x = x_ref[...]                              # (bm, d) query tile, f32
+    y = y_ref[...]                              # (bn, d) training tile, f32
+    xx = jnp.sum(x * x, axis=-1)[:, None]
+    yy = jnp.sum(y * y, axis=-1)[None, :]
+    xy = jax.lax.dot_general(
+        x.astype(compute_dtype), y.astype(compute_dtype),
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)     # MXU, f32 accumulate
+    d2 = jnp.maximum(xx + yy - 2.0 * xy, 0.0)
+    tile = jnp.exp(-d2 * inv2s2_ref[0])         # (bm, bn), in-register only
+    # degree counts every VALID training column (padding masked by cv);
+    # the product is masked through col_scale (0 on padding) instead, so
+    # isolated training points (valid but zero-degree) still contribute to
+    # the query degree exactly like the materialized dense path
+    deg_ref[...] += jnp.sum(tile * cv_ref[...][:, 0][None, :], axis=1,
+                            keepdims=True)
+    w = cs_ref[...] * v_ref[...]                # (bn, b): col_scale * V tile
+    acc = jax.lax.dot_general(
+        tile.astype(compute_dtype), w.astype(compute_dtype),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)     # (bm, b), f32 accumulate
+    o_ref[...] += acc
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bm", "bn", "compute_dtype", "interpret"))
+def _nystrom(x, y, V, inv2s2, col_scale, col_valid, *, bm, bn, compute_dtype,
+             interpret):
+    m, d = x.shape                               # m queries vs n training
+    n = y.shape[0]
+    b = V.shape[1]
+    grid = (m // bm, n // bn)
+    kernel = functools.partial(_nystrom_kernel, compute_dtype=compute_dtype)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((bn, b), lambda i, j: (j, 0)),
+            pl.BlockSpec((bn, 1), lambda i, j: (j, 0)),
+            pl.BlockSpec((bn, 1), lambda i, j: (j, 0)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),  # 1/(2 sigma^2)
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, b), lambda i, j: (i, 0)),
+            pl.BlockSpec((bm, 1), lambda i, j: (i, 0)),
+        ],
+        out_shape=[jax.ShapeDtypeStruct((m, b), jnp.float32),
+                   jax.ShapeDtypeStruct((m, 1), jnp.float32)],
+        interpret=interpret,
+    )(x, y, V, col_scale, col_valid, inv2s2)
+
+
+def fused_nystrom_matmat(x: jax.Array, y: jax.Array, V: jax.Array, sigma,
+                         col_scale: jax.Array, col_valid: jax.Array,
+                         *, bm: int = 128, bn: int = 128,
+                         compute_dtype=None,
+                         interpret: bool | None = None
+                         ) -> tuple[jax.Array, jax.Array]:
+    """One fused pass of the Nystrom out-of-sample extension.
+
+    Returns ``(K @ (col_scale * V), K @ col_valid)`` for the RBF kernel
+    ``K = RBF(x, y; sigma)`` — the unnormalized embedding product and the
+    query degree column, computed from the same in-register kernel tiles
+    (the similarity never exists).  ``x`` (m, d) queries, ``y`` (n, d)
+    training points, ``V`` (n, b); m, n must divide the (bm, bn) tiles —
+    ``ops.fused_nystrom_matmat`` is the padded public entry point.  Both
+    outputs are f32 regardless of ``compute_dtype``."""
+    if interpret is None:
+        interpret = interpret_default()
+    m, d = x.shape                               # m queries vs n training
+    n = y.shape[0]
+    assert V.ndim == 2 and V.shape[0] == n, (x.shape, y.shape, V.shape)
+    assert m % bm == 0 and n % bn == 0, (m, n, bm, bn)
+    cdtype = resolve_compute_dtype(compute_dtype)
+    inv2s2 = (1.0 / (2.0 * jnp.asarray(sigma, jnp.float32) ** 2)).reshape(1)
+    return _nystrom(jnp.asarray(x, jnp.float32), jnp.asarray(y, jnp.float32),
+                    jnp.asarray(V, jnp.float32), inv2s2,
+                    jnp.asarray(col_scale, jnp.float32).reshape(n, 1),
+                    jnp.asarray(col_valid, jnp.float32).reshape(n, 1),
+                    bm=bm, bn=bn, compute_dtype=cdtype,
+                    interpret=bool(interpret))
 
 
 @functools.partial(jax.jit,

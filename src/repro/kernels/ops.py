@@ -68,6 +68,35 @@ def fused_rbf_matmat(x: jax.Array, y: jax.Array, V: jax.Array, sigma,
     return out[:n]
 
 
+def fused_nystrom_matmat(x: jax.Array, y: jax.Array, V: jax.Array, sigma,
+                         col_scale: jax.Array, col_valid: jax.Array | None = None,
+                         *, bm: int = 128, bn: int = 128, compute_dtype=None,
+                         interpret: bool | None = None
+                         ) -> tuple[jax.Array, jax.Array]:
+    """(K @ (col_scale * V), K @ col_valid) for K = RBF(x, y; sigma), any
+    (m, d)/(n, d)/(n, b) — the serving-side fused pass: embedding product
+    and query degree column from one in-register sweep over the training
+    tiles.  ``col_valid`` defaults to ones on the true rows; padded
+    training rows get scale/valid 0 so they contribute to neither output."""
+    from repro.kernels import fused_rbf_matmat as _frm
+    if interpret is None:
+        interpret = _interpret_default()
+    m, n = x.shape[0], y.shape[0]
+    cs = jnp.asarray(col_scale, jnp.float32)
+    cv = jnp.ones((n,), jnp.float32) if col_valid is None \
+        else jnp.asarray(col_valid, jnp.float32)
+    xp, _ = _pad_rows(x, bm)
+    yp, _ = _pad_rows(y, bn)
+    Vp, _ = _pad_rows(V, bn)
+    csp, _ = _pad_rows(cs, bn)
+    cvp, _ = _pad_rows(cv, bn)
+    O, deg = _frm.fused_nystrom_matmat(xp, yp, Vp, sigma, csp, cvp,
+                                       bm=bm, bn=bn,
+                                       compute_dtype=compute_dtype,
+                                       interpret=interpret)
+    return O[:m], deg[:m, 0]
+
+
 def block_matmat(A: jax.Array, V: jax.Array, *, bm: int = 256, bn: int = 512,
                  interpret: bool | None = None) -> jax.Array:
     """A @ V for any (n, m) A and (m, b) V (one matrix pass per block)."""

@@ -20,6 +20,14 @@ def fused_rbf_matmat(x: jax.Array, y: jax.Array, V: jax.Array, sigma,
     return row_scale[:, None] * (S @ (col_scale[:, None] * V))
 
 
+def fused_nystrom_matmat(x: jax.Array, y: jax.Array, V: jax.Array, sigma,
+                         col_scale: jax.Array,
+                         col_valid: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """(RBF(x, y) @ (col_scale * V), RBF(x, y) @ col_valid) — materialized."""
+    K = rbf_similarity(x, y, sigma)
+    return K @ (col_scale[:, None] * V), (K @ col_valid)[:, None]
+
+
 def block_matvec(A: jax.Array, v: jax.Array) -> jax.Array:
     """A @ v."""
     return A @ v

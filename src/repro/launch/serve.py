@@ -80,6 +80,10 @@ class Server:
         self.requests[slot] = req
         tok = int(jnp.argmax(logits[0, -1]))
         req.out.append(tok)
+        # the prefill token counts toward the budget: a max_new=1 request
+        # is complete right here and must not enter the decode loop
+        if len(req.out) >= req.max_new:
+            req.done = True
         self.next_tok = self.next_tok.at[slot, 0].set(tok)
 
     def step(self):
@@ -105,7 +109,10 @@ class Server:
                     if self.requests[i] is not None:
                         finished.append(self.requests[i])
                     self._prefill_slot(i, pending.pop(0))
-            self.step()
+            # every slot may have finished at prefill (max_new=1): don't
+            # burn a full-batch decode step with zero live requests
+            if any(r is not None and not r.done for r in self.requests):
+                self.step()
         finished.extend(r for r in self.requests if r is not None)
         return finished
 

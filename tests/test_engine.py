@@ -83,6 +83,48 @@ def test_shard_store_unlimited_never_spills(tmp_path):
     assert store.stats["spills"] == 0 and not store.spilled_keys()
 
 
+def test_shard_store_get_keeps_larger_than_budget_entry(tmp_path):
+    # regression: _enforce_budget(keep=key) used to spill the just-loaded
+    # entry whenever it was the only resident one, so every get() of a
+    # larger-than-budget shard reloaded and re-dropped it while the spill
+    # counter inflated with entries that were already on disk
+    store = ShardStore(memory_budget=100, spill_dir=str(tmp_path))
+    a = {"x": np.arange(200, dtype=np.float32)}     # 800 B >> budget
+    b = {"x": np.zeros(200, np.float32)}
+    store.put("a", a)                               # spilled on put
+    store.put("b", b)
+    assert store.stats["spills"] == 2               # two first-time writes
+    got = store.get("a")                            # reload over budget
+    np.testing.assert_array_equal(got["x"], a["x"])
+    assert "a" in store._ram, "get() must keep the entry it just loaded"
+    store.get("a")                                  # second get: RAM hit
+    assert store.stats["loads"] == 1, "resident entry reloaded from disk"
+    # the one reload never re-wrote the npz or counted as a fresh spill
+    assert store.stats["spills"] == 2
+    assert store.stats["drops"] == 0
+
+
+def test_shard_store_redrop_counts_as_drop_not_spill(tmp_path):
+    # a reloaded entry evicted AGAIN (to make room for another get) is a
+    # drop — its npz is already current — not a new spill
+    store = ShardStore(memory_budget=900, spill_dir=str(tmp_path))
+    blocks = {k: {"x": np.full(200, i, np.float32)}   # 800 B each
+              for i, k in enumerate("abc")}
+    for k, v in blocks.items():
+        store.put(k, v)
+    store.get("a")                # evicts c (first-time spill); all on disk
+    spills0 = store.stats["spills"]
+    bytes0 = store.stats["bytes_spilled"]
+    assert spills0 == 3
+    store.get("b")                                  # evicts a -> drop
+    store.get("c")                                  # evicts b -> drop
+    assert store.stats["drops"] == 2
+    assert store.stats["spills"] == spills0, "re-drop counted as spill"
+    assert store.stats["bytes_spilled"] == bytes0
+    for k, v in blocks.items():                     # data still intact
+        np.testing.assert_array_equal(store.get(k)["x"], v["x"])
+
+
 def test_shard_store_delete_removes_spill_file(tmp_path):
     store = ShardStore(memory_budget=10, spill_dir=str(tmp_path))
     store.put("a", {"x": np.zeros(100)})       # immediately over budget

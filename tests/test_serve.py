@@ -27,6 +27,33 @@ def test_server_completes_more_requests_than_slots():
     assert srv.steps < 5 * 7, "slots must be shared, not sequential"
 
 
+def test_max_new_one_emits_exactly_one_token():
+    # regression: the prefill token already consumes the whole budget of a
+    # max_new=1 request — it must finish at prefill (one token, zero decode
+    # steps), not emit a second token from a burned decode step
+    cfg, model, srv = _setup(slots=2)
+    rng = np.random.RandomState(2)
+    prompt = rng.randint(0, cfg.vocab_size, 8).astype(np.int32)
+    done = srv.run([Request(rid=0, prompt=prompt, max_new=1)])
+    assert len(done) == 1 and done[0].done
+    assert len(done[0].out) == 1, done[0].out
+    assert srv.steps == 0, "no live slot -> no decode step"
+
+
+def test_token_budget_is_exact_in_mixed_batches():
+    # max_new=1 requests mixed with longer ones: every request emits
+    # EXACTLY its budget (the off-by-one appended max_new + 1 tokens)
+    cfg, model, srv = _setup(slots=2)
+    rng = np.random.RandomState(3)
+    queue = [Request(rid=i,
+                     prompt=rng.randint(0, cfg.vocab_size, 8).astype(np.int32),
+                     max_new=1 + (i % 3)) for i in range(6)]
+    done = srv.run(queue)
+    assert len(done) == 6
+    assert all(len(r.out) == r.max_new for r in done), \
+        [(r.rid, r.max_new, len(r.out)) for r in done]
+
+
 def test_server_matches_direct_decode():
     cfg, model, srv = _setup(slots=2)
     rng = np.random.RandomState(1)

@@ -1,0 +1,284 @@
+"""The serving path: fused Nystrom transform parity, model persistence,
+and the batched predict service.
+
+Contracts under test (ISSUE 5):
+  * fused transform == dense reference to <= 1e-4 in f32, for the kernel
+    (ops vs ref) and the estimator routing (transform_path fused vs dense);
+  * held-out points near training clusters inherit their cluster under
+    every feature-space affinity (dense / fused-rbf / ooc-topt);
+  * save -> load -> predict is BITWISE identical to the fitted estimator,
+    including across a different device count (elastic restore);
+  * zero-degree query rows (far from every training point) produce finite
+    all-zero embeddings, never NaNs;
+  * the service completes every request, splits requests larger than the
+    batch, and its labels match direct predict.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.cluster import SpectralClustering, ari
+from repro.cluster import serving
+from repro.data import synthetic
+from repro.kernels import ops, ref
+from repro.launch.cluster_serve import ClusterServer, PredictRequest
+
+
+def _fitted(affinity="triangular", n=160, k=3, **kw):
+    pts, truth = synthetic.blobs(n, k, dim=4, spread=0.08, seed=4)
+    est = SpectralClustering(k, affinity=affinity, sigma=1.0,
+                             lanczos_steps=48, seed=0, **kw)
+    est.fit(jnp.asarray(pts))
+    return est, pts, truth
+
+
+# ---------------------------------------------------------------------------
+# kernel: fused dual-output pass vs materialized oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,n,b", [(50, 137, 3), (128, 128, 1), (1, 200, 8)])
+def test_fused_nystrom_kernel_matches_oracle(m, n, b):
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.randn(m, 5).astype(np.float32))
+    y = jnp.asarray(rng.randn(n, 5).astype(np.float32))
+    V = jnp.asarray(rng.randn(n, b).astype(np.float32))
+    cs = jnp.asarray(np.abs(rng.randn(n)).astype(np.float32))
+    O, deg = ops.fused_nystrom_matmat(x, y, V, 0.9, cs, interpret=True)
+    Or, degr = ref.fused_nystrom_matmat(x, y, V, 0.9, cs, jnp.ones((n,)))
+    assert O.shape == (m, b) and deg.shape == (m,)
+    np.testing.assert_allclose(np.asarray(O), np.asarray(Or), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(deg), np.asarray(degr)[:, 0],
+                               atol=1e-4)
+
+
+def test_fused_nystrom_kernel_masks_padded_training_rows():
+    # col_valid=0 rows must contribute to NEITHER output (the wrapper pads
+    # with zero scale/valid; zero-point rows still have RBF weight 1 at
+    # distance 0 from other zero rows, so masking is load-bearing)
+    rng = np.random.RandomState(1)
+    x = jnp.asarray(rng.randn(40, 3).astype(np.float32))
+    y = np.zeros((96, 3), np.float32)
+    y[:60] = rng.randn(60, 3)
+    V = jnp.asarray(rng.randn(96, 2).astype(np.float32))
+    cs = np.zeros((96,), np.float32)
+    cs[:60] = 1.0
+    O, deg = ops.fused_nystrom_matmat(jnp.asarray(x), jnp.asarray(y), V, 1.0,
+                                      jnp.asarray(cs), jnp.asarray(cs),
+                                      interpret=True)
+    Or, degr = ref.fused_nystrom_matmat(x, jnp.asarray(y[:60]), V[:60], 1.0,
+                                        jnp.ones((60,)), jnp.ones((60,)))
+    np.testing.assert_allclose(np.asarray(O), np.asarray(Or), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(deg), np.asarray(degr)[:, 0],
+                               atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# estimator routing: fused vs dense parity, route rules
+# ---------------------------------------------------------------------------
+
+def test_transform_fused_matches_dense_path():
+    est, pts, _ = _fitted()
+    rng = np.random.RandomState(0)
+    held = pts[:50] + 0.01 * rng.randn(50, pts.shape[1]).astype(np.float32)
+    est.transform_path = "dense"
+    e_dense = np.asarray(est.transform(jnp.asarray(held)))
+    p_dense = np.asarray(est.predict(jnp.asarray(held)))
+    assert est.info_["transform"]["path"] == "dense"
+    est.transform_path = "fused"
+    e_fused = np.asarray(est.transform(jnp.asarray(held)))
+    p_fused = np.asarray(est.predict(jnp.asarray(held)))
+    assert est.info_["transform"]["path"] == "fused"
+    np.testing.assert_allclose(e_fused, e_dense, atol=1e-4)
+    np.testing.assert_array_equal(p_fused, p_dense)
+    # the fused route's working set beats the (m, n) kernel well before
+    # serving scale; at this toy size it just has to be what it claims
+    assert est.info_["transform"]["dense_equiv_bytes"] == 50 * 160 * 4
+
+
+def test_route_transform_rules():
+    # forced paths win
+    assert serving.route_transform(10**6, 10**6, path="dense") == "dense"
+    assert serving.route_transform(4, 4, path="fused") == "fused"
+    with pytest.raises(ValueError, match="transform_path"):
+        serving.route_transform(4, 4, path="nope")
+    with pytest.raises(ValueError, match="transform_path"):
+        SpectralClustering(2, transform_path="nope")
+    # auto: the (m, n) kernel bytes against the budget
+    assert serving.route_transform(1024, 1024) == "dense"      # 4 MiB
+    assert serving.route_transform(8192, 8192) == "fused"      # 256 MiB
+    assert serving.route_transform(
+        1024, 1024, memory_budget=1 << 20) == "fused"          # over budget
+    assert serving.route_transform(
+        8192, 8192, memory_budget=1 << 30) == "dense"          # huge budget
+
+
+def test_transform_path_constructor_roundtrip():
+    est, pts, _ = _fitted(transform_path="fused")
+    emb = np.asarray(est.transform(jnp.asarray(pts[:10])))
+    assert est.info_["transform"]["path"] == "fused"
+    assert emb.shape == (10, 3)
+
+
+# ---------------------------------------------------------------------------
+# out-of-sample label agreement across affinities
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("affinity,kw", [
+    ("dense", {}),
+    ("fused-rbf", {}),
+    ("ooc-topt", {"chunk_size": 64, "sparsify_t": 10}),
+])
+def test_heldout_labels_across_affinities(affinity, kw):
+    est, pts, _ = _fitted(affinity=affinity, **kw)
+    rng = np.random.RandomState(0)
+    idx = rng.choice(len(pts), size=40, replace=False)
+    held = pts[idx] + 0.01 * rng.randn(40, pts.shape[1]).astype(np.float32)
+    for path in ("dense", "fused"):
+        est.transform_path = path
+        pred = np.asarray(est.predict(jnp.asarray(held)))
+        agree = np.mean(pred == np.asarray(est.labels_)[idx])
+        assert agree > 0.9, (affinity, path, agree)
+
+
+# ---------------------------------------------------------------------------
+# zero-degree queries (far from every training point)
+# ---------------------------------------------------------------------------
+
+def test_far_away_queries_do_not_nan():
+    est, pts, _ = _fitted()
+    far = np.full((6, pts.shape[1]), 1e4, np.float32)
+    for path in ("dense", "fused"):
+        est.transform_path = path
+        emb = np.asarray(est.transform(jnp.asarray(far)))
+        assert np.isfinite(emb).all(), path
+        np.testing.assert_array_equal(emb, 0.0)     # pinned to null row
+        labels = np.asarray(est.predict(jnp.asarray(far)))
+        assert ((labels >= 0) & (labels < est.k)).all()
+
+
+# ---------------------------------------------------------------------------
+# persistence: save -> load -> predict bitwise, elastic device count
+# ---------------------------------------------------------------------------
+
+def test_save_load_predict_bitwise(tmp_path):
+    est, pts, _ = _fitted(affinity="fused-rbf")
+    held = pts[:30] + 0.02
+    for path in ("dense", "fused"):
+        est.transform_path = path
+        est.save(str(tmp_path / path))
+        est2 = SpectralClustering.load(str(tmp_path / path))
+        assert est2.transform_path == path
+        np.testing.assert_array_equal(
+            np.asarray(est.labels_), np.asarray(est2.labels_))
+        e1 = np.asarray(est.transform(jnp.asarray(held)))
+        e2 = np.asarray(est2.transform(jnp.asarray(held)))
+        np.testing.assert_array_equal(e1, e2)       # bitwise
+        np.testing.assert_array_equal(
+            np.asarray(est.predict(jnp.asarray(held))),
+            np.asarray(est2.predict(jnp.asarray(held))))
+
+
+def test_save_requires_feature_space_fit(tmp_path):
+    from repro.core import similarity as sim
+    pts, _ = synthetic.blobs(40, 2, seed=1)
+    S = sim.dense_similarity(jnp.asarray(pts), 1.0)
+    est = SpectralClustering(2, affinity="precomputed").fit(S)
+    with pytest.raises(ValueError, match="precomputed"):
+        est.save(str(tmp_path))
+    with pytest.raises(ValueError, match="not .*fitted|fit"):
+        SpectralClustering(2).save(str(tmp_path))
+
+
+def test_save_load_elastic_device_count(tmp_path, subproc):
+    # fit + save on 4 devices, load + predict on 2: the checkpoint holds
+    # logical arrays, so restore re-places them on whatever mesh exists
+    model_dir = str(tmp_path / "elastic")
+    code = """
+import numpy as np, jax, jax.numpy as jnp
+from repro.cluster import SpectralClustering
+from repro.data import synthetic
+pts, _ = synthetic.blobs(242, 3, dim=4, spread=0.08, seed=4)
+assert len(jax.devices()) == {nd}
+est = SpectralClustering(3, affinity="fused-rbf", sigma=1.0,
+                         lanczos_steps=48, seed=0)
+if {nd} == 4:
+    est.fit(jnp.asarray(pts)).save({d!r})
+est2 = SpectralClustering.load({d!r})
+held = pts[:37] + 0.01
+np.save({d!r} + "/pred_{nd}.npy",
+        np.asarray(est2.predict(jnp.asarray(held))))
+print("OK")
+"""
+    assert "OK" in subproc(code.format(nd=4, d=model_dir), n_devices=4)
+    assert "OK" in subproc(code.format(nd=2, d=model_dir), n_devices=2)
+    np.testing.assert_array_equal(np.load(model_dir + "/pred_4.npy"),
+                                  np.load(model_dir + "/pred_2.npy"))
+
+
+def test_sharded_fused_transform_multi_device(subproc):
+    # queries row-shard over the mesh (no collective); uneven m exercises
+    # the mesh*tile padding; parity vs the dense path must hold exactly
+    # like on one device
+    out = subproc("""
+import numpy as np, jax, jax.numpy as jnp
+from repro.cluster import SpectralClustering
+from repro.data import synthetic
+pts, _ = synthetic.blobs(242, 3, dim=4, spread=0.08, seed=4)
+est = SpectralClustering(3, affinity="fused-rbf", sigma=1.0,
+                         lanczos_steps=48, seed=0).fit(jnp.asarray(pts))
+held = pts[:77] + 0.01
+est.transform_path = "dense"; e_d = np.asarray(est.transform(jnp.asarray(held)))
+est.transform_path = "fused"; e_f = np.asarray(est.transform(jnp.asarray(held)))
+assert np.abs(e_d - e_f).max() <= 1e-4, np.abs(e_d - e_f).max()
+assert len(est._transform_cache) == 1
+np.asarray(est.transform(jnp.asarray(held)))   # cache hit, no retrace
+assert len(est._transform_cache) == 1
+print("OK")
+""", n_devices=4)
+    assert "OK" in out
+
+
+# ---------------------------------------------------------------------------
+# batched predict service
+# ---------------------------------------------------------------------------
+
+def test_cluster_server_completes_and_matches_direct_predict():
+    est, pts, _ = _fitted(affinity="fused-rbf")
+    rng = np.random.RandomState(0)
+    queue = []
+    for rid in range(5):
+        m = 30 + rid * 17                     # 30..98 rows, uneven
+        idx = rng.choice(len(pts), size=m)
+        queue.append(PredictRequest(
+            rid=rid,
+            points=(pts[idx] + 0.01 * rng.randn(m, pts.shape[1])
+                    ).astype(np.float32)))
+    srv = ClusterServer(est, batch_rows=64)
+    done = srv.run(queue)
+    assert all(r.done for r in done)
+    assert all(r.latency_s >= 0 for r in done)
+    total = sum(len(r.points) for r in done)
+    assert srv.stats["rows_live"] == total
+    # batching must actually pack: far fewer steps than requests * rows
+    assert srv.steps <= -(-total // 64) + len(queue)
+    for r in done:
+        np.testing.assert_array_equal(
+            r.labels, np.asarray(est.predict(jnp.asarray(r.points))))
+
+
+def test_cluster_server_splits_requests_larger_than_batch():
+    est, pts, _ = _fitted()
+    rng = np.random.RandomState(1)
+    big = (np.tile(pts, (2, 1)) + 0.01 * rng.randn(2 * len(pts),
+                                                   pts.shape[1])
+           ).astype(np.float32)               # 320 rows >> batch 64
+    srv = ClusterServer(est, batch_rows=64)
+    done = srv.run([PredictRequest(rid=0, points=big)])
+    assert done[0].done and len(done[0].labels) == len(big)
+    assert srv.steps == -(-len(big) // 64)    # streamed, fully packed
+    np.testing.assert_array_equal(
+        done[0].labels, np.asarray(est.predict(jnp.asarray(big))))

@@ -74,6 +74,60 @@ def test_checkpoint_roundtrip_and_gc(tmp_path):
     np.testing.assert_array_equal(np.asarray(out["nested"]["b"]), np.ones((4,)))
 
 
+def test_checkpoint_restore_mismatch_names_keys(tmp_path):
+    # regression: a template whose pytree doesn't match the saved flat keys
+    # used to surface as a bare KeyError from the first missing lookup;
+    # now it's a ValueError naming BOTH the missing and the extra keys
+    mgr = CheckpointManager(str(tmp_path), async_write=False)
+    mgr.save(0, {"a": jnp.ones((2,)), "b": jnp.zeros((3,))})
+    with pytest.raises(ValueError) as ei:
+        mgr.restore({"a": 0, "c": 0}, step=0)
+    msg = str(ei.value)
+    assert "c" in msg and "b" in msg, msg
+    # subset templates are a mismatch too (silent partial restores hid
+    # renamed fields), and the error still names the leftover key
+    with pytest.raises(ValueError, match="b"):
+        mgr.restore({"a": 0}, step=0)
+
+
+def test_checkpoint_reads_are_locked_against_async_gc(tmp_path):
+    # regression: all_steps/latest_step listed the directory with no lock
+    # while the async writer thread GC'd under it — torn listings could
+    # show a step that was mid-removal.  Hammer reads against async saves
+    # with keep=1: every listed step must still be restorable.
+    mgr = CheckpointManager(str(tmp_path), keep=1, async_write=True)
+    tree = {"w": jnp.arange(64.0)}
+    errors = []
+
+    import threading
+
+    def reader():
+        last = -1
+        for _ in range(200):
+            try:
+                steps = mgr.all_steps()
+                assert steps == sorted(steps)
+                # keep=1 plus at most one not-yet-GC'd fresh write
+                assert len(steps) <= 2, steps
+                latest = mgr.latest_step()
+                if latest is not None:
+                    assert latest >= last, (latest, last)
+                    last = latest
+            except Exception as e:       # pragma: no cover - failure path
+                errors.append(e)
+                return
+
+    t = threading.Thread(target=reader)
+    t.start()
+    for step in range(30):
+        mgr.save(step, tree)
+    mgr.wait()
+    t.join()
+    assert not errors, errors
+    out = mgr.restore(tree, step=mgr.latest_step())
+    np.testing.assert_array_equal(np.asarray(out["w"]), np.arange(64.0))
+
+
 def test_checkpoint_resume_training_continues(tmp_path):
     model = _tiny_model()
     optz = opt_lib.adamw()
