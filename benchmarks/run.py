@@ -648,6 +648,42 @@ def serve_sweep(n: int = 8192, k: int = 8, ms=(1024, 8192),
     print(f"# wrote {out_json}")
 
 
+def tune_sweep(ns=(1024, 4096), quick: bool = False,
+               out_json: str = "BENCH_tune.json"):
+    """The schedule autotuner sweep (repro.tune): every schedulable Pallas
+    kernel at n in ``ns``, default schedule vs best-of-candidates wall
+    time, winners persisted in the schedule cache (REPRO_SCHEDULE_CACHE or
+    ~/.cache/repro/schedules.json).  Re-running prints cache_hit=True rows
+    and does no timing — delete the cache file to retune.  ``--quick``
+    shrinks n and the candidate grid for the CI smoke job.
+
+    The default schedule is always among the candidates, so tuned wall is
+    <= default wall on every kernel by construction (asserted here).
+    """
+    from repro import tune
+
+    cache = tune.default_cache()
+    if quick:
+        ns = (256,)
+    reports = tune.tune_all(ns, cache=cache, quick=quick,
+                            log=lambda msg: print(f"# {msg}", flush=True))
+    results = {"device": tune.device_kind(), "cache_path": cache.path,
+               "quick": quick, "rows": reports}
+    for rep in reports:
+        name = f"tune_sweep/{rep['kernel']}_n{rep['shape']['n']}"
+        if rep["cache_hit"]:
+            row(name, float(rep.get("best_us") or 0.0),
+                f"cache_hit=True schedule={rep['best']}")
+            continue
+        row(name, rep["best_us"],
+            f"cache_hit=False default_us={rep['default_us']} "
+            f"speedup={rep['speedup']}x schedule={rep['best']}")
+        assert rep["best_us"] <= rep["default_us"] + 1e-9, rep
+    with open(out_json, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"# wrote {out_json} (cache: {cache.path})")
+
+
 MODES = {
     "table1_phases": table1_phases,
     "fig5_speedup": fig5_speedup,
@@ -659,6 +695,7 @@ MODES = {
     "eigensolver_sweep": eigensolver_sweep,
     "fused_sweep": fused_sweep,
     "serve_sweep": serve_sweep,
+    "tune_sweep": tune_sweep,
 }
 
 # modes the bare invocation runs (the sweep is opt-in: it is a benchmark
@@ -673,10 +710,16 @@ def main(argv=None) -> None:
     ap.add_argument("modes", nargs="*", choices=[[], *MODES],
                     help="benchmark modes to run (default: full suite "
                          "minus eigensolver_sweep)")
+    ap.add_argument("--quick", action="store_true",
+                    help="tune_sweep only: small n + reduced candidate "
+                         "grid (the CI autotune smoke configuration)")
     args = ap.parse_args(argv)
     print("name,us_per_call,derived")
     for mode in (args.modes or DEFAULT_MODES):
-        MODES[mode]()
+        if mode == "tune_sweep":
+            tune_sweep(quick=args.quick)
+        else:
+            MODES[mode]()
     print(f"# {len(ROWS)} rows")
 
 

@@ -37,6 +37,8 @@ operator derive the width-1 matvec view (see operator.py).
 """
 from __future__ import annotations
 
+import math
+
 import jax
 import jax.numpy as jnp
 from jax import lax
@@ -143,7 +145,8 @@ def knn_topt_affinity(est, x, sigma, mesh) -> NormalizedOperator:
     t = est.sparsify_t or max(est.k + 2, 10)
     if mesh_utils.mesh_size(mesh) == 1:
         from repro.kernels import ops as kops
-        S = kops.rbf_similarity(x, x, sigma)
+        S = kops.rbf_similarity(x, x, sigma,
+                                schedule=getattr(est, "schedule", None))
         S = jnp.asarray(S, est.dtype)
     else:
         S = sim.distributed_similarity_full(x, sigma, mesh)
@@ -159,7 +162,8 @@ def _fused_tile(n: int) -> int:
 
 
 def build_fused_rbf_operator(x, sigma, mesh, *, compute_dtype=None,
-                             dtype=jnp.float32) -> NormalizedOperator:
+                             dtype=jnp.float32,
+                             schedule=None) -> NormalizedOperator:
     """Matrix-free shifted normalized operator over raw points.
 
     Two fused passes, both row-sharded over the mesh with ONE psum each:
@@ -171,22 +175,36 @@ def build_fused_rbf_operator(x, sigma, mesh, *, compute_dtype=None,
 
     Exposed directly (besides ``affinity="fused-rbf"``) so the engine's
     planner can route beyond-dense-memory jobs here without an estimator.
+
+    ``schedule`` takes the estimator-facing domain (None / "default" /
+    "auto" / Schedule / dict): tiles, accumulator placement and compute
+    dtype of the fused kernel become one searchable value; "auto" consults
+    the persistent schedule cache (:mod:`repro.tune.cache`) for this
+    (shape bucket, device) and the chosen schedule + source land in the
+    operator's ``stats()`` -> estimator ``info_["engine"]``.
     """
     from repro.kernels import fused_rbf_matmat as frm
+    from repro.tune.schedule import resolve
 
     n, d = int(x.shape[0]), int(x.shape[1])
     m = mesh_utils.mesh_size(mesh)
     axes = mesh_utils.flat_axes(mesh)
     axis = axes[0] if len(axes) == 1 else axes
     tile = _fused_tile(n)
-    # local row count must divide the row-tile side AND the mesh
-    n_pad = mesh_utils.pad_to_multiple(n, m * tile)
+    sched, sched_src = resolve("fused_rbf_matmat", schedule, bm=tile,
+                               bn=tile, compute_dtype=compute_dtype,
+                               n=n, m=n, d=d, b=8)
+    bm, bn = sched.bm, sched.bn
+    # local row count must divide the row-tile side AND the mesh; padding
+    # also covers the column tile (x serves as both sides of the kernel)
+    lcm = bm * bn // math.gcd(bm, bn)
+    n_pad = mesh_utils.pad_to_multiple(n, m * lcm)
     rows_local = n_pad // m
     xp = jnp.zeros((n_pad, d), jnp.float32).at[:n].set(
         jnp.asarray(x, jnp.float32))
     valid = (jnp.arange(n_pad) < n).astype(dtype)
     sigma32 = jnp.asarray(sigma, jnp.float32)
-    cdtype = frm.resolve_compute_dtype(compute_dtype)
+    cdtype = frm.resolve_compute_dtype(sched.compute_dtype or compute_dtype)
 
     def _sharded_pass(width: int):
         """Row-sharded fused pass for one block width: each device
@@ -198,7 +216,8 @@ def build_fused_rbf_operator(x, sigma, mesh, *, compute_dtype=None,
             x_full = lax.all_gather(x_local, axis, tiled=True)
             O_local = frm.fused_rbf_matmat(
                 x_local, x_full, V_full, sigma32, rs_local[:, 0],
-                cs_full[:, 0], bm=tile, bn=tile, compute_dtype=cdtype)
+                cs_full[:, 0], bm=bm, bn=bn, compute_dtype=cdtype,
+                acc=sched.acc, interpret=sched.interpret)
             out = jnp.zeros((n_pad, width), jnp.float32)
             out = lax.dynamic_update_slice(
                 out, O_local, (lax.axis_index(axis) * rows_local, 0))
@@ -218,7 +237,8 @@ def build_fused_rbf_operator(x, sigma, mesh, *, compute_dtype=None,
         if m == 1:  # no collective needed: the kernel IS the whole pass
             return frm.fused_rbf_matmat(
                 xp, xp, V.astype(jnp.float32), sigma32, row_scale,
-                col_scale, bm=tile, bn=tile, compute_dtype=cdtype)
+                col_scale, bm=bm, bn=bn, compute_dtype=cdtype,
+                acc=sched.acc, interpret=sched.interpret)
         width = int(V.shape[1])
         fn = _passes.get(width)
         if fn is None:
@@ -235,12 +255,12 @@ def build_fused_rbf_operator(x, sigma, mesh, *, compute_dtype=None,
     # per pass; the fused path streams point tiles instead)
     counters = {"matrix_passes": 1,
                 "bytes_streamed": frm.pass_bytes(n_pad, n_pad, d, 1,
-                                                 bm=tile, bn=tile)}
+                                                 bm=bm, bn=bn)}
 
     def _bump(width) -> None:
         counters["matrix_passes"] += 1
         counters["bytes_streamed"] += frm.pass_bytes(
-            n_pad, n_pad, d, int(width), bm=tile, bn=tile)
+            n_pad, n_pad, d, int(width), bm=bm, bn=bn)
 
     def matmat(V: jax.Array) -> jax.Array:
         SV = fused(V.astype(jnp.float32), inv_sqrt, inv_sqrt)
@@ -259,7 +279,7 @@ def build_fused_rbf_operator(x, sigma, mesh, *, compute_dtype=None,
 
     # O(n*d) affinity working set vs the dense paths' O(n^2) matrix
     peak = (n_pad * d + 3 * n_pad) * 4 \
-        + (2 * tile * d + tile * tile + tile * 2) * 4  # + VMEM tiles
+        + ((bm + bn) * d + bm * bn + bm + bn) * 4  # + VMEM tiles
 
     def stats():
         try:                         # flush pending debug callbacks so the
@@ -268,7 +288,8 @@ def build_fused_rbf_operator(x, sigma, mesh, *, compute_dtype=None,
             pass
         return dict(counters, affinity_peak_bytes=peak,
                     dense_equiv_bytes=n_pad * n_pad * 4,
-                    compute_dtype=jnp.dtype(cdtype).name, tile=tile)
+                    compute_dtype=jnp.dtype(cdtype).name, tile=bm,
+                    schedule=sched.to_dict(), schedule_source=sched_src)
 
     return NormalizedOperator(
         matmat=matmat, valid=valid, inv_sqrt=inv_sqrt, n=n, n_pad=n_pad,
@@ -288,7 +309,7 @@ def fused_rbf_affinity(est, x, sigma, mesh) -> NormalizedOperator:
     """
     return build_fused_rbf_operator(
         x, sigma, mesh, compute_dtype=getattr(est, "compute_dtype", None),
-        dtype=est.dtype)
+        dtype=est.dtype, schedule=getattr(est, "schedule", None))
 
 
 @AFFINITIES.register("ooc-topt")

@@ -74,6 +74,16 @@ class SpectralClustering:
                     (halved MXU operand volume; accumulation stays f32
                     either way, so only the similarity entries lose
                     precision).  Also read by the fused transform path.
+    schedule:       kernel schedule for the Pallas-backed paths
+                    (fused-rbf affinity, knn-topt similarity, fused
+                    transform): None/"default" (the built-in tiles),
+                    "auto" (consult the persistent schedule cache filled
+                    by ``repro.tune.autotune`` — falls back to the
+                    default on a miss), or an explicit
+                    :class:`repro.tune.Schedule` / dict of its fields.
+                    The schedule actually used is recorded in
+                    ``info_["schedule"]`` (fit) and
+                    ``info_["transform"]["schedule"]`` (transform).
     transform_path: out-of-sample extension path for transform/predict:
                     "auto" (default — the (m, n) kernel's bytes against
                     ``memory_budget`` or a 64 MiB default decide, like
@@ -96,7 +106,8 @@ class SpectralClustering:
                  sigma: float | None = None, lanczos_steps: int | None = None,
                  block_size: int | None = None, cheb_degree: int = 12,
                  kmeans_iters: int = 50, sparsify_t: int | None = None,
-                 compute_dtype: Any = None, transform_path: str = "auto",
+                 compute_dtype: Any = None, schedule: Any = None,
+                 transform_path: str = "auto",
                  minibatch_size: int = 256, chunk_size: int | None = None,
                  memory_budget: int | None = None,
                  spill_dir: str | None = None, seed: int = 0,
@@ -123,6 +134,8 @@ class SpectralClustering:
         from repro.kernels.fused_rbf_matmat import resolve_compute_dtype
         resolve_compute_dtype(compute_dtype)
         self.compute_dtype = compute_dtype
+        from repro.tune.schedule import validate_spec
+        self.schedule = validate_spec(schedule)
         serving.check_transform_path(transform_path)
         self.transform_path = transform_path
         self._transform_cache: dict = {}
@@ -219,6 +232,20 @@ class SpectralClustering:
         op_stats = op.stats_snapshot()
         if op_stats:
             self.info_["engine"] = op_stats
+        # surface the kernel schedule that actually ran: the fused
+        # operator reports its resolved schedule (incl. "auto" cache
+        # hits); other affinities record the estimator-level request
+        if op_stats and "schedule" in op_stats:
+            self.info_["schedule"] = {
+                "value": op_stats["schedule"],
+                "source": op_stats.get("schedule_source", "default")}
+        elif self.schedule is not None:
+            from repro.tune.schedule import as_schedule
+            s = None if self.schedule == "auto" \
+                else as_schedule(self.schedule)
+            self.info_["schedule"] = {
+                "value": "auto" if s is None else s.to_dict(),
+                "source": "requested"}
         # Nystrom-extension state for transform()/predict(): unnormalized
         # eigenvector rows and D^{-1/2}, both in original point order.
         self._train_x = train_x
@@ -263,17 +290,21 @@ class SpectralClustering:
             emb = serving.extension_from_product(O, jnp.sum(K, axis=1), mu)
             peak = m * n * 4
         else:
+            sched_info: dict = {}
             emb = serving.fused_transform(
                 x, self._train_x, self._eigvecs, self._inv_sqrt,
                 self.sigma_, mu, mesh=self._mesh(),
                 compute_dtype=self.compute_dtype,
-                _cache=self._transform_cache)
+                schedule=getattr(self, "schedule", None),
+                _cache=self._transform_cache, _info=sched_info)
             peak = serving.transform_peak_bytes(
                 m, n, int(x.shape[1]), self.k,
                 mesh_size=mesh_utils.mesh_size(self._mesh()))
         self.info_.setdefault("transform", {}).update(
             path=path, m=m, peak_bytes=int(peak),
             dense_equiv_bytes=m * n * 4)
+        if path == "fused" and sched_info:
+            self.info_["transform"].update(sched_info)
         return emb
 
     def predict(self, x: jax.Array) -> jax.Array:
@@ -329,6 +360,11 @@ class SpectralClustering:
                 # been handed a dtype object, which JSON can't encode)
                 "compute_dtype": None if self.compute_dtype is None else
                 jnp.dtype(resolve_compute_dtype(self.compute_dtype)).name,
+                # Schedule objects serialize to their field dict; strings
+                # ("auto"/"default") and None pass through as-is
+                "schedule": (self.schedule.to_dict()
+                             if hasattr(self.schedule, "to_dict")
+                             else self.schedule),
                 "transform_path": self.transform_path,
                 "minibatch_size": self.minibatch_size,
                 "chunk_size": self.chunk_size,

@@ -116,8 +116,9 @@ def shifted_mu(eigenvalues: jax.Array) -> jax.Array:
 def fused_transform(x: jax.Array, train_x: jax.Array, eigvecs: jax.Array,
                     inv_sqrt: jax.Array, sigma, mu: jax.Array, *,
                     mesh: Any = None, compute_dtype=None,
-                    interpret: bool | None = None,
-                    _cache: Optional[dict] = None) -> jax.Array:
+                    interpret: bool | None = None, schedule=None,
+                    _cache: Optional[dict] = None,
+                    _info: Optional[dict] = None) -> jax.Array:
     """Matrix-free Nystrom embedding of ``x`` (m, d) -> (m, k).
 
     Single-device: one padded call of the dual-output kernel.  Multi-
@@ -129,9 +130,14 @@ def fused_transform(x: jax.Array, train_x: jax.Array, eigvecs: jax.Array,
 
     ``_cache`` (optional dict) memoizes the jitted sharded pass per
     (mesh, shape) key so a serving loop pays one trace, not one per batch.
+
+    ``schedule`` (None / "default" / "auto" / Schedule / dict) selects the
+    serving kernel's tiles/dtype/accumulator; "auto" consults the
+    persistent schedule cache for this shape bucket and device.
     """
     from repro.kernels import fused_rbf_matmat as frm
     from repro.kernels import ops as kops
+    from repro.tune.schedule import resolve
 
     mesh = mesh or mesh_utils.local_mesh("rows")
     m, d = int(x.shape[0]), int(x.shape[1])
@@ -139,28 +145,34 @@ def fused_transform(x: jax.Array, train_x: jax.Array, eigvecs: jax.Array,
     tile = transform_tile(max(m, n))
     msize = mesh_utils.mesh_size(mesh)
     sigma32 = jnp.asarray(sigma, jnp.float32)
+    sched, _src = resolve("fused_nystrom_matmat", schedule, bm=tile,
+                          bn=tile, compute_dtype=compute_dtype,
+                          interpret=interpret, n=n, m=m, d=d, b=k)
+    if _info is not None:   # caller-visible record of what actually ran
+        _info["schedule"] = sched.to_dict()
+        _info["schedule_source"] = _src
 
     if msize == 1:
         O, deg = kops.fused_nystrom_matmat(
-            x, train_x, eigvecs, sigma32, inv_sqrt, None, bm=tile, bn=tile,
-            compute_dtype=compute_dtype, interpret=interpret)
+            x, train_x, eigvecs, sigma32, inv_sqrt, None, schedule=sched)
         return extension_from_product(O, deg, mu)
 
     axes = mesh_utils.flat_axes(mesh)
-    # queries pad to (mesh x tile) so every device's stripe divides the
-    # row tile; training-side padding is tile-only (replicated)
-    m_pad = mesh_utils.pad_to_multiple(m, msize * tile)
-    n_pad = mesh_utils.pad_to_multiple(n, tile)
-    cdtype = frm.resolve_compute_dtype(compute_dtype)
+    # queries pad to (mesh x row tile) so every device's stripe divides the
+    # row tile; training-side padding is column-tile-only (replicated)
+    m_pad = mesh_utils.pad_to_multiple(m, msize * sched.bm)
+    n_pad = mesh_utils.pad_to_multiple(n, sched.bn)
+    cdtype = frm.resolve_compute_dtype(sched.compute_dtype)
 
-    key = ("nystrom", mesh, m_pad, n_pad, d, k, tile, jnp.dtype(cdtype).name,
-           interpret)
+    key = ("nystrom", mesh, m_pad, n_pad, d, k, sched.bm, sched.bn,
+           jnp.dtype(cdtype).name, sched.acc, sched.interpret)
     fn = _cache.get(key) if _cache is not None else None
     if fn is None:
         def body(xq_local, y_full, Z_full, cs_full, cv_full, sig):
             return frm.fused_nystrom_matmat(
                 xq_local, y_full, Z_full, sig, cs_full[:, 0], cv_full[:, 0],
-                bm=tile, bn=tile, compute_dtype=cdtype, interpret=interpret)
+                bm=sched.bm, bn=sched.bn, compute_dtype=cdtype,
+                acc=sched.acc, interpret=sched.interpret)
 
         fn = jax.jit(mesh_utils.shard_map(
             body, mesh=mesh,

@@ -38,7 +38,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.block_matvec import interpret_default
+from repro.kernels.block_matvec import check_tiles, interpret_default
 
 # names accepted by the public ``compute_dtype`` knob (estimator kwarg /
 # --compute-dtype CLI flag); None means full f32
@@ -76,14 +76,11 @@ def default_tile(n: int) -> int:
     return 256 if n >= 2048 else 128
 
 
-def _fused_kernel(x_ref, y_ref, v_ref, rs_ref, cs_ref, inv2s2_ref, o_ref,
-                  *, compute_dtype):
-    j = pl.program_id(1)
-
-    @pl.when(j == 0)
-    def _init():
-        o_ref[...] = jnp.zeros_like(o_ref)
-
+def _fused_tile_product(x_ref, y_ref, v_ref, cs_ref, inv2s2_ref,
+                        *, compute_dtype):
+    """Shared tile body: the in-register RBF tile times the scaled V tile
+    — the algorithm; where the (bm, b) partial sum then accumulates is the
+    schedule's business (inplace vs scratch kernel variants below)."""
     x = x_ref[...]                              # (bm, d) f32
     y = y_ref[...]                              # (bn, d) f32
     # squared norms in f32 (cheap VPU work; keeping them full precision
@@ -101,7 +98,40 @@ def _fused_kernel(x_ref, y_ref, v_ref, rs_ref, cs_ref, inv2s2_ref, o_ref,
         tile.astype(compute_dtype), w.astype(compute_dtype),
         (((1,), (0,)), ((), ())),
         preferred_element_type=jnp.float32)     # (bm, b), f32 accumulate
+    return tile, acc
+
+
+def _fused_kernel(x_ref, y_ref, v_ref, rs_ref, cs_ref, inv2s2_ref, o_ref,
+                  *, compute_dtype):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    _, acc = _fused_tile_product(x_ref, y_ref, v_ref, cs_ref, inv2s2_ref,
+                                 compute_dtype=compute_dtype)
     o_ref[...] += rs_ref[...] * acc             # row D^{-1/2}, in place
+
+
+def _fused_kernel_scratch(x_ref, y_ref, v_ref, rs_ref, cs_ref, inv2s2_ref,
+                          o_ref, acc_ref, *, compute_dtype):
+    """acc='scratch' schedule variant: partial sums live in an f32 VMEM
+    scratch tile; the output tile is written once, at the last column
+    step, instead of being read-modified-written per step."""
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    _, acc = _fused_tile_product(x_ref, y_ref, v_ref, cs_ref, inv2s2_ref,
+                                 compute_dtype=compute_dtype)
+    acc_ref[...] += acc
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _flush():
+        o_ref[...] = rs_ref[...] * acc_ref[...]
 
 
 def _nystrom_kernel(x_ref, y_ref, v_ref, cs_ref, cv_ref, inv2s2_ref,
@@ -118,42 +148,59 @@ def _nystrom_kernel(x_ref, y_ref, v_ref, cs_ref, cv_ref, inv2s2_ref,
         o_ref[...] = jnp.zeros_like(o_ref)
         deg_ref[...] = jnp.zeros_like(deg_ref)
 
-    x = x_ref[...]                              # (bm, d) query tile, f32
-    y = y_ref[...]                              # (bn, d) training tile, f32
-    xx = jnp.sum(x * x, axis=-1)[:, None]
-    yy = jnp.sum(y * y, axis=-1)[None, :]
-    xy = jax.lax.dot_general(
-        x.astype(compute_dtype), y.astype(compute_dtype),
-        (((1,), (1,)), ((), ())),
-        preferred_element_type=jnp.float32)     # MXU, f32 accumulate
-    d2 = jnp.maximum(xx + yy - 2.0 * xy, 0.0)
-    tile = jnp.exp(-d2 * inv2s2_ref[0])         # (bm, bn), in-register only
+    tile, acc = _fused_tile_product(x_ref, y_ref, v_ref, cs_ref, inv2s2_ref,
+                                    compute_dtype=compute_dtype)
     # degree counts every VALID training column (padding masked by cv);
     # the product is masked through col_scale (0 on padding) instead, so
     # isolated training points (valid but zero-degree) still contribute to
     # the query degree exactly like the materialized dense path
     deg_ref[...] += jnp.sum(tile * cv_ref[...][:, 0][None, :], axis=1,
                             keepdims=True)
-    w = cs_ref[...] * v_ref[...]                # (bn, b): col_scale * V tile
-    acc = jax.lax.dot_general(
-        tile.astype(compute_dtype), w.astype(compute_dtype),
-        (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)     # (bm, b), f32 accumulate
     o_ref[...] += acc
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("bm", "bn", "compute_dtype", "interpret"))
+def _nystrom_kernel_scratch(x_ref, y_ref, v_ref, cs_ref, cv_ref, inv2s2_ref,
+                            o_ref, deg_ref, acc_ref, dacc_ref,
+                            *, compute_dtype):
+    """acc='scratch' variant of :func:`_nystrom_kernel`: both running sums
+    (product and degree) live in VMEM scratch; one output write each at
+    the last training-tile step."""
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        dacc_ref[...] = jnp.zeros_like(dacc_ref)
+
+    tile, acc = _fused_tile_product(x_ref, y_ref, v_ref, cs_ref, inv2s2_ref,
+                                    compute_dtype=compute_dtype)
+    dacc_ref[...] += jnp.sum(tile * cv_ref[...][:, 0][None, :], axis=1,
+                             keepdims=True)
+    acc_ref[...] += acc
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...]
+        deg_ref[...] = dacc_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "compute_dtype",
+                                             "acc", "interpret"))
 def _nystrom(x, y, V, inv2s2, col_scale, col_valid, *, bm, bn, compute_dtype,
-             interpret):
+             acc, interpret):
+    from jax.experimental.pallas import tpu as pltpu
     m, d = x.shape                               # m queries vs n training
     n = y.shape[0]
     b = V.shape[1]
     grid = (m // bm, n // bn)
-    kernel = functools.partial(_nystrom_kernel, compute_dtype=compute_dtype)
+    body = _nystrom_kernel if acc == "inplace" else _nystrom_kernel_scratch
+    scratch = [] if acc == "inplace" else \
+        [pltpu.VMEM((bm, b), jnp.float32), pltpu.VMEM((bm, 1), jnp.float32)]
+    kernel = functools.partial(body, compute_dtype=compute_dtype)
     return pl.pallas_call(
         kernel,
         grid=grid,
+        scratch_shapes=scratch,
         in_specs=[
             pl.BlockSpec((bm, d), lambda i, j: (i, 0)),
             pl.BlockSpec((bn, d), lambda i, j: (j, 0)),
@@ -175,7 +222,7 @@ def _nystrom(x, y, V, inv2s2, col_scale, col_valid, *, bm, bn, compute_dtype,
 def fused_nystrom_matmat(x: jax.Array, y: jax.Array, V: jax.Array, sigma,
                          col_scale: jax.Array, col_valid: jax.Array,
                          *, bm: int = 128, bn: int = 128,
-                         compute_dtype=None,
+                         compute_dtype=None, acc: str = "inplace",
                          interpret: bool | None = None
                          ) -> tuple[jax.Array, jax.Array]:
     """One fused pass of the Nystrom out-of-sample extension.
@@ -189,6 +236,8 @@ def fused_nystrom_matmat(x: jax.Array, y: jax.Array, V: jax.Array, sigma,
     outputs are f32 regardless of ``compute_dtype``."""
     if interpret is None:
         interpret = interpret_default()
+    check_tiles(bm, bn, interpret=bool(interpret),
+                kernel="fused_nystrom_matmat")
     m, d = x.shape                               # m queries vs n training
     n = y.shape[0]
     assert V.ndim == 2 and V.shape[0] == n, (x.shape, y.shape, V.shape)
@@ -199,22 +248,27 @@ def fused_nystrom_matmat(x: jax.Array, y: jax.Array, V: jax.Array, sigma,
                     jnp.asarray(V, jnp.float32), inv2s2,
                     jnp.asarray(col_scale, jnp.float32).reshape(n, 1),
                     jnp.asarray(col_valid, jnp.float32).reshape(n, 1),
-                    bm=bm, bn=bn, compute_dtype=cdtype,
+                    bm=bm, bn=bn, compute_dtype=cdtype, acc=acc,
                     interpret=bool(interpret))
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("bm", "bn", "compute_dtype", "interpret"))
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "compute_dtype",
+                                             "acc", "interpret"))
 def _fused(x, y, V, inv2s2, row_scale, col_scale, *, bm, bn, compute_dtype,
-           interpret):
+           acc, interpret):
+    from jax.experimental.pallas import tpu as pltpu
     n, d = x.shape
     m = y.shape[0]
     b = V.shape[1]
     grid = (n // bm, m // bn)
-    kernel = functools.partial(_fused_kernel, compute_dtype=compute_dtype)
+    body = _fused_kernel if acc == "inplace" else _fused_kernel_scratch
+    scratch = [] if acc == "inplace" else \
+        [pltpu.VMEM((bm, b), jnp.float32)]
+    kernel = functools.partial(body, compute_dtype=compute_dtype)
     return pl.pallas_call(
         kernel,
         grid=grid,
+        scratch_shapes=scratch,
         in_specs=[
             pl.BlockSpec((bm, d), lambda i, j: (i, 0)),
             pl.BlockSpec((bn, d), lambda i, j: (j, 0)),
@@ -232,7 +286,7 @@ def _fused(x, y, V, inv2s2, row_scale, col_scale, *, bm, bn, compute_dtype,
 def fused_rbf_matmat(x: jax.Array, y: jax.Array, V: jax.Array, sigma,
                      row_scale: jax.Array, col_scale: jax.Array,
                      *, bm: int = 128, bn: int = 128,
-                     compute_dtype=None,
+                     compute_dtype=None, acc: str = "inplace",
                      interpret: bool | None = None) -> jax.Array:
     """diag(row_scale) @ RBF(x, y; sigma) @ diag(col_scale) @ V, fused.
 
@@ -242,6 +296,7 @@ def fused_rbf_matmat(x: jax.Array, y: jax.Array, V: jax.Array, sigma,
     ``compute_dtype`` (accumulation is always f32)."""
     if interpret is None:
         interpret = interpret_default()
+    check_tiles(bm, bn, interpret=bool(interpret), kernel="fused_rbf_matmat")
     n, d = x.shape
     m = y.shape[0]
     assert V.ndim == 2 and V.shape[0] == m, (x.shape, y.shape, V.shape)
@@ -252,7 +307,7 @@ def fused_rbf_matmat(x: jax.Array, y: jax.Array, V: jax.Array, sigma,
                   jnp.asarray(V, jnp.float32), inv2s2,
                   jnp.asarray(row_scale, jnp.float32).reshape(n, 1),
                   jnp.asarray(col_scale, jnp.float32).reshape(m, 1),
-                  bm=bm, bn=bn, compute_dtype=cdtype,
+                  bm=bm, bn=bn, compute_dtype=cdtype, acc=acc,
                   interpret=bool(interpret))
 
 

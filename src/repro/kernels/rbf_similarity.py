@@ -30,26 +30,40 @@ def _rbf_kernel(x_ref, y_ref, inv2s2_ref, o_ref):
     o_ref[...] = jnp.exp(-d2 * inv2s2_ref[0]).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("bm", "bn", "grid_order", "interpret"))
 def rbf_similarity(x: jax.Array, y: jax.Array, sigma,
                    *, bm: int = 128, bn: int = 128,
+                   grid_order: str = "row-major",
                    interpret: bool = True) -> jax.Array:
     """Tiled RBF similarity; shapes must be multiples of (bm, bn) — use
-    ``ops.rbf_similarity`` for the padded public entry point."""
+    ``ops.rbf_similarity`` for the padded public entry point.
+
+    ``grid_order`` is a schedule knob: "row-major" sweeps column tiles
+    fastest (the x row tile stays resident across the row stripe),
+    "col-major" sweeps row tiles fastest (the y tile stays resident) —
+    legal here because every output tile is written exactly once, so the
+    traversal order is free."""
     n, d = x.shape
     m = y.shape[0]
     assert n % bm == 0 and m % bn == 0, (n, m, bm, bn)
+    assert grid_order in ("row-major", "col-major"), grid_order
     inv2s2 = (1.0 / (2.0 * jnp.asarray(sigma, jnp.float32) ** 2)).reshape(1)
-    grid = (n // bm, m // bn)
+    if grid_order == "row-major":
+        grid = (n // bm, m // bn)
+        row = lambda i, j: (i, j)               # noqa: E731
+    else:                                        # grid dims swapped: row
+        grid = (m // bn, n // bm)                # tile index is the LAST
+        row = lambda j, i: (i, j)               # noqa: E731 - grid arg
     return pl.pallas_call(
         _rbf_kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((bm, d), lambda i, j: (i, 0)),
-            pl.BlockSpec((bn, d), lambda i, j: (j, 0)),
-            pl.BlockSpec((1,), lambda i, j: (0,)),  # 1/(2 sigma^2), replicated
+            pl.BlockSpec((bm, d), lambda *ij: (row(*ij)[0], 0)),
+            pl.BlockSpec((bn, d), lambda *ij: (row(*ij)[1], 0)),
+            pl.BlockSpec((1,), lambda *ij: (0,)),  # 1/(2 sigma^2), replicated
         ],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_specs=pl.BlockSpec((bm, bn), row),
         out_shape=jax.ShapeDtypeStruct((n, m), x.dtype),
         interpret=interpret,
     )(x, y, inv2s2)

@@ -48,6 +48,12 @@ def main(argv=None):
                     choices=["float32", "f32", "bfloat16", "bf16"],
                     help="MXU product precision inside --affinity fused-rbf "
                          "(accumulation is always f32)")
+    ap.add_argument("--schedule", default=None,
+                    help="kernel schedule for the Pallas-backed paths: "
+                         "'default' (built-in tiles), 'auto' (persistent "
+                         "schedule cache, see repro.tune), or an inline "
+                         "JSON object of Schedule fields, e.g. "
+                         "'{\"bm\": 256, \"bn\": 256}'")
     ap.add_argument("--engine", default=None, choices=["mapreduce"],
                     help="run phase 1 out-of-core through repro.engine "
                          "(forces --affinity ooc-topt)")
@@ -79,6 +85,11 @@ def main(argv=None):
                      "precomputed affinity directly")
         affinity = "ooc-topt"
 
+    schedule = args.schedule
+    if isinstance(schedule, str) and schedule.lstrip().startswith("{"):
+        import json
+        schedule = json.loads(schedule)   # inline Schedule-field object
+
     mesh = mesh_utils.local_mesh("rows")
     mgr = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
     est = SpectralClustering(
@@ -86,7 +97,8 @@ def main(argv=None):
         eigensolver=args.eigensolver, assigner=args.assigner,
         lanczos_steps=args.lanczos_steps, block_size=args.block_size,
         cheb_degree=args.cheb_degree, sparsify_t=args.sparsify_t,
-        compute_dtype=args.compute_dtype, chunk_size=args.chunk_size,
+        compute_dtype=args.compute_dtype, schedule=schedule,
+        chunk_size=args.chunk_size,
         memory_budget=args.memory_budget, spill_dir=args.spill_dir,
         mesh=mesh)
 
@@ -133,6 +145,10 @@ def main(argv=None):
               f"bytes_streamed={eng['bytes_streamed']} "
               f"peak_affinity_bytes={eng['affinity_peak_bytes']} "
               f"(dense equiv {eng['dense_equiv_bytes']})")
+    sched_info = est.info_.get("schedule")
+    if sched_info:
+        print(f"[schedule] source={sched_info['source']} "
+              f"value={sched_info['value']}")
     if truth is not None:
         from itertools import permutations
         k = args.k

@@ -1,0 +1,160 @@
+"""Persistent schedule cache: best-known schedules per (kernel, shape
+bucket, device kind, dtype), stored as one JSON file.
+
+Shapes are bucketed to the next power of two per dimension, so a schedule
+tuned at n=3000 serves n=4096-class problems; the batch width ``b`` is
+excluded from the key on purpose (see ``KernelSpec.bucket_dims``) — one
+tuned schedule serves every matmat width.  Writes are atomic (tmp +
+``os.replace``, same discipline as ``repro.checkpoint``) and re-read the
+file before merging, so concurrent tuners lose at most their own entry,
+never the whole cache.  A corrupt or foreign-version file is treated as
+empty rather than raised — the cache is an optimization, deleting it is
+always safe (schedules are re-derived by the next ``tune_sweep``).
+
+Default location: ``$REPRO_SCHEDULE_CACHE`` if set, else
+``~/.cache/repro/schedules.json``.  Caches are per-device-kind by
+construction of the key, so one file can hold CPU and TPU entries side by
+side.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+from typing import Optional
+
+from repro.tune.schedule import Schedule, spec
+
+CACHE_ENV = "REPRO_SCHEDULE_CACHE"
+CACHE_VERSION = 1
+
+
+def default_cache_path() -> str:
+    env = os.environ.get(CACHE_ENV)
+    if env:
+        return env
+    return os.path.join(os.path.expanduser("~"), ".cache", "repro",
+                        "schedules.json")
+
+
+def bucket(x: int) -> int:
+    """Next power of two >= x (>= 1): the shape-bucket rounding rule."""
+    return 1 << max(0, int(x) - 1).bit_length() if x > 1 else 1
+
+
+def device_kind() -> str:
+    """Normalized device identifier for cache keys, e.g. "cpu" or
+    "tpu-v5-lite"."""
+    import jax
+    try:
+        kind = jax.devices()[0].device_kind
+    except Exception:  # pragma: no cover - no devices at all
+        kind = jax.default_backend()
+    return str(kind).strip().lower().replace(" ", "-")
+
+
+def cache_key(kernel: str, *, device: Optional[str] = None,
+              dtype: str = "float32", **shape) -> str:
+    """``kernel/shape-bucket/device/dtype`` — the persistent key.  Only the
+    kernel's ``bucket_dims`` participate; extra shape kwargs are ignored
+    so call sites can pass their full shape dict."""
+    sp = spec(kernel)
+    missing = [d for d in sp.bucket_dims if d not in shape]
+    if missing:
+        raise ValueError(f"cache key for {kernel} needs shape dims "
+                         f"{sp.bucket_dims}, missing {missing}")
+    shp = "-".join(f"{d}{bucket(int(shape[d]))}" for d in sp.bucket_dims)
+    return f"{kernel}/{shp}/{device or device_kind()}/{dtype or 'float32'}"
+
+
+class ScheduleCache:
+    """Thread-safe JSON-backed schedule store with hit/miss counters."""
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = path or default_cache_path()
+        self._lock = threading.Lock()
+        self.stats = {"hits": 0, "misses": 0, "puts": 0}
+
+    # -- file I/O -----------------------------------------------------------
+
+    def _read(self) -> dict:
+        try:
+            with open(self.path) as f:
+                data = json.load(f)
+        except (OSError, ValueError):
+            return {}
+        if not isinstance(data, dict) \
+                or data.get("version") != CACHE_VERSION:
+            return {}
+        entries = data.get("entries")
+        return entries if isinstance(entries, dict) else {}
+
+    def _write(self, entries: dict) -> None:
+        d = os.path.dirname(os.path.abspath(self.path))
+        os.makedirs(d, exist_ok=True)
+        tmp = f"{self.path}.tmp.{os.getpid()}"
+        with open(tmp, "w") as f:
+            json.dump({"version": CACHE_VERSION, "entries": entries}, f,
+                      indent=2, sort_keys=True)
+        os.replace(tmp, self.path)
+
+    # -- API ----------------------------------------------------------------
+
+    def get(self, kernel: str, *, device: Optional[str] = None,
+            dtype: str = "float32", **shape) -> Optional[Schedule]:
+        key = cache_key(kernel, device=device, dtype=dtype, **shape)
+        with self._lock:
+            rec = self._read().get(key)
+            if rec is None:
+                self.stats["misses"] += 1
+                return None
+            try:
+                s = Schedule.from_dict(rec["schedule"])
+            except (KeyError, ValueError):
+                self.stats["misses"] += 1
+                return None
+            self.stats["hits"] += 1
+            return s
+
+    def entry(self, kernel: str, *, device: Optional[str] = None,
+              dtype: str = "float32", **shape) -> Optional[dict]:
+        """The raw record (schedule dict + tuning metadata), no counters."""
+        key = cache_key(kernel, device=device, dtype=dtype, **shape)
+        with self._lock:
+            return self._read().get(key)
+
+    def put(self, kernel: str, schedule: Schedule, *,
+            device: Optional[str] = None, dtype: str = "float32",
+            wall_us: Optional[float] = None,
+            default_wall_us: Optional[float] = None, **shape) -> str:
+        key = cache_key(kernel, device=device, dtype=dtype, **shape)
+        rec = {"schedule": schedule.to_dict()}
+        if wall_us is not None:
+            rec["wall_us"] = round(float(wall_us), 2)
+        if default_wall_us is not None:
+            rec["default_wall_us"] = round(float(default_wall_us), 2)
+        with self._lock:
+            entries = self._read()      # merge-on-write: keep peers' keys
+            entries[key] = rec
+            self._write(entries)
+            self.stats["puts"] += 1
+        return key
+
+    def keys(self) -> list:
+        with self._lock:
+            return sorted(self._read())
+
+
+_default: Optional[ScheduleCache] = None
+_default_lock = threading.Lock()
+
+
+def default_cache() -> ScheduleCache:
+    """Process-wide cache at the default path (re-created if the path env
+    var changed — tests point it at tmp dirs)."""
+    global _default
+    with _default_lock:
+        path = default_cache_path()
+        if _default is None or _default.path != path:
+            _default = ScheduleCache(path)
+        return _default
