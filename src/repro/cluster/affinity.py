@@ -291,9 +291,20 @@ def build_fused_rbf_operator(x, sigma, mesh, *, compute_dtype=None,
                     compute_dtype=jnp.dtype(cdtype).name, tile=bm,
                     schedule=sched.to_dict(), schedule_source=sched_src)
 
+    baseline = dict(counters)        # post-build state: the degree pass
+
+    def reset():
+        # restore the post-build baseline so a reused operator reports
+        # per-fit passes instead of accumulating across eigensolves
+        try:
+            jax.effects_barrier()    # flush in-flight _bump callbacks
+        except Exception:
+            pass
+        counters.update(baseline)
+
     return NormalizedOperator(
         matmat=matmat, valid=valid, inv_sqrt=inv_sqrt, n=n, n_pad=n_pad,
-        mesh=mesh, schedule=None, dense=dense, stats=stats)
+        mesh=mesh, schedule=None, dense=dense, stats=stats, reset=reset)
 
 
 @AFFINITIES.register("fused-rbf")

@@ -25,6 +25,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import obs
 from repro.core import kmeans as km
 from repro.core import laplacian as lp
 from repro.core import similarity as sim
@@ -182,16 +183,24 @@ class SpectralClustering:
         if self.affinity == "precomputed":
             return self.fit_affinity(x, checkpointer=checkpointer)
         mesh = self._mesh()
-        x = jnp.asarray(x, self.dtype)
-        key = jax.random.PRNGKey(self.seed)
-        _k_eig, k_lan, k_km = jax.random.split(key, 3)
-        sigma = jnp.asarray(self.sigma, self.dtype) if self.sigma is not None \
-            else sim.median_sigma(x)
-        op = self._affinity_fn(self, x, sigma, mesh)
-        if checkpointer is not None:
-            checkpointer.save_phase("similarity", {"sigma": sigma})
-        self._finish(op, sigma, k_lan, k_km, mesh, checkpointer, train_x=x,
-                     affinity_used=self.affinity)
+        phases: dict = {}
+        with obs.span("fit", affinity=self.affinity,
+                      eigensolver=self.eigensolver, assigner=self.assigner,
+                      n=int(x.shape[0])) as sp_fit:
+            with obs.span("fit.affinity", backend=self.affinity) as sp_aff:
+                x = jnp.asarray(x, self.dtype)
+                key = jax.random.PRNGKey(self.seed)
+                _k_eig, k_lan, k_km = jax.random.split(key, 3)
+                sigma = jnp.asarray(self.sigma, self.dtype) \
+                    if self.sigma is not None else sim.median_sigma(x)
+                op = self._affinity_fn(self, x, sigma, mesh)
+            phases["affinity"] = sp_aff
+            if checkpointer is not None:
+                checkpointer.save_phase("similarity", {"sigma": sigma})
+            self._finish(op, sigma, k_lan, k_km, mesh, checkpointer,
+                         train_x=x, affinity_used=self.affinity,
+                         phases=phases)
+        self._record_obs(sp_fit, phases)
         return self
 
     def fit_affinity(self, S: jax.Array,
@@ -199,30 +208,51 @@ class SpectralClustering:
         """Cluster from a precomputed (n, n) similarity/adjacency matrix
         (the paper's §5 graph dataset), regardless of ``self.affinity``."""
         mesh = self._mesh()
-        key = jax.random.PRNGKey(self.seed)
-        _k_eig, k_lan, k_km = jax.random.split(key, 3)
-        op = AFFINITIES.get("precomputed")(self, S, None, mesh)
-        self._finish(op, jnp.asarray(0.0, self.dtype), k_lan, k_km, mesh,
-                     checkpointer, train_x=None, affinity_used="precomputed")
+        phases: dict = {}
+        with obs.span("fit", affinity="precomputed",
+                      eigensolver=self.eigensolver, assigner=self.assigner,
+                      n=int(S.shape[0])) as sp_fit:
+            with obs.span("fit.affinity", backend="precomputed") as sp_aff:
+                key = jax.random.PRNGKey(self.seed)
+                _k_eig, k_lan, k_km = jax.random.split(key, 3)
+                op = AFFINITIES.get("precomputed")(self, S, None, mesh)
+            phases["affinity"] = sp_aff
+            self._finish(op, jnp.asarray(0.0, self.dtype), k_lan, k_km,
+                         mesh, checkpointer, train_x=None,
+                         affinity_used="precomputed", phases=phases)
+        self._record_obs(sp_fit, phases)
         return self
 
     def fit_predict(self, x: jax.Array) -> jax.Array:
         return self.fit(x).labels_
 
     def _finish(self, op, sigma, k_lan, k_km, mesh, checkpointer, train_x,
-                affinity_used):
-        evals, Z, info = self._eigensolver_fn(self, op, k_lan)
+                affinity_used, phases=None):
+        phases = phases if phases is not None else {}
+        # a reused operator starts a fresh counter window here (fresh
+        # operators are already at their post-build baseline: no-op)
+        op.reset_stats()
+        with obs.span("fit.eigensolve", backend=self.eigensolver) as sp_eig:
+            evals, Z, info = self._eigensolver_fn(self, op, k_lan)
+            jax.block_until_ready(Z)
+        phases["eigensolve"] = sp_eig
         if checkpointer is not None:
             checkpointer.save_phase("eigen", {"eigenvalues": evals})
-        Y = km.normalize_rows(Z) * op.valid[:, None]
-        Y = jax.lax.with_sharding_constraint(
-            Y, NamedSharding(mesh, P(mesh_utils.flat_axes(mesh), None)))
-        labels_pad, centers = self._assigner_fn(self, Y, op.valid, k_km, mesh)
+        with obs.span("fit.assign", backend=self.assigner) as sp_asg:
+            Y = km.normalize_rows(Z) * op.valid[:, None]
+            Y = jax.lax.with_sharding_constraint(
+                Y, NamedSharding(mesh, P(mesh_utils.flat_axes(mesh), None)))
+            labels_pad, centers = self._assigner_fn(self, Y, op.valid, k_km,
+                                                    mesh)
+            labels_unp = op.unpermute(labels_pad)
+            emb_unp = op.unpermute(Y)
+            jax.block_until_ready(labels_unp)
+        phases["assign"] = sp_asg
         if checkpointer is not None:
             checkpointer.save_phase("kmeans", {"centers": centers})
 
-        self.labels_ = op.unpermute(labels_pad)
-        self.embedding_ = op.unpermute(Y)
+        self.labels_ = labels_unp
+        self.embedding_ = emb_unp
         self.eigenvalues_ = evals
         self.centers_ = centers
         self.sigma_ = sigma
@@ -257,6 +287,26 @@ class SpectralClustering:
             info=self.info_)
         return self
 
+    def _record_obs(self, fit_span, phases):
+        """Publish ``info_["obs"]`` (phase walls + coverage + counters)
+        and mirror the numeric fit stats into the process registry."""
+        counters: dict = {}
+        info = getattr(self, "info_", None) or {}
+        for k, v in list(info.items()) + list((info.get("engine")
+                                               or {}).items()):
+            if hasattr(v, "item") and not isinstance(v, (bool, int, float,
+                                                         str)):
+                try:
+                    v = v.item()
+                except Exception:
+                    continue
+            if isinstance(v, bool) or not isinstance(v, (int, float)):
+                continue
+            counters.setdefault(k, v)
+        self.info_["obs"] = obs.fit_obs(fit_span, phases, counters=counters)
+        obs.absorb_stats("fit", counters)
+        obs.gauge("fit.coverage").set(self.info_["obs"]["coverage"])
+
     # -- out-of-sample extension ----------------------------------------------
 
     def transform(self, x: jax.Array) -> jax.Array:
@@ -284,22 +334,25 @@ class SpectralClustering:
         path = serving.route_transform(n, m, path=self.transform_path,
                                        memory_budget=self.memory_budget)
         mu = serving.shifted_mu(self.eigenvalues_)
-        if path == "dense":
-            K = sim.rbf_kernel(x, self._train_x, self.sigma_)
-            O = K @ (self._inv_sqrt[:, None] * self._eigvecs)
-            emb = serving.extension_from_product(O, jnp.sum(K, axis=1), mu)
-            peak = m * n * 4
-        else:
-            sched_info: dict = {}
-            emb = serving.fused_transform(
-                x, self._train_x, self._eigvecs, self._inv_sqrt,
-                self.sigma_, mu, mesh=self._mesh(),
-                compute_dtype=self.compute_dtype,
-                schedule=getattr(self, "schedule", None),
-                _cache=self._transform_cache, _info=sched_info)
-            peak = serving.transform_peak_bytes(
-                m, n, int(x.shape[1]), self.k,
-                mesh_size=mesh_utils.mesh_size(self._mesh()))
+        with obs.span("transform", path=path, m=m, n=n):
+            if path == "dense":
+                K = sim.rbf_kernel(x, self._train_x, self.sigma_)
+                O = K @ (self._inv_sqrt[:, None] * self._eigvecs)
+                emb = serving.extension_from_product(O, jnp.sum(K, axis=1),
+                                                     mu)
+                peak = m * n * 4
+            else:
+                sched_info: dict = {}
+                emb = serving.fused_transform(
+                    x, self._train_x, self._eigvecs, self._inv_sqrt,
+                    self.sigma_, mu, mesh=self._mesh(),
+                    compute_dtype=self.compute_dtype,
+                    schedule=getattr(self, "schedule", None),
+                    _cache=self._transform_cache, _info=sched_info)
+                peak = serving.transform_peak_bytes(
+                    m, n, int(x.shape[1]), self.k,
+                    mesh_size=mesh_utils.mesh_size(self._mesh()))
+        obs.counter("transform.calls", path=path).inc()
         self.info_.setdefault("transform", {}).update(
             path=path, m=m, peak_bytes=int(peak),
             dense_equiv_bytes=m * n * 4)
@@ -310,7 +363,8 @@ class SpectralClustering:
     def predict(self, x: jax.Array) -> jax.Array:
         """Nearest-center cluster assignment of new points in embedding
         space (the fitted centers are the reference)."""
-        return km.assign(self.transform(x), self.centers_)
+        with obs.span("predict", m=int(x.shape[0])):
+            return km.assign(self.transform(x), self.centers_)
 
     def _check_fitted(self):
         if self.result_ is None:

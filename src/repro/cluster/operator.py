@@ -60,6 +60,11 @@ class NormalizedOperator:
                callable is re-evaluated at read time, so backends whose
                counters keep moving after construction (shard-store
                spills during the eigensolve) report live numbers.
+    reset:     optional zero-arg callable restoring the backend's live
+               counters to their post-build baseline.  The estimator
+               calls :meth:`reset_stats` before each eigensolve so a
+               REUSED operator reports per-fit numbers instead of
+               accumulating across fits (fresh operators: no-op).
     """
 
     valid: jax.Array
@@ -72,6 +77,7 @@ class NormalizedOperator:
     schedule: Any = None
     dense: Optional[Callable[[], jax.Array]] = None
     stats: Any = field(default_factory=dict)
+    reset: Optional[Callable[[], None]] = None
 
     def __post_init__(self):
         if self.matmat is None and self.matvec is None:
@@ -93,6 +99,12 @@ class NormalizedOperator:
 
     def stats_snapshot(self) -> dict:
         return dict(self.stats() if callable(self.stats) else self.stats)
+
+    def reset_stats(self) -> None:
+        """Restore live backend counters to their post-build baseline
+        (no-op for backends without one)."""
+        if self.reset is not None:
+            self.reset()
 
     def unpermute(self, values: jax.Array) -> jax.Array:
         """Per-(padded-)row values -> original point order, padding dropped."""

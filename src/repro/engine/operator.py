@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.cluster.operator import NormalizedOperator
 from repro.engine.plan import JobPlan
 from repro.engine.store import ShardStore
@@ -73,9 +74,11 @@ class ShardedCSRGraph:
         spilling/loading while consumers stream the shards) — the one
         merge every stats reporter uses."""
         self._drain_prefetch()
-        return dict(self.stats, nnz=self.nnz,
+        snap = dict(self.stats, nnz=self.nnz,
                     spilled_shards=len(self.store.spilled_keys()),
                     **{f"store_{k}": v for k, v in self.store.stats.items()})
+        obs.absorb_stats("engine", snap)   # mirror into the shared registry
+        return snap
 
     def _pool(self) -> ThreadPoolExecutor:
         if self._prefetch_pool is None:

@@ -11,7 +11,6 @@ the memory budget regardless of n.
 """
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass, field
 from typing import Dict, Optional
 
@@ -19,6 +18,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import kmeans as km
 from repro.core import lanczos as lz
 from repro.core import similarity as sim
@@ -64,36 +64,37 @@ def build_graph(reader, plan: JobPlan,
     store = store or ShardStore(memory_budget=plan.memory_budget,
                                 spill_dir=plan.spill_dir)
     sigma = _resolve_sigma(reader, plan)
-    t0 = time.perf_counter()
 
     tiles = plan.tiles
-    for (i, j) in tiles:
-        tasks.run_map_task(reader, sigma, plan, i, j, store)
-    t_map = time.perf_counter() - t0
+    with obs.span("engine.map", tasks=len(tiles)) as sp_map:
+        for (i, j) in tiles:
+            tasks.run_map_task(reader, sigma, plan, i, j, store)
 
-    t0 = time.perf_counter()
-    for c in range(plan.nchunks):
-        tasks.run_shuffle_task(plan, c, store)
-    t_shuffle = time.perf_counter() - t0
+    with obs.span("engine.shuffle", tasks=plan.nchunks) as sp_shuf:
+        for c in range(plan.nchunks):
+            tasks.run_shuffle_task(plan, c, store)
 
-    t0 = time.perf_counter()
-    deg = np.zeros(plan.n, np.float32)
-    nnz = 0
-    for c, (r0, r1) in enumerate(plan.ranges):
-        out = tasks.run_reduce_task(plan, c, store)
-        deg[r0:r1] = out["deg"]
-        nnz += out["nnz"]
-    t_reduce = time.perf_counter() - t0
+    with obs.span("engine.reduce", tasks=plan.nchunks) as sp_red:
+        deg = np.zeros(plan.n, np.float32)
+        nnz = 0
+        for c, (r0, r1) in enumerate(plan.ranges):
+            out = tasks.run_reduce_task(plan, c, store)
+            deg[r0:r1] = out["deg"]
+            nnz += out["nnz"]
 
     # static stage counters only — live store numbers are merged in by
-    # ShardedCSRGraph.stats_snapshot() at read time
+    # ShardedCSRGraph.stats_snapshot() at read time; stage walls come
+    # from the spans (0.0 when obs is disabled)
     stats = {
         "map_tasks": len(tiles), "shuffle_tasks": plan.nchunks,
         "reduce_tasks": plan.nchunks, "chunks": plan.nchunks,
         "chunk_size": plan.chunk_size, "t": plan.t_eff,
-        "map_s": round(t_map, 4), "shuffle_s": round(t_shuffle, 4),
-        "reduce_s": round(t_reduce, 4),
+        "map_s": round(sp_map.duration_s, 4),
+        "shuffle_s": round(sp_shuf.duration_s, 4),
+        "reduce_s": round(sp_red.duration_s, 4),
     }
+    for key in ("map_tasks", "shuffle_tasks", "reduce_tasks"):
+        obs.counter(f"engine.{key}").inc(stats[key])
     return ShardedCSRGraph(store=store, plan=plan, deg=deg, nnz=nnz,
                            stats=stats), sigma
 
@@ -110,35 +111,36 @@ def _run_fused(plan: JobPlan, reader) -> JobResult:
     x = np.concatenate([np.asarray(reader[c], np.float32)
                         for c in range(plan.nchunks)])
     mesh = mesh_utils.local_mesh("rows")
-    t0 = time.perf_counter()
-    op = build_fused_rbf_operator(jnp.asarray(x), sigma, mesh,
-                                  compute_dtype=plan.compute_dtype)
-    t_build = time.perf_counter() - t0
+    with obs.span("engine.build", path="fused") as sp_build:
+        op = build_fused_rbf_operator(jnp.asarray(x), sigma, mesh,
+                                      compute_dtype=plan.compute_dtype)
 
     key = jax.random.PRNGKey(plan.seed)
     _, k_lan, _k_km = jax.random.split(key, 3)
     b = plan.eff_block_size()
     block_steps = plan.num_block_steps()
-    t0 = time.perf_counter()
-    state = lz.block_lanczos(op.matmat, op.n_pad, block_steps, k_lan,
-                             block_size=b)
-    evals, Z = lz.block_topk_of_shifted(state, plan.k)
-    t_eig = time.perf_counter() - t0
+    with obs.span("engine.eigensolve", path="fused",
+                  block_steps=block_steps) as sp_eig:
+        state = lz.block_lanczos(op.matmat, op.n_pad, block_steps, k_lan,
+                                 block_size=b)
+        evals, Z = lz.block_topk_of_shifted(state, plan.k)
+        jax.block_until_ready(Z)
 
     Y = np.asarray(km.normalize_rows(Z) * op.valid[:, None])[:plan.n]
     ranges = plan.ranges
-    t0 = time.perf_counter()
-    labels, centers = skm.streaming_kmeans(
-        lambda c: Y[ranges[c][0]:ranges[c][1]], plan.nchunks, plan.k,
-        rounds=plan.kmeans_rounds, seed=plan.seed)
-    t_km = time.perf_counter() - t0
+    with obs.span("engine.kmeans", path="fused") as sp_km:
+        labels, centers = skm.streaming_kmeans(
+            lambda c: Y[ranges[c][0]:ranges[c][1]], plan.nchunks, plan.k,
+            rounds=plan.kmeans_rounds, seed=plan.seed)
 
     stats = dict(op.stats_snapshot(), path="fused", chunks=plan.nchunks,
                  points_bytes=int(x.nbytes),
                  lanczos_steps=plan.num_lanczos_steps(),
                  block_size=b, block_steps=block_steps,
-                 build_s=round(t_build, 4),
-                 eigensolve_s=round(t_eig, 4), kmeans_s=round(t_km, 4))
+                 build_s=round(sp_build.duration_s, 4),
+                 eigensolve_s=round(sp_eig.duration_s, 4),
+                 kmeans_s=round(sp_km.duration_s, 4))
+    obs.absorb_stats("engine", stats)
     return JobResult(labels=labels, embedding=Y,
                      eigenvalues=np.asarray(evals), centers=centers,
                      sigma=sigma, graph=None, stats=stats)
@@ -171,25 +173,27 @@ def run_job(plan: JobPlan, reader) -> JobResult:
     _, k_lan, _k_km = jax.random.split(key, 3)
     b = plan.eff_block_size()
     block_steps = plan.num_block_steps()
-    t0 = time.perf_counter()
-    state = lz.block_lanczos(op.matmat, plan.n, block_steps, k_lan,
-                             block_size=b)
-    evals, Z = lz.block_topk_of_shifted(state, plan.k)
-    t_eig = time.perf_counter() - t0
+    with obs.span("engine.eigensolve", path="ooc",
+                  block_steps=block_steps) as sp_eig:
+        state = lz.block_lanczos(op.matmat, plan.n, block_steps, k_lan,
+                                 block_size=b)
+        evals, Z = lz.block_topk_of_shifted(state, plan.k)
+        jax.block_until_ready(Z)
 
     Y = np.asarray(km.normalize_rows(Z))
     ranges = plan.ranges
-    t0 = time.perf_counter()
-    labels, centers = skm.streaming_kmeans(
-        lambda c: Y[ranges[c][0]:ranges[c][1]], plan.nchunks, plan.k,
-        rounds=plan.kmeans_rounds, seed=plan.seed)
-    t_km = time.perf_counter() - t0
+    with obs.span("engine.kmeans", path="ooc") as sp_km:
+        labels, centers = skm.streaming_kmeans(
+            lambda c: Y[ranges[c][0]:ranges[c][1]], plan.nchunks, plan.k,
+            rounds=plan.kmeans_rounds, seed=plan.seed)
 
     stats = dict(graph.stats_snapshot(), path="ooc",
                  lanczos_steps=plan.num_lanczos_steps(),
                  block_size=b, block_steps=block_steps,
                  matrix_passes=block_steps,
-                 eigensolve_s=round(t_eig, 4), kmeans_s=round(t_km, 4))
+                 eigensolve_s=round(sp_eig.duration_s, 4),
+                 kmeans_s=round(sp_km.duration_s, 4))
+    obs.absorb_stats("engine", stats)
     return JobResult(labels=labels, embedding=Y,
                      eigenvalues=np.asarray(evals), centers=centers,
                      sigma=sigma, graph=graph, stats=stats)

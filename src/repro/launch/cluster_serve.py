@@ -30,6 +30,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
+
 
 @dataclass
 class PredictRequest:
@@ -62,6 +64,10 @@ class ClusterServer:
         self.d = int(est._train_x.shape[1])
         self.steps = 0
         self.stats = {"batches": 0, "rows_live": 0, "rows_padded": 0}
+        # the SHARED histogram type backs both the live metrics and
+        # summarize()'s p50/p95/p99 (exact nearest-rank at service scale)
+        self.batch_ms = obs.histogram("serve.batch_ms")
+        self.request_ms = obs.histogram("serve.request_ms")
         # one compiled predict for the one static shape the service runs;
         # est.predict routes (dense/fused) on static metadata, so the
         # whole embed+assign pipeline traces into a single computation
@@ -93,22 +99,33 @@ class ClusterServer:
         buf, mask, placed = self._pack(active)
         if not placed:
             return 0
-        labels = np.asarray(self._predict(jnp.asarray(buf)))
-        now = time.perf_counter()
-        for req, start, take, row0 in placed:
-            if req.labels is None:
-                req.labels = np.empty(len(req.points), labels.dtype)
-            req.labels[start: start + take] = labels[row0: row0 + take]
-            req._filled += take
-            if req.done:
-                req.t_done = now
-        while active and active[0].done:
-            active.popleft()
-        live = int(mask.sum())
+        with obs.span("serve.step", batch_rows=self.B) as sp:
+            t0 = time.perf_counter()
+            labels = np.asarray(self._predict(jnp.asarray(buf)))
+            now = time.perf_counter()
+            self.batch_ms.observe(1e3 * (now - t0))
+            for req, start, take, row0 in placed:
+                if req.labels is None:
+                    req.labels = np.empty(len(req.points), labels.dtype)
+                req.labels[start: start + take] = labels[row0: row0 + take]
+                req._filled += take
+                if req.done:
+                    req.t_done = now
+                    self.request_ms.observe(1e3 * req.latency_s)
+            while active and active[0].done:
+                active.popleft()
+            live = int(mask.sum())
+            sp.set(rows_live=live)
         self.steps += 1
         self.stats["batches"] += 1
         self.stats["rows_live"] += live
         self.stats["rows_padded"] += self.B - live
+        obs.counter("serve.batches").inc()
+        obs.counter("serve.rows_live").inc(live)
+        obs.counter("serve.rows_padded").inc(self.B - live)
+        obs.gauge("serve.fill").set(
+            self.stats["rows_live"]
+            / max(self.stats["rows_live"] + self.stats["rows_padded"], 1))
         return live
 
     def run(self, queue: list[PredictRequest]) -> list[PredictRequest]:
@@ -129,14 +146,22 @@ class ClusterServer:
 
 
 def summarize(done: list[PredictRequest], wall_s: float) -> dict:
-    lat = sorted(r.latency_s for r in done)
+    # the shared histogram type does the percentile math: exact
+    # nearest-rank (p50 of [a, b] is a; p99 of n=1 is that sample —
+    # no len//2 off-by-one on small n)
+    hist = obs.Histogram("serve.summary_latency_ms")
+    for r in done:
+        hist.observe(1e3 * r.latency_s)
     total = sum(len(r.points) for r in done)
     return {
         "requests": len(done),
         "points": total,
         "points_per_s": total / max(wall_s, 1e-9),
-        "latency_p50_ms": 1e3 * lat[len(lat) // 2] if lat else 0.0,
-        "latency_max_ms": 1e3 * lat[-1] if lat else 0.0,
+        "latency_p50_ms": hist.percentile(50),
+        "latency_p95_ms": hist.percentile(95),
+        "latency_p99_ms": hist.percentile(99),
+        "latency_max_ms": 1e3 * max((r.latency_s for r in done),
+                                    default=0.0),
     }
 
 
@@ -162,6 +187,10 @@ def main(argv=None):
     ap.add_argument("--points-per-request", type=int, default=100)
     ap.add_argument("--batch-rows", type=int, default=256)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace-out", default=None, metavar="FILE.json",
+                    help="write a Chrome-trace of the run (chrome://tracing)")
+    ap.add_argument("--metrics-out", default=None, metavar="FILE.json",
+                    help="write the metrics registry snapshot as JSON")
     args = ap.parse_args(argv)
 
     if args.fit_blobs:
@@ -175,6 +204,8 @@ def main(argv=None):
         est.fit(jnp.asarray(pts))
         print(f"[cluster_serve] fit n={args.fit_blobs} "
               f"affinity={args.affinity} in {time.perf_counter() - t0:.1f}s")
+        if "obs" in est.info_:
+            print(obs.phase_summary(est.info_["obs"]))
         est.save(args.model_dir)
         print(f"[cluster_serve] saved -> {args.model_dir}")
 
@@ -205,8 +236,12 @@ def main(argv=None):
     print(f"[cluster_serve] {s['requests']} requests, {s['points']} points, "
           f"{srv.steps} batch steps ({fill:.0%} fill), {wall:.2f}s "
           f"({s['points_per_s']:.0f} pts/s, "
-          f"p50={s['latency_p50_ms']:.0f}ms max={s['latency_max_ms']:.0f}ms) "
+          f"p50={s['latency_p50_ms']:.0f}ms p95={s['latency_p95_ms']:.0f}ms "
+          f"p99={s['latency_p99_ms']:.0f}ms max={s['latency_max_ms']:.0f}ms) "
           f"path={path}")
+    print(f"[obs] serve wall={wall:.3f}s batches={srv.stats['batches']} "
+          f"fill={fill:.0%} request_p99_ms={s['latency_p99_ms']:.1f}")
+    obs.write_artifacts(args.trace_out, args.metrics_out)
     assert all(r.done for r in done)
     assert all(len(r.labels) == len(r.points) for r in done)
 

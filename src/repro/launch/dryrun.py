@@ -349,7 +349,7 @@ def _parse_overrides(pairs: list[str]):
 
 def run_cell(arch: str, shape_name: str, multi_pod: bool, verbose: bool = True,
              overrides: dict | None = None, tag: str = ""):
-    t0 = time.time()
+    t0 = time.perf_counter()
     if arch == "spectral":
         lowered, mesh, model = lower_spectral_cell(shape_name, multi_pod)
     else:
@@ -358,17 +358,17 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, verbose: bool = True,
             cfg = cfg.with_(**overrides)
         lowered, mesh, model = lower_lm_cell(arch, shape_name, multi_pod,
                                              cfg_override=cfg)
-    t_lower = time.time() - t0
-    t0 = time.time()
+    t_lower = time.perf_counter() - t0
+    t0 = time.perf_counter()
     compiled = lowered.compile()
-    t_compile = time.time() - t0
+    t_compile = time.perf_counter() - t0
 
     n_chips = mesh_utils.mesh_size(mesh)
     mem = _memory_dict(compiled)
     cost = _cost_dict(compiled)        # raw XLA numbers (loop bodies once)
-    t0 = time.time()
+    t0 = time.perf_counter()
     hlo = hlo_analysis.analyze(compiled.as_text())
-    t_analyze = time.time() - t0
+    t_analyze = time.perf_counter() - t0
     roof = roofline_terms(hlo)
     rec = {
         "arch": arch, "shape": shape_name,

@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.checkpoint import CheckpointManager
 from repro.cluster import AFFINITIES, ASSIGNERS, EIGENSOLVERS, SpectralClustering
 from repro.data import graph_file, synthetic
@@ -74,6 +75,10 @@ def main(argv=None):
     ap.add_argument("--cheb-degree", type=int, default=12,
                     help="Chebyshev filter degree (--eigensolver chebdav)")
     ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--trace-out", default=None, metavar="FILE.json",
+                    help="write a Chrome-trace of the run (chrome://tracing)")
+    ap.add_argument("--metrics-out", default=None, metavar="FILE.json",
+                    help="write the metrics registry snapshot as JSON")
     args = ap.parse_args(argv)
 
     affinity = args.affinity
@@ -102,7 +107,7 @@ def main(argv=None):
         memory_budget=args.memory_budget, spill_dir=args.spill_dir,
         mesh=mesh)
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     if args.graph:
         n, edges = graph_file.parse_topology(args.graph)
         S = graph_file.adjacency_dense(n, edges)
@@ -115,7 +120,7 @@ def main(argv=None):
             n = args.blobs or 600
             pts, truth = synthetic.blobs(n, args.k)
         est.fit(jnp.asarray(pts), checkpointer=mgr)
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
 
     labels = np.asarray(est.labels_)
     sizes = np.bincount(labels, minlength=args.k)
@@ -149,6 +154,9 @@ def main(argv=None):
     if sched_info:
         print(f"[schedule] source={sched_info['source']} "
               f"value={sched_info['value']}")
+    if "obs" in est.info_:
+        print(obs.phase_summary(est.info_["obs"]))
+    obs.write_artifacts(args.trace_out, args.metrics_out)
     if truth is not None:
         from itertools import permutations
         k = args.k

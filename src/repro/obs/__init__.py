@@ -1,0 +1,67 @@
+"""``repro.obs`` — the unified observability layer.
+
+Zero-required-dependency tracing spans, a process-wide metrics registry,
+and Chrome-trace export, wired through every subsystem (estimator fit
+phases, engine map/shuffle/reduce, the batched predict service, the
+autotuner).  See API.md "Observability".
+
+    from repro import obs
+
+    with obs.span("fit.affinity"): ...          # hierarchical, thread-safe
+    obs.counter("engine.map_tasks").inc()
+    obs.histogram("serve.request_ms").observe(3.2)
+    obs.absorb_stats("engine.store", store.stats)   # ad-hoc dicts -> metrics
+    obs.export_trace("trace.json")              # chrome://tracing
+    obs.metrics.to_json("metrics.json")
+
+``obs.set_enabled(False)`` turns both spans and stat absorption into
+no-ops (the overhead benchmark's baseline).
+"""
+from __future__ import annotations
+
+from repro.obs.metrics import (DEFAULT_BUCKETS_MS, Counter, Gauge, Histogram,
+                               MetricsRegistry, nearest_rank)
+from repro.obs.report import fit_obs, phase_summary, write_artifacts
+from repro.obs.trace import Span, Tracer
+
+# the process-wide instances every subsystem shares
+tracer = Tracer()
+metrics = MetricsRegistry()
+
+# bound module-level helpers (the common call sites)
+span = tracer.span
+traced = tracer.traced
+current_span = tracer.current
+spans = tracer.spans
+export_trace = tracer.export
+counter = metrics.counter
+gauge = metrics.gauge
+histogram = metrics.histogram
+absorb_stats = metrics.absorb_stats
+snapshot = metrics.snapshot
+
+
+def set_enabled(on: bool) -> None:
+    """Toggle span recording AND stat absorption process-wide (direct
+    metric objects already held by callers keep working either way)."""
+    tracer.enabled = on
+    metrics.enabled = on
+
+
+def enabled() -> bool:
+    return tracer.enabled
+
+
+def reset() -> None:
+    """Clear all recorded spans and metrics (tests; between CLI runs)."""
+    tracer.reset()
+    metrics.reset()
+
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "MetricsRegistry", "Span", "Tracer",
+    "DEFAULT_BUCKETS_MS", "absorb_stats", "counter", "current_span",
+    "enabled", "export_trace", "fit_obs", "gauge", "histogram", "metrics",
+    "nearest_rank", "phase_summary", "reset", "set_enabled", "snapshot",
+    "span", "spans", "traced", "tracer", "write_artifacts",
+]

@@ -1,0 +1,275 @@
+"""Process-wide metrics registry: named counters, gauges, and fixed-bucket
+histograms, with labeled children and a JSON snapshot API.
+
+The Hadoop analogue is the per-job counter page: every subsystem's numbers
+land in ONE namespace instead of six ad-hoc ``stats`` dicts::
+
+    from repro import obs
+
+    obs.counter("engine.map_tasks").inc(12)
+    obs.gauge("serve.fill").set(0.97)
+    obs.histogram("serve.request_ms").observe(3.4)
+    obs.histogram("serve.request_ms", model="blobs").observe(2.1)  # labeled
+    obs.metrics.snapshot()     # {"engine.map_tasks": {"type": "counter", ...}}
+
+:func:`absorb_stats` is the adapter for the repo's existing ad-hoc stats
+dicts (shard-store spills, prefetch hits, schedule-cache hits, fused-rbf
+``matrix_passes``/``bytes_streamed``): it upserts each numeric value as an
+absolute counter/gauge under a prefix, idempotently — re-absorbing a live
+dict updates rather than double-counts.
+
+Histogram percentiles serve the latency SLO path (p50/p95/p99): exact
+nearest-rank over retained samples up to ``sample_cap`` observations, then
+a fixed-bucket upper-edge estimate — both monotone, both safe on n=1.
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+import threading
+from bisect import bisect_left
+from typing import Any, Dict, List, Optional, Sequence
+
+# default histogram edges: a geometric ms ladder covering sub-ms kernel
+# calls through minute-scale fits (finite edges; +inf overflow is implicit)
+DEFAULT_BUCKETS_MS = (0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0, 25.0, 50.0,
+                      100.0, 250.0, 500.0, 1000.0, 2500.0, 5000.0, 10000.0,
+                      30000.0, 60000.0)
+
+
+def nearest_rank(sorted_values: Sequence[float], q: float) -> float:
+    """The nearest-rank percentile (q in [0, 100]) of an ascending
+    sequence: the ceil(q/100 * n)-th smallest value, 1-indexed — exact on
+    small n, no interpolation, no off-by-one (p50 of [a, b] is ``a``,
+    p100 is the max, p0 the min)."""
+    n = len(sorted_values)
+    if n == 0:
+        return 0.0
+    rank = max(1, math.ceil((q / 100.0) * n))
+    return float(sorted_values[min(rank, n) - 1])
+
+
+class Counter:
+    """Monotone event count.  ``set_to`` exists for the absorb adapter
+    (re-publishing an external cumulative stat) and clamps to >= current
+    only in spirit — absorb semantics are absolute."""
+
+    __slots__ = ("name", "_value", "_lock")
+    kind = "counter"
+
+    def __init__(self, name: str):
+        self.name = name
+        self._value = 0
+        self._lock = threading.Lock()
+
+    def inc(self, v: float = 1) -> None:
+        with self._lock:
+            self._value += v
+
+    def set_to(self, v: float) -> None:
+        with self._lock:
+            self._value = v
+
+    @property
+    def value(self):
+        return self._value
+
+    def snapshot(self) -> Dict[str, Any]:
+        return {"type": self.kind, "value": self._value}
+
+
+class Gauge:
+    """Last-write-wins instantaneous value."""
+
+    __slots__ = ("name", "_value", "_lock")
+    kind = "gauge"
+
+    def __init__(self, name: str):
+        self.name = name
+        self._value = 0.0
+        self._lock = threading.Lock()
+
+    def set(self, v: float) -> None:
+        with self._lock:
+            self._value = v
+
+    @property
+    def value(self):
+        return self._value
+
+    def snapshot(self) -> Dict[str, Any]:
+        return {"type": self.kind, "value": self._value}
+
+
+class Histogram:
+    """Fixed-bucket histogram with exact small-n percentiles.
+
+    Observations land in cumulative-style bucket counts (``buckets`` are
+    ascending finite upper edges; an implicit +inf bucket catches the
+    rest).  The first ``sample_cap`` raw values are retained so
+    ``percentile`` is EXACT nearest-rank until the reservoir fills —
+    serving runs and tests live well under the cap; beyond it the estimate
+    degrades gracefully to the containing bucket's upper edge."""
+
+    __slots__ = ("name", "buckets", "sample_cap", "_counts", "_samples",
+                 "_sorted", "_count", "_sum", "_min", "_max", "_lock")
+    kind = "histogram"
+
+    def __init__(self, name: str, buckets: Sequence[float] = None,
+                 sample_cap: int = 8192):
+        self.name = name
+        self.buckets = tuple(sorted(buckets or DEFAULT_BUCKETS_MS))
+        self.sample_cap = sample_cap
+        self._counts = [0] * (len(self.buckets) + 1)   # +1: overflow
+        self._samples: List[float] = []
+        self._sorted = True
+        self._count = 0
+        self._sum = 0.0
+        self._min = math.inf
+        self._max = -math.inf
+        self._lock = threading.Lock()
+
+    def observe(self, v: float) -> None:
+        v = float(v)
+        with self._lock:
+            self._counts[bisect_left(self.buckets, v)] += 1
+            self._count += 1
+            self._sum += v
+            self._min = min(self._min, v)
+            self._max = max(self._max, v)
+            if len(self._samples) < self.sample_cap:
+                self._samples.append(v)
+                self._sorted = False
+
+    @property
+    def count(self) -> int:
+        return self._count
+
+    def percentile(self, q: float) -> float:
+        """q in [0, 100].  Exact nearest-rank while every observation is
+        retained; bucket-upper-edge estimate after the reservoir fills."""
+        with self._lock:
+            if self._count == 0:
+                return 0.0
+            if self._count <= len(self._samples):
+                if not self._sorted:
+                    self._samples.sort()
+                    self._sorted = True
+                return nearest_rank(self._samples, q)
+            rank = max(1, math.ceil((q / 100.0) * self._count))
+            cum = 0
+            for i, c in enumerate(self._counts):
+                cum += c
+                if cum >= rank:
+                    return self.buckets[i] if i < len(self.buckets) \
+                        else self._max
+            return self._max
+
+    def snapshot(self) -> Dict[str, Any]:
+        with self._lock:
+            count, total = self._count, self._sum
+            lo = self._min if count else 0.0
+            hi = self._max if count else 0.0
+            counts = list(self._counts)
+        return {"type": self.kind, "count": count,
+                "sum": round(total, 6), "min": lo, "max": hi,
+                "p50": self.percentile(50), "p95": self.percentile(95),
+                "p99": self.percentile(99),
+                "buckets": {("+inf" if i == len(self.buckets)
+                             else str(self.buckets[i])): c
+                            for i, c in enumerate(counts) if c}}
+
+
+def _labeled(name: str, labels: Dict[str, Any]) -> str:
+    if not labels:
+        return name
+    inner = ",".join(f"{k}={labels[k]}" for k in sorted(labels))
+    return f"{name}{{{inner}}}"
+
+
+class MetricsRegistry:
+    """Name -> metric map.  ``counter``/``gauge``/``histogram`` get or
+    create; a name can hold only one metric type (a mismatch raises).
+    Labeled children are separate metrics keyed ``name{k=v,...}``."""
+
+    def __init__(self, enabled: bool = True):
+        self.enabled = enabled
+        self._metrics: "Dict[str, Any]" = {}
+        self._lock = threading.Lock()
+
+    def _get(self, cls, name: str, labels: Dict[str, Any], **kw):
+        key = _labeled(name, labels)
+        with self._lock:
+            m = self._metrics.get(key)
+            if m is None:
+                m = self._metrics[key] = cls(key, **kw)
+            elif not isinstance(m, cls):
+                raise TypeError(f"metric {key!r} is a {m.kind}, not a "
+                                f"{cls.kind}")
+            return m
+
+    def counter(self, name: str, **labels) -> Counter:
+        return self._get(Counter, name, labels)
+
+    def gauge(self, name: str, **labels) -> Gauge:
+        return self._get(Gauge, name, labels)
+
+    def histogram(self, name: str, *, buckets: Sequence[float] = None,
+                  sample_cap: int = 8192, **labels) -> Histogram:
+        return self._get(Histogram, name, labels, buckets=buckets,
+                         sample_cap=sample_cap)
+
+    def get(self, key: str):
+        """Look up an existing metric by its full (labeled) key."""
+        with self._lock:
+            return self._metrics.get(key)
+
+    def absorb_stats(self, prefix: str, stats: Dict[str, Any]) -> None:
+        """Adapter for ad-hoc stats dicts: each numeric value upserts the
+        metric ``<prefix>.<key>`` ABSOLUTELY — ints become counters set to
+        the value, floats become gauges — so re-absorbing a live dict
+        (engine store counters keep moving during an eigensolve) updates
+        in place instead of double-counting.  Non-numeric values are
+        skipped (they belong in span attributes, not metrics)."""
+        if not self.enabled or not stats:
+            return
+        for k, v in stats.items():
+            if hasattr(v, "item") and not isinstance(v, (bool, int, float,
+                                                         str)):
+                try:                 # numpy/jax scalar -> python scalar
+                    v = v.item()
+                except Exception:
+                    continue
+            if isinstance(v, bool) or not isinstance(v, (int, float)):
+                continue
+            name = f"{prefix}.{k}"
+            if isinstance(v, int):
+                self.counter(name).set_to(v)
+            else:
+                self.gauge(name).set(v)
+
+    # -- snapshot / export ---------------------------------------------------
+
+    def snapshot(self, prefix: str = "") -> Dict[str, Dict[str, Any]]:
+        with self._lock:
+            items = sorted(self._metrics.items())
+        return {k: m.snapshot() for k, m in items if k.startswith(prefix)}
+
+    def to_json(self, path: Optional[str] = None, prefix: str = "") -> str:
+        """Serialize the snapshot; atomically written to ``path`` when
+        given.  Round-trips: ``json.loads(reg.to_json())`` equals
+        ``reg.snapshot()``."""
+        text = json.dumps(self.snapshot(prefix), indent=2, sort_keys=True)
+        if path is not None:
+            d = os.path.dirname(os.path.abspath(path))
+            os.makedirs(d, exist_ok=True)
+            tmp = f"{path}.tmp.{os.getpid()}"
+            with open(tmp, "w") as f:
+                f.write(text)
+            os.replace(tmp, path)
+        return text
+
+    def reset(self) -> None:
+        with self._lock:
+            self._metrics.clear()

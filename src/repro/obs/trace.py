@@ -1,0 +1,250 @@
+"""Hierarchical tracing spans with a Chrome-trace exporter.
+
+The paper's Hadoop pipeline is legible because every stage is a named job
+with counters; this module gives the jax_pallas reproduction the same
+property.  A :class:`Span` is one named, timed region::
+
+    from repro import obs
+
+    with obs.span("fit.affinity", backend="fused-rbf") as sp:
+        op = build(...)            # sp.duration_s after exit
+
+    @obs.traced("engine.map")
+    def run_map_task(...): ...
+
+Spans nest through a thread-local stack (each thread has its own), use
+monotonic clocks (``time.perf_counter``), and carry arbitrary JSON-able
+attributes.  Finished spans accumulate in a process-wide :class:`Tracer`
+and export as Chrome-trace / Perfetto JSON (``obs.export_trace(path)``)
+viewable at ``chrome://tracing`` or https://ui.perfetto.dev.
+
+When ``jax.profiler`` is importable, every span also enters a
+``TraceAnnotation`` so the same region names appear inside XLA/perfetto
+device profiles — purely best-effort, the module has NO required
+dependencies beyond the stdlib.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+try:  # optional pass-through into XLA profiles; never required
+    from jax.profiler import TraceAnnotation as _JaxAnnotation
+except Exception:  # pragma: no cover - jax absent or too old
+    _JaxAnnotation = None
+
+
+class Span:
+    """One named, timed region.  ``t0``/``t1`` are perf_counter seconds
+    relative to the owning tracer's epoch; ``t1`` is None while open."""
+
+    __slots__ = ("name", "attrs", "t0", "t1", "tid", "depth", "_ann")
+
+    def __init__(self, name: str, attrs: Dict[str, Any], t0: float,
+                 tid: int, depth: int):
+        self.name = name
+        self.attrs = attrs
+        self.t0 = t0
+        self.t1: Optional[float] = None
+        self.tid = tid
+        self.depth = depth
+        self._ann = None
+
+    @property
+    def duration_s(self) -> float:
+        return (self.t1 if self.t1 is not None else self.t0) - self.t0
+
+    def set(self, **attrs) -> "Span":
+        """Attach attributes to an open (or finished) span."""
+        self.attrs.update(attrs)
+        return self
+
+    def __repr__(self) -> str:
+        state = f"{self.duration_s * 1e3:.2f}ms" if self.t1 is not None \
+            else "open"
+        return f"Span({self.name!r}, {state}, depth={self.depth})"
+
+
+class _NullSpan:
+    """Returned while tracing is disabled: accepts the same calls, records
+    nothing (the <=2% overhead contract of BENCH_obs.json)."""
+
+    name = ""
+    t0 = t1 = 0.0
+    depth = 0
+    duration_s = 0.0
+    attrs: Dict[str, Any] = {}
+
+    def set(self, **attrs):
+        return self
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        return False
+
+
+_NULL = _NullSpan()
+
+
+class _SpanCtx:
+    """Context manager binding one Span to one tracer (also what the
+    ``traced`` decorator runs around each call)."""
+
+    __slots__ = ("_tracer", "_name", "_attrs", "_span")
+
+    def __init__(self, tracer: "Tracer", name: str, attrs: Dict[str, Any]):
+        self._tracer = tracer
+        self._name = name
+        self._attrs = attrs
+        self._span: Optional[Span] = None
+
+    def __enter__(self) -> Span:
+        self._span = self._tracer._push(self._name, self._attrs)
+        return self._span
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        if exc_type is not None:
+            self._span.attrs.setdefault("error", exc_type.__name__)
+        self._tracer._pop(self._span)
+        return False
+
+
+class Tracer:
+    """Thread-safe collector of finished spans.
+
+    One process-wide instance (``repro.obs.tracer``) backs the module-level
+    ``span``/``traced``/``export_trace`` helpers; tests may build private
+    tracers.  The epoch is captured at construction (and on ``reset``), so
+    exported timestamps always start near zero.
+    """
+
+    def __init__(self, enabled: bool = True, jax_annotations: bool = True):
+        self.enabled = enabled
+        self.jax_annotations = jax_annotations
+        self._lock = threading.Lock()
+        self._events: List[Span] = []
+        self._tls = threading.local()
+        self.epoch = time.perf_counter()
+
+    # -- span lifecycle -----------------------------------------------------
+
+    def _stack(self) -> List[Span]:
+        st = getattr(self._tls, "stack", None)
+        if st is None:
+            st = self._tls.stack = []
+        return st
+
+    def span(self, name: str, **attrs) -> Any:
+        """Open a span: ``with tracer.span("fit.affinity") as sp: ...``."""
+        if not self.enabled:
+            return _NULL
+        return _SpanCtx(self, name, attrs)
+
+    def traced(self, name: Optional[str] = None, **attrs) -> Callable:
+        """Decorator form: the whole call body becomes one span."""
+
+        def deco(fn: Callable) -> Callable:
+            sp_name = name or fn.__qualname__
+
+            def wrapper(*args, **kwargs):
+                with self.span(sp_name, **attrs):
+                    return fn(*args, **kwargs)
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__qualname__ = fn.__qualname__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__wrapped__ = fn
+            return wrapper
+
+        return deco
+
+    def current(self) -> Optional[Span]:
+        """The innermost open span on THIS thread (None at top level)."""
+        st = self._stack()
+        return st[-1] if st else None
+
+    def _push(self, name: str, attrs: Dict[str, Any]) -> Span:
+        st = self._stack()
+        sp = Span(name, attrs, time.perf_counter() - self.epoch,
+                  threading.get_ident(), len(st))
+        st.append(sp)
+        if self.jax_annotations and _JaxAnnotation is not None:
+            try:
+                sp._ann = _JaxAnnotation(name)
+                sp._ann.__enter__()
+            except Exception:   # annotation failure must never break a span
+                sp._ann = None
+        return sp
+
+    def _pop(self, sp: Span) -> None:
+        sp.t1 = time.perf_counter() - self.epoch
+        if sp._ann is not None:
+            try:
+                sp._ann.__exit__(None, None, None)
+            except Exception:
+                pass
+            sp._ann = None
+        st = self._stack()
+        # exits normally come LIFO; tolerate leaks (an abandoned inner span
+        # must not corrupt the outer ones)
+        while st and st[-1] is not sp:
+            st.pop()
+        if st:
+            st.pop()
+        with self._lock:
+            self._events.append(sp)
+
+    # -- inspection / export ------------------------------------------------
+
+    def spans(self, prefix: str = "") -> List[Span]:
+        """Finished spans (oldest first), optionally name-filtered."""
+        with self._lock:
+            return [s for s in self._events if s.name.startswith(prefix)]
+
+    def reset(self) -> None:
+        with self._lock:
+            self._events.clear()
+        self.epoch = time.perf_counter()
+
+    def to_chrome_trace(self) -> Dict[str, Any]:
+        """The Chrome-trace JSON object: complete ("ph": "X") events with
+        microsecond ``ts``/``dur``, one row per thread.  Nesting is implied
+        by containment on a tid, which the span stack guarantees."""
+        pid = os.getpid()
+        events: List[Dict[str, Any]] = []
+        tids = {}
+        for sp in self.spans():
+            # renumber thread ids densely so the viewer rows are stable
+            tid = tids.setdefault(sp.tid, len(tids))
+            ev = {"name": sp.name, "ph": "X", "pid": pid, "tid": tid,
+                  "ts": round(sp.t0 * 1e6, 3),
+                  "dur": round(max(sp.duration_s, 0.0) * 1e6, 3),
+                  "cat": sp.name.split(".", 1)[0]}
+            if sp.attrs:
+                ev["args"] = {k: v if isinstance(v, (int, float, bool,
+                                                     str, type(None)))
+                              else str(v) for k, v in sp.attrs.items()}
+            events.append(ev)
+        events.sort(key=lambda e: e["ts"])
+        meta = [{"name": "process_name", "ph": "M", "pid": pid,
+                 "args": {"name": "repro"}}]
+        meta += [{"name": "thread_name", "ph": "M", "pid": pid, "tid": t,
+                  "args": {"name": "main" if t == 0 else f"thread-{t}"}}
+                 for t in sorted(tids.values())]
+        return {"traceEvents": meta + events, "displayTimeUnit": "ms"}
+
+    def export(self, path: str) -> str:
+        """Write the Chrome-trace JSON; open it in ``chrome://tracing`` or
+        https://ui.perfetto.dev.  Returns ``path``."""
+        d = os.path.dirname(os.path.abspath(path))
+        os.makedirs(d, exist_ok=True)
+        tmp = f"{path}.tmp.{os.getpid()}"
+        with open(tmp, "w") as f:
+            json.dump(self.to_chrome_trace(), f)
+        os.replace(tmp, path)
+        return path

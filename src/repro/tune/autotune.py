@@ -161,48 +161,56 @@ def autotune(kernel: str, n: int, *, d: int = 8, b: int = 8, k: int = 8,
     "speedup", "best" (schedule dict), "rows": [per-candidate {schedule,
     wall_us, gflops, frac_peak_flops, gbs, frac_peak_bytes}]}``.
     """
+    from repro import obs
+
     cache = cache or default_cache()
     shape = _kernel_shape(kernel, n, d=d, b=b, k=k)
     dtype = compute_dtype or "float32"
     sp = spec(kernel)
 
-    if not force:
-        hit = cache.entry(kernel, dtype=dtype, **shape)
-        if hit is not None:
-            rep = {"kernel": kernel, "shape": shape, "cache_hit": True,
-                   "best": hit["schedule"],
-                   "best_us": hit.get("wall_us"),
-                   "default_us": hit.get("default_wall_us"), "rows": []}
-            if log:
-                log(f"tune/{kernel}_n{n}: cache_hit=True "
-                    f"schedule={hit['schedule']}")
-            return rep
+    with obs.span("tune.autotune", kernel=kernel, n=n) as sp_tune:
+        if not force:
+            hit = cache.entry(kernel, dtype=dtype, **shape)
+            if hit is not None:
+                rep = {"kernel": kernel, "shape": shape, "cache_hit": True,
+                       "best": hit["schedule"],
+                       "best_us": hit.get("wall_us"),
+                       "default_us": hit.get("default_wall_us"), "rows": []}
+                if log:
+                    log(f"tune/{kernel}_n{n}: cache_hit=True "
+                        f"schedule={hit['schedule']}")
+                sp_tune.set(cache_hit=True)
+                obs.absorb_stats("tune.cache", cache.stats)
+                return rep
 
-    fn = _bench_fn(kernel, **shape)
-    cands = candidates(kernel, quick=quick, compute_dtype=compute_dtype,
-                       **shape)
-    roofline = _roofline_mod()
-    if quick:
-        iters = 1
-    rows, default_us = [], None
-    for s in cands:
-        wall_us = _time(fn, s, warmup=warmup, iters=iters)
-        rec = {"schedule": s.to_dict(), "wall_us": round(wall_us, 1)}
-        if roofline is not None and sp.flops_model and sp.bytes_model:
-            rec.update(roofline.kernel_roofline(
-                sp.flops_model(s, **shape), sp.bytes_model(s, **shape),
-                wall_us * 1e-6))
-        rows.append(rec)
-        if default_us is None:
-            default_us = wall_us        # candidate 0 IS the default
-        if log:
-            log(f"tune/{kernel}_n{n}: bm={s.bm} bn={s.bn} acc={s.acc} "
-                f"order={s.grid_order} -> {wall_us:.0f}us")
-    best_i = min(range(len(rows)), key=lambda i: rows[i]["wall_us"])
-    best = cands[best_i]
-    best_us = rows[best_i]["wall_us"]
-    cache.put(kernel, best, dtype=dtype, wall_us=best_us,
-              default_wall_us=default_us, **shape)
+        fn = _bench_fn(kernel, **shape)
+        cands = candidates(kernel, quick=quick, compute_dtype=compute_dtype,
+                           **shape)
+        roofline = _roofline_mod()
+        if quick:
+            iters = 1
+        rows, default_us = [], None
+        for s in cands:
+            wall_us = _time(fn, s, warmup=warmup, iters=iters)
+            rec = {"schedule": s.to_dict(), "wall_us": round(wall_us, 1)}
+            if roofline is not None and sp.flops_model and sp.bytes_model:
+                rec.update(roofline.kernel_roofline(
+                    sp.flops_model(s, **shape), sp.bytes_model(s, **shape),
+                    wall_us * 1e-6))
+            rows.append(rec)
+            if default_us is None:
+                default_us = wall_us        # candidate 0 IS the default
+            if log:
+                log(f"tune/{kernel}_n{n}: bm={s.bm} bn={s.bn} acc={s.acc} "
+                    f"order={s.grid_order} -> {wall_us:.0f}us")
+        best_i = min(range(len(rows)), key=lambda i: rows[i]["wall_us"])
+        best = cands[best_i]
+        best_us = rows[best_i]["wall_us"]
+        cache.put(kernel, best, dtype=dtype, wall_us=best_us,
+                  default_wall_us=default_us, **shape)
+        sp_tune.set(cache_hit=False, candidates=len(cands))
+        obs.counter("tune.candidates_timed").inc(len(cands))
+        obs.absorb_stats("tune.cache", cache.stats)
     return {"kernel": kernel, "shape": shape, "cache_hit": False,
             "default_us": round(default_us, 1),
             "best_us": round(best_us, 1),

@@ -369,14 +369,17 @@ def resolve(kernel: str, schedule: Any = None, *, bm: Optional[int] = None,
 
     source = "default"
     if schedule == "auto":
+        from repro import obs
         from repro.tune.cache import default_cache
-        cached = default_cache().get(
+        cache = default_cache()
+        cached = cache.get(
             kernel, dtype=compute_dtype or "float32",
             **{k: v for k, v in shape.items() if k in sp.bucket_dims})
         if cached is None:
             s, source = fallback, "auto-default"
         else:
             s, source = cached, "cache"
+        obs.absorb_stats("tune.cache", cache.stats)
     else:
         s = as_schedule(schedule)
         if s is None:

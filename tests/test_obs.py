@@ -1,0 +1,325 @@
+"""The observability layer: spans, metrics, and the wiring through the
+estimator / engine / serving paths.
+
+Contracts under test (ISSUE 7):
+  * spans nest through a thread-local stack (each thread its own), record
+    monotonic durations, and tolerate leaked inner spans;
+  * histogram percentiles match the numpy nearest-rank oracle exactly
+    while every observation is retained (incl. n=1 and n=2 edges);
+  * the Chrome-trace export is schema-valid (ph/ts/dur/pid/tid in us,
+    metadata events, child spans contained in their parents);
+  * metrics snapshots round-trip through to_json, and absorb_stats is
+    idempotent (re-absorbing a live dict updates, never double-counts);
+  * every fit path (dense / fused-rbf / ooc-topt) publishes
+    info_["obs"] with the three phase keys and coverage >= 0.95;
+  * refitting the same estimator does NOT accumulate fused-rbf pass
+    counters, and a REUSED operator resets to its post-build baseline;
+  * summarize() reports correct nearest-rank p50/p95/p99 on small n.
+"""
+from __future__ import annotations
+
+import json
+import threading
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro import obs
+from repro.cluster import SpectralClustering
+from repro.data import synthetic
+from repro.obs.metrics import Histogram, MetricsRegistry, nearest_rank
+from repro.obs.trace import Tracer
+
+
+@pytest.fixture(autouse=True)
+def _fresh_obs():
+    """Each test sees empty process-wide tracer/registry state."""
+    obs.reset()
+    yield
+    obs.reset()
+
+
+# -- spans --------------------------------------------------------------------
+
+def test_span_nesting_and_depth():
+    tr = Tracer()
+    with tr.span("outer") as so:
+        with tr.span("inner") as si:
+            assert tr.current() is si
+            assert si.depth == 1
+        assert tr.current() is so
+    assert tr.current() is None
+    inner, outer = tr.spans()[0], tr.spans()[1]
+    assert (inner.name, outer.name) == ("inner", "outer")
+    # containment: the child's window lies inside the parent's
+    assert outer.t0 <= inner.t0 and inner.t1 <= outer.t1
+    assert outer.duration_s >= inner.duration_s >= 0.0
+
+
+def test_span_decorator_and_attrs():
+    tr = Tracer()
+
+    @tr.traced("work.unit", kind="test")
+    def work(a, b):
+        return a + b
+
+    assert work(2, 3) == 5
+    (sp,) = tr.spans()
+    assert sp.name == "work.unit" and sp.attrs["kind"] == "test"
+
+
+def test_span_error_attr_and_leak_tolerance():
+    tr = Tracer()
+    with pytest.raises(ValueError):
+        with tr.span("boom"):
+            raise ValueError("x")
+    assert tr.spans()[0].attrs["error"] == "ValueError"
+    # a leaked (never-exited) inner span must not corrupt the outer pop
+    ctx_o = tr.span("outer")
+    sp_o = ctx_o.__enter__()
+    tr.span("leaked").__enter__()
+    ctx_o.__exit__(None, None, None)
+    assert tr.current() is None
+    assert sp_o.t1 is not None
+
+
+def test_span_thread_safety():
+    tr = Tracer(jax_annotations=False)
+    errs = []
+
+    def worker(i):
+        try:
+            for j in range(25):
+                with tr.span(f"t{i}") as sp:
+                    with tr.span(f"t{i}.child"):
+                        assert tr.current().name == f"t{i}.child"
+                    assert tr.current() is sp
+        except Exception as e:  # pragma: no cover
+            errs.append(e)
+
+    threads = [threading.Thread(target=worker, args=(i,)) for i in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errs
+    assert len(tr.spans()) == 8 * 25 * 2
+
+
+def test_disabled_tracer_records_nothing():
+    tr = Tracer(enabled=False)
+    with tr.span("x") as sp:
+        sp.set(a=1)        # the null span accepts the same surface
+    assert tr.spans() == []
+
+
+# -- histogram / percentile ---------------------------------------------------
+
+def test_nearest_rank_small_n_edges():
+    assert nearest_rank([5.0], 50) == 5.0
+    assert nearest_rank([5.0], 99) == 5.0
+    # p50 of two samples is the FIRST (rank ceil(0.5*2)=1) — the old
+    # len//2 indexing returned the second
+    assert nearest_rank([1.0, 2.0], 50) == 1.0
+    assert nearest_rank([1.0, 2.0], 99) == 2.0
+    assert nearest_rank([], 50) == 0.0
+
+
+@pytest.mark.parametrize("n", [1, 2, 3, 10, 137])
+def test_histogram_matches_numpy_oracle(n):
+    rng = np.random.RandomState(n)
+    vals = rng.gamma(2.0, 10.0, size=n)
+    h = Histogram("lat")
+    for v in vals:
+        h.observe(v)
+    s = np.sort(vals)
+    for q in (50, 90, 95, 99, 100):
+        oracle = s[min(max(1, int(np.ceil(q / 100 * n))), n) - 1]
+        assert h.percentile(q) == pytest.approx(float(oracle))
+    snap = h.snapshot()
+    assert snap["count"] == n
+    assert snap["min"] == pytest.approx(float(s[0]))
+    assert snap["max"] == pytest.approx(float(s[-1]))
+
+
+def test_histogram_beyond_cap_uses_bucket_edges():
+    h = Histogram("lat", buckets=(1.0, 10.0, 100.0), sample_cap=4)
+    for v in (0.5, 0.5, 5.0, 5.0, 50.0, 50.0):   # 6 obs > cap of 4
+        h.observe(v)
+    assert h.count == 6
+    # estimate is the containing bucket's upper edge: monotone, bounded
+    assert h.percentile(50) == 10.0
+    assert h.percentile(99) == 100.0
+
+
+# -- chrome-trace export ------------------------------------------------------
+
+def test_chrome_trace_schema(tmp_path):
+    tr = Tracer(jax_annotations=False)
+    with tr.span("fit", n=64):
+        with tr.span("fit.affinity"):
+            pass
+    path = str(tmp_path / "sub" / "trace.json")
+    tr.export(path)
+    doc = json.load(open(path))
+    assert doc["displayTimeUnit"] == "ms"
+    evs = doc["traceEvents"]
+    meta = [e for e in evs if e["ph"] == "M"]
+    assert {"process_name", "thread_name"} <= {e["name"] for e in meta}
+    xs = {e["name"]: e for e in evs if e["ph"] == "X"}
+    assert set(xs) == {"fit", "fit.affinity"}
+    parent, child = xs["fit"], xs["fit.affinity"]
+    for e in (parent, child):
+        assert e["ts"] >= 0 and e["dur"] >= 0
+        assert e["pid"] == meta[0]["pid"] and e["tid"] == 0
+    # nesting is containment on the tid, in microseconds
+    assert parent["ts"] <= child["ts"]
+    assert child["ts"] + child["dur"] <= parent["ts"] + parent["dur"] + 1e-3
+    assert parent["args"]["n"] == 64
+    assert parent["cat"] == "fit"
+
+
+# -- metrics registry ---------------------------------------------------------
+
+def test_metrics_snapshot_round_trip(tmp_path):
+    reg = MetricsRegistry()
+    reg.counter("a.events").inc(3)
+    reg.gauge("a.fill").set(0.5)
+    reg.histogram("a.lat_ms").observe(2.0)
+    reg.counter("a.events", model="x").inc()          # labeled child
+    path = str(tmp_path / "metrics.json")
+    text = reg.to_json(path)
+    assert json.loads(text) == reg.snapshot()
+    assert json.load(open(path)) == reg.snapshot()
+    snap = reg.snapshot()
+    assert snap["a.events"] == {"type": "counter", "value": 3}
+    assert snap["a.events{model=x}"]["value"] == 1
+    assert snap["a.lat_ms"]["p50"] == 2.0
+    # prefix filtering
+    assert set(reg.snapshot("a.events")) == {"a.events", "a.events{model=x}"}
+
+
+def test_registry_kind_mismatch_raises():
+    reg = MetricsRegistry()
+    reg.counter("x")
+    with pytest.raises(TypeError):
+        reg.gauge("x")
+
+
+def test_absorb_stats_idempotent_and_typed():
+    reg = MetricsRegistry()
+    stats = {"spills": np.int64(4), "fill": 0.25, "name": "skip",
+             "flag": True}
+    reg.absorb_stats("store", stats)
+    reg.absorb_stats("store", stats)        # re-absorb: update, not double
+    snap = reg.snapshot()
+    assert snap["store.spills"] == {"type": "counter", "value": 4}
+    assert snap["store.fill"] == {"type": "gauge", "value": 0.25}
+    assert "store.name" not in snap and "store.flag" not in snap
+    stats["spills"] = 9                     # live dict moved on
+    reg.absorb_stats("store", stats)
+    assert reg.get("store.spills").value == 9
+
+
+def test_absorb_disabled_is_noop():
+    reg = MetricsRegistry(enabled=False)
+    reg.absorb_stats("x", {"a": 1})
+    assert reg.snapshot() == {}
+
+
+# -- estimator wiring ---------------------------------------------------------
+
+PTS, _ = synthetic.blobs(96, 3, dim=4, spread=0.08, seed=4)
+
+
+@pytest.mark.parametrize("affinity", ["dense", "fused-rbf", "ooc-topt"])
+def test_fit_publishes_obs_phases(affinity):
+    est = SpectralClustering(k=3, affinity=affinity, sigma=1.0,
+                             chunk_size=48).fit(jnp.asarray(PTS))
+    o = est.info_["obs"]
+    assert set(o["phases"]) == {"affinity", "eigensolve", "assign"}
+    assert o["coverage"] >= 0.95
+    assert o["wall_s"] > 0
+    for ph in o["phases"].values():
+        assert 0.0 <= ph["frac"] <= 1.0
+    # the trace recorded properly nested fit spans...
+    names = {s.name for s in obs.spans("fit")}
+    assert {"fit", "fit.affinity", "fit.eigensolve", "fit.assign"} <= names
+    # ...and the numeric fit stats were mirrored into the registry
+    assert obs.metrics.get("fit.matrix_passes").value > 0
+
+
+def test_refit_does_not_accumulate_fused_counters():
+    est = SpectralClustering(k=3, affinity="fused-rbf", sigma=1.0)
+    est.fit(jnp.asarray(PTS))
+    first = dict(est.info_["obs"]["counters"])
+    est.fit(jnp.asarray(PTS))
+    second = dict(est.info_["obs"]["counters"])
+    assert second["matrix_passes"] == first["matrix_passes"]
+    assert second["bytes_streamed"] == first["bytes_streamed"]
+
+
+def test_reused_operator_resets_to_post_build_baseline():
+    from repro.cluster.affinity import build_fused_rbf_operator
+    from repro.distrib import mesh_utils
+
+    op = build_fused_rbf_operator(jnp.asarray(PTS, jnp.float32), 1.0,
+                                  mesh_utils.local_mesh("rows"))
+    base = op.stats_snapshot()["matrix_passes"]
+    import jax
+    jax.block_until_ready(op.matmat(jnp.ones((op.n_pad, 2), jnp.float32)))
+    assert op.stats_snapshot()["matrix_passes"] == base + 1
+    op.reset_stats()
+    assert op.stats_snapshot()["matrix_passes"] == base
+
+
+# -- serving summarize --------------------------------------------------------
+
+def test_summarize_percentiles_small_n():
+    from repro.launch.cluster_serve import PredictRequest, summarize
+
+    reqs = []
+    for i, lat in enumerate([0.010, 0.020, 0.030]):
+        r = PredictRequest(rid=i, points=np.zeros((2, 2), np.float32),
+                           labels=np.zeros(2, np.int32), _filled=2)
+        r.t_submit, r.t_done = 0.0, lat
+        reqs.append(r)
+    s = summarize(reqs, wall_s=0.5)
+    # nearest-rank over [10, 20, 30] ms: p50 -> 20, p95/p99 -> 30
+    assert s["latency_p50_ms"] == pytest.approx(20.0)
+    assert s["latency_p95_ms"] == pytest.approx(30.0)
+    assert s["latency_p99_ms"] == pytest.approx(30.0)
+    assert s["latency_max_ms"] == pytest.approx(30.0)
+    assert s["points"] == 6
+
+
+def test_server_step_feeds_shared_histograms():
+    from repro.launch.cluster_serve import ClusterServer, PredictRequest
+
+    est = SpectralClustering(k=3, affinity="dense", sigma=1.0,
+                             transform_path="dense").fit(jnp.asarray(PTS))
+    srv = ClusterServer(est, batch_rows=32)
+    queue = [PredictRequest(rid=i, points=np.asarray(PTS[:20], np.float32))
+             for i in range(3)]
+    srv.run(queue)
+    assert srv.request_ms.count == 3
+    assert srv.batch_ms.count == srv.stats["batches"] > 0
+    snap = obs.metrics.snapshot("serve")
+    assert snap["serve.request_ms"]["p99"] >= snap["serve.request_ms"]["p50"]
+    assert 0.0 < snap["serve.fill"]["value"] <= 1.0
+    assert {s.name for s in obs.spans("serve")} == {"serve.step"}
+
+
+# -- toggling -----------------------------------------------------------------
+
+def test_set_enabled_false_silences_everything():
+    obs.set_enabled(False)
+    try:
+        with obs.span("quiet"):
+            obs.absorb_stats("q", {"a": 1})
+        assert obs.spans() == []
+        assert obs.metrics.snapshot("q") == {}
+    finally:
+        obs.set_enabled(True)
