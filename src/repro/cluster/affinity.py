@@ -344,7 +344,9 @@ def ooc_topt_affinity(est, x, sigma, mesh) -> NormalizedOperator:
     plan = engine.JobPlan(
         n=n, chunk_size=est.chunk_size or 1024, t=int(min(t, n)), k=est.k,
         sigma=float(sigma), memory_budget=est.memory_budget,
-        spill_dir=est.spill_dir, seed=est.seed)
+        spill_dir=est.spill_dir, seed=est.seed,
+        workers=getattr(est, "workers", 1),
+        prefetch_depth=getattr(est, "prefetch_depth", 2))
     reader = ArrayChunks(np.asarray(x), plan.chunk_size)
     graph, _sigma = engine.build_graph(reader, plan)
     # same padding invariant as the dense backends: downstream shard_map

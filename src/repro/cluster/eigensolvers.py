@@ -43,7 +43,8 @@ _SHIFT = 2.0  # A = shift*I - L_sym; see core.laplacian docstring
 @EIGENSOLVERS.register("lanczos")
 def lanczos_solver(est, op, key):
     steps = est.num_lanczos_steps(op.n)
-    state = lz.lanczos(op.matvec, op.n_pad, steps, key, dtype=est.dtype)
+    state = lz.lanczos(op.matvec, op.n_pad, steps, key, dtype=est.dtype,
+                       host_matmat=getattr(op, "host_matmat", None))
     evals, Z = lz.topk_of_shifted(state, est.k, shift=_SHIFT)
     return evals, Z, {"lanczos_steps": steps, "matrix_passes": steps}
 
@@ -53,7 +54,8 @@ def block_lanczos_solver(est, op, key):
     b = est.num_block_size(op.n)       # same n as the step count below,
     steps = est.num_block_steps(op.n)  # so width and steps stay consistent
     state = lz.block_lanczos(op.matmat, op.n_pad, steps, key,
-                             block_size=b, dtype=est.dtype)
+                             block_size=b, dtype=est.dtype,
+                             host_matmat=getattr(op, "host_matmat", None))
     evals, Z = lz.block_topk_of_shifted(state, est.k, shift=_SHIFT)
     return evals, Z, {"block_size": b, "block_steps": steps,
                       "matrix_passes": steps}

@@ -96,6 +96,13 @@ class SpectralClustering:
     memory_budget:  engine shard-store RAM budget in bytes
                     (None = unlimited, nothing spills to disk).
     spill_dir:      where the engine spills shards (None = temp dir).
+    workers:        engine task-pool width for the "ooc-topt" graph build
+                    (map/shuffle/reduce run dependency-driven on this
+                    many threads; 1 = sequential order, results are
+                    bitwise-identical at any width).
+    prefetch_depth: shard readahead window of the engine's streaming
+                    matmat (how many upcoming CSR shards are fetched
+                    concurrently while the current one multiplies).
     mesh:           device mesh; None = all local devices.
 
     Fitted attributes (original point order): ``labels_``, ``embedding_``,
@@ -111,7 +118,8 @@ class SpectralClustering:
                  transform_path: str = "auto",
                  minibatch_size: int = 256, chunk_size: int | None = None,
                  memory_budget: int | None = None,
-                 spill_dir: str | None = None, seed: int = 0,
+                 spill_dir: str | None = None,
+                 workers: int = 1, prefetch_depth: int = 2, seed: int = 0,
                  dtype: Any = jnp.float32, mesh: Optional[Mesh] = None):
         # Resolve backends eagerly so a typo fails at construction, not
         # after an expensive similarity phase.
@@ -144,6 +152,13 @@ class SpectralClustering:
         self.chunk_size = chunk_size
         self.memory_budget = memory_budget
         self.spill_dir = spill_dir
+        if workers < 1:
+            raise ValueError(f"workers must be >= 1, got {workers}")
+        if prefetch_depth < 1:
+            raise ValueError(
+                f"prefetch_depth must be >= 1, got {prefetch_depth}")
+        self.workers = workers
+        self.prefetch_depth = prefetch_depth
         self.seed = seed
         self.dtype = dtype
         self.mesh = mesh
@@ -262,6 +277,10 @@ class SpectralClustering:
         op_stats = op.stats_snapshot()
         if op_stats:
             self.info_["engine"] = op_stats
+        # release backend worker resources (the engine's shard-prefetch
+        # pool) — a fit must not strand background threads
+        if getattr(op, "close", None) is not None:
+            op.close()
         # surface the kernel schedule that actually ran: the fused
         # operator reports its resolved schedule (incl. "auto" cache
         # hits); other affinities record the estimator-level request
@@ -423,6 +442,8 @@ class SpectralClustering:
                 "minibatch_size": self.minibatch_size,
                 "chunk_size": self.chunk_size,
                 "memory_budget": self.memory_budget,
+                "workers": self.workers,
+                "prefetch_depth": self.prefetch_depth,
                 "seed": self.seed, "dtype": jnp.dtype(self.dtype).name,
             },
             "fitted": {"n": int(self._train_x.shape[0]),

@@ -65,6 +65,19 @@ class NormalizedOperator:
                calls :meth:`reset_stats` before each eigensolve so a
                REUSED operator reports per-fit numbers instead of
                accumulating across fits (fresh operators: no-op).
+    close:     optional zero-arg callable releasing backend worker
+               resources (the engine's shard-prefetch pool).  The
+               estimator calls it (when set) as a fit finishes so no
+               background threads outlive it; backends must treat it as
+               non-final (a reused operator's next matmat restarts
+               whatever close released).
+    host_matmat: optional plain-host (numpy (n_pad, b) -> (n_pad, b))
+               view of the SAME product, set by streaming backends whose
+               matmat wraps host code in ``pure_callback``.  Eigensolvers
+               that see it drive the recurrence step-by-step from Python
+               (``core.lanczos.block_run_host``) instead of tracing the
+               callback into one computation — the callback machinery can
+               self-deadlock on single-thread CPU runtimes.
     """
 
     valid: jax.Array
@@ -78,6 +91,8 @@ class NormalizedOperator:
     dense: Optional[Callable[[], jax.Array]] = None
     stats: Any = field(default_factory=dict)
     reset: Optional[Callable[[], None]] = None
+    close: Optional[Callable[[], None]] = None
+    host_matmat: Optional[Callable] = None
 
     def __post_init__(self):
         if self.matmat is None and self.matvec is None:

@@ -33,6 +33,7 @@ from typing import Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 
 
@@ -95,8 +96,20 @@ def init_block_state(n: int, num_steps: int, key: jax.Array, block_size: int,
     )
 
 
-def _block_step_body(matmat: Callable,
-                     state: BlockLanczosState) -> BlockLanczosState:
+def _current_block(state: BlockLanczosState) -> jax.Array:
+    """The (b, n) basis block the next step multiplies the operator by."""
+    b = state.block_size
+    _, n = state.V.shape
+    return lax.dynamic_slice(state.V, (state.step * b, 0), (b, n))
+
+
+def _block_step_update(state: BlockLanczosState,
+                       W: jax.Array) -> BlockLanczosState:
+    """Everything in a block step AFTER the matrix pass: given
+    ``W = A @ Vj.T`` for the current block, orthogonalize and append the
+    next block.  Split out from :func:`_block_step_body` so host-streaming
+    operators can run the matmat as plain Python between two jitted halves
+    (:func:`block_run_host`) instead of through ``pure_callback``."""
     j = state.step
     b = state.block_size
     rows, n = state.V.shape
@@ -105,8 +118,7 @@ def _block_step_body(matmat: Callable,
     Vp = jnp.where(j > 0, 1.0, 0.0).astype(Vp.dtype) * Vp
     Bj = lax.dynamic_slice(state.B, (j, 0, 0), (1, b, b))[0]     # (b, b)
 
-    W = matmat(Vj.T)                                             # (n, b)
-    W = W - Vp.T @ Bj.T
+    W = W.astype(state.V.dtype) - Vp.T @ Bj.T
     Aj = Vj @ W                                                  # (b, b)
     Aj = 0.5 * (Aj + Aj.T)          # symmetric operator -> symmetric block
     W = W - Vj.T @ Aj
@@ -128,20 +140,76 @@ def _block_step_body(matmat: Callable,
     )
 
 
+def _block_step_body(matmat: Callable,
+                     state: BlockLanczosState) -> BlockLanczosState:
+    W = matmat(_current_block(state).T)                          # (n, b)
+    return _block_step_update(state, W)
+
+
 def block_run(matmat: Callable, state: BlockLanczosState,
               num_iters: int) -> BlockLanczosState:
     """Advance the block recurrence ``num_iters`` block steps — each step
-    is ONE matrix pass (one matmat of width b).  Checkpoint-friendly."""
+    is ONE matrix pass (one matmat of width b).  Checkpoint-friendly.
+
+    The returned state is synchronized (``block_until_ready``): ``matmat``
+    may embed a host callback, and returning while that computation is
+    still in flight lets the caller's op-by-op dispatch race the callback
+    on the CPU runtime's single work queue — a deadlock, not just a
+    slowdown.  The caller consumes the state immediately, so the barrier
+    costs nothing.  (Host-streaming operators should prefer
+    :func:`block_run_host`, which keeps the matrix pass out of the traced
+    computation entirely.)"""
     def body(_, s):
         return _block_step_body(matmat, s)
-    return lax.fori_loop(0, num_iters, body, state)
+    return jax.block_until_ready(lax.fori_loop(0, num_iters, body, state))
+
+
+def _block_step_advance(state: BlockLanczosState, W: jax.Array
+                        ) -> tuple[BlockLanczosState, jax.Array]:
+    """One host-driver dispatch: apply the post-matmat half of a step AND
+    slice out the next block to multiply — fusing what would otherwise be
+    two jitted calls per iteration (the slice is trivial next to the CGS2
+    reorthogonalization it piggybacks on)."""
+    new = _block_step_update(state, W)
+    return new, _current_block(new)
+
+
+_current_block_jit = jax.jit(_current_block)
+_block_step_update_jit = jax.jit(_block_step_update)
+_block_step_advance_jit = jax.jit(_block_step_advance)
+
+
+def block_run_host(host_matmat: Callable, state: BlockLanczosState,
+                   num_iters: int) -> BlockLanczosState:
+    """:func:`block_run` for HOST-STREAMING operators: ``host_matmat`` is
+    plain host code (numpy (n, b) -> (n, b)) invoked between jitted step
+    updates, NOT traced into the computation.
+
+    Rationale: embedding the host matmat via ``jax.pure_callback`` puts
+    the Python callback on the CPU runtime's worker pool; on small hosts
+    that pool has ONE thread, and the callback machinery's own
+    ``device_put`` of the operands can queue a deferred copy behind the
+    very computation that is blocked waiting for the callback — a
+    self-deadlock (observed repeatedly under the async engine).  Driving
+    the step from Python keeps the runtime free while the host pass runs,
+    and the numerics are unchanged: the step halves execute the exact
+    same primitives the fused step body traces around the callback."""
+    Vj = np.asarray(_current_block_jit(state))                   # (b, n)
+    for _ in range(num_iters):
+        W = host_matmat(np.ascontiguousarray(Vj.T))              # (n, b)
+        state, nxt = _block_step_advance_jit(state, jnp.asarray(W))
+        Vj = np.asarray(nxt)
+    return jax.block_until_ready(state)
 
 
 def block_lanczos(matmat: Callable, n: int, num_steps: int, key: jax.Array,
                   block_size: int = 8, dtype=jnp.float32,
-                  V0: jax.Array | None = None) -> BlockLanczosState:
+                  V0: jax.Array | None = None,
+                  host_matmat: Callable | None = None) -> BlockLanczosState:
     state = init_block_state(n, num_steps, key, block_size, V0=V0,
                              dtype=dtype)
+    if host_matmat is not None:
+        return block_run_host(host_matmat, state, num_steps)
     return block_run(matmat, state, num_steps)
 
 
@@ -233,19 +301,27 @@ def init_state(n: int, num_steps: int, key: jax.Array,
 
 def run(matvec: Callable, state: LanczosState, num_iters: int) -> LanczosState:
     """Advance the recurrence ``num_iters`` steps (checkpoint-friendly) —
-    the width-1 view of :func:`block_run`."""
+    the width-1 view of :func:`block_run`, synchronized for the same
+    host-callback reason."""
     def matmat(V):
         return matvec(V[:, 0])[:, None]
 
     def body(_, s):
         return _block_step_body(matmat, s)
 
-    return _from_block(lax.fori_loop(0, num_iters, body, _as_block(state)))
+    out = lax.fori_loop(0, num_iters, body, _as_block(state))
+    return _from_block(jax.block_until_ready(out))
 
 
 def lanczos(matvec: Callable, n: int, num_steps: int, key: jax.Array,
-            dtype=jnp.float32, v0: jax.Array | None = None) -> LanczosState:
+            dtype=jnp.float32, v0: jax.Array | None = None,
+            host_matmat: Callable | None = None) -> LanczosState:
     state = init_state(n, num_steps, key, v0=v0, dtype=dtype)
+    if host_matmat is not None:
+        # width-1 host-streaming drive (same deadlock avoidance as
+        # block_run_host; the host pass sees an (n, 1) block)
+        out = block_run_host(host_matmat, _as_block(state), num_steps)
+        return _from_block(out)
     return run(matvec, state, num_steps)
 
 

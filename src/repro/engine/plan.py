@@ -48,6 +48,19 @@ class JobPlan:
                     spill-reload traffic of the single-vector iteration.
     kmeans_rounds:  streaming mini-batch rounds (one chunk per round).
     seed:           base seed for Lanczos start block and k-means init.
+    workers:        task-pool width for the map/shuffle/reduce build: the
+                    dependency-driven scheduler keeps up to ``workers``
+                    tasks in flight (1 = the classic sequential order —
+                    results are bitwise-identical at any width; the tasks
+                    are order-independent, see ``runner.build_graph``).
+    prefetch_depth: shard readahead window of the streaming matmat: up to
+                    this many upcoming CSR shards are fetched from the
+                    (possibly spilled) store concurrently while the
+                    current shard multiplies.
+    async_spill:    evictions hand their npz write to the store's
+                    background writer instead of blocking the task that
+                    triggered them (False = the PR-7 synchronous write,
+                    kept for A/B benchmarking).
     path:           phase-1 execution path: "ooc" (CSR shards through the
                     spilling store — the classic engine pipeline),
                     "fused" (matrix-free fused-RBF operator over
@@ -70,6 +83,9 @@ class JobPlan:
     seed: int = 0
     path: str = "ooc"
     compute_dtype: Optional[str] = None
+    workers: int = 1
+    prefetch_depth: int = 2
+    async_spill: bool = True
 
     def __post_init__(self):
         if self.path not in ("ooc", "fused", "auto"):
@@ -89,6 +105,12 @@ class JobPlan:
         if self.block_size <= 0:
             raise ValueError(
                 f"block_size must be positive, got {self.block_size}")
+        if self.workers < 1:
+            raise ValueError(
+                f"workers must be >= 1, got {self.workers}")
+        if self.prefetch_depth < 1:
+            raise ValueError(
+                f"prefetch_depth must be >= 1, got {self.prefetch_depth}")
 
     @property
     def ranges(self) -> list[tuple[int, int]]:

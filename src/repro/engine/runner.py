@@ -1,18 +1,27 @@
-"""The job runner: executes a :class:`JobPlan` as staged map/shuffle/reduce
+"""The job runner: executes a :class:`JobPlan` as map/shuffle/reduce
 tasks and drives the eigensolve + streaming k-means off the resulting
 shards — ``engine.run_job(plan, reader)`` is the out-of-core analogue of
 ``SpectralClustering.fit``.
 
-The runner is deliberately a dumb sequential scheduler: tasks within a
-stage are independent (Hadoop would fan them out over workers; here they
-share one host and the device executes the Pallas tiles), and all state
-between stages lives in the ShardStore, so the working set is bounded by
-the memory budget regardless of n.
+The build is a **dependency-driven scheduler** over a worker pool of
+``plan.workers`` threads (the Hadoop fan-out, one host): each chunk's
+shuffle is submitted the moment its last input tile lands — no per-stage
+barrier — and the reduces fan out the instant the final shuffle finishes
+(a reduce folds mirror blocks that ANY shuffle may emit, the same
+all-map-outputs dependency Hadoop's reduce fetch has).  All state between
+tasks lives in the thread-safe ShardStore, so the working set is bounded
+by the memory budget regardless of n; tasks never share mutable state
+beyond it, and each task's arithmetic is order-independent, so results
+are bitwise-identical at every pool width (``workers=1`` reproduces the
+classic sequential schedule exactly).
 """
 from __future__ import annotations
 
+import threading
+import time
+from concurrent.futures import FIRST_COMPLETED, ThreadPoolExecutor, wait
 from dataclasses import dataclass, field
-from typing import Dict, Optional
+from typing import Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -41,62 +50,140 @@ class JobResult:
 
 
 def _resolve_sigma(reader, plan: JobPlan, sample_rows: int = 1024) -> float:
-    """Median-distance heuristic on a streamed sample (first rows of the
-    leading chunks; the heuristic only needs a representative handful)."""
+    """Median-distance heuristic on a sample STRIDED across all chunks.
+
+    Sampling only the leading chunks (the pre-PR8 behaviour) skews sigma
+    whenever the chunk order is meaningful — class-sorted data would
+    estimate the bandwidth of one cluster instead of the dataset — so up
+    to 8 evenly-spaced chunks each contribute an equal share of the
+    sample."""
     if plan.sigma is not None:
         return float(plan.sigma)
-    rows, have = [], 0
-    for c in range(plan.nchunks):
-        x = np.asarray(reader[c])
-        rows.append(x)
-        have += len(x)
-        if have >= sample_rows:
-            break
-    xs = np.concatenate(rows)[:sample_rows]
+    nc = plan.nchunks
+    idx = np.unique(np.linspace(0, nc - 1, min(nc, 8)).round().astype(int))
+    per = -(-sample_rows // len(idx))            # equal share per chunk
+    xs = np.concatenate([np.asarray(reader[int(c)])[:per]
+                         for c in idx])[:sample_rows]
     return float(sim.median_sigma(jnp.asarray(xs)))
 
 
-def build_graph(reader, plan: JobPlan,
-                store: Optional[ShardStore] = None
-                ) -> tuple[ShardedCSRGraph, float]:
-    """Run the map + shuffle + reduce stages; returns the sharded graph
-    (with per-stage stats attached) and the resolved sigma."""
-    store = store or ShardStore(memory_budget=plan.memory_budget,
-                                spill_dir=plan.spill_dir)
-    sigma = _resolve_sigma(reader, plan)
+def _schedule_build(reader, sigma, plan: JobPlan, store: ShardStore,
+                    overlap_work: Optional[Callable[[], None]] = None
+                    ) -> tuple[np.ndarray, int, Dict]:
+    """Run every map/shuffle/reduce task on a ``plan.workers``-wide pool,
+    releasing each task the moment its inputs exist:
 
+      map (i, j)   no deps — all submitted up front
+      shuffle c    the map tiles touching chunk c (row i == c or j == c)
+      reduce c     ALL shuffles (any shuffle may mirror triplets into c)
+
+    ``overlap_work`` (if given) runs ONCE on the scheduler thread as soon
+    as the last shuffle finishes — i.e. while the reduce tail is still
+    draining on the workers — so callers can overlap eigensolver seeding
+    with the end of the build.  Returns (deg, nnz, stats)."""
     tiles = plan.tiles
-    with obs.span("engine.map", tasks=len(tiles)) as sp_map:
+    nc = plan.nchunks
+    workers = max(1, int(plan.workers))
+    busy = {"map": 0.0, "shuffle": 0.0, "reduce": 0.0}
+    busy_lock = threading.Lock()
+    deg = np.zeros(plan.n, np.float32)
+    nnz_total = 0
+
+    def timed(stage, fn, *args):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        with busy_lock:
+            busy[stage] += time.perf_counter() - t0
+        return out
+
+    waiting = {c: {tl for tl in tiles if c in tl} for c in range(nc)}
+    shuffles_left = nc
+    overlap_pending = overlap_work is not None
+    t_start = time.perf_counter()
+    with ThreadPoolExecutor(max_workers=workers,
+                            thread_name_prefix="repro-engine-task") as pool:
+        futures: Dict = {}
+
+        def submit(kind, key, fn):
+            futures[pool.submit(fn)] = (kind, key)
+
         for (i, j) in tiles:
-            tasks.run_map_task(reader, sigma, plan, i, j, store)
-
-    with obs.span("engine.shuffle", tasks=plan.nchunks) as sp_shuf:
-        for c in range(plan.nchunks):
-            tasks.run_shuffle_task(plan, c, store)
-
-    with obs.span("engine.reduce", tasks=plan.nchunks) as sp_red:
-        deg = np.zeros(plan.n, np.float32)
-        nnz = 0
-        for c, (r0, r1) in enumerate(plan.ranges):
-            out = tasks.run_reduce_task(plan, c, store)
-            deg[r0:r1] = out["deg"]
-            nnz += out["nnz"]
-
-    # static stage counters only — live store numbers are merged in by
-    # ShardedCSRGraph.stats_snapshot() at read time; stage walls come
-    # from the spans (0.0 when obs is disabled)
+            submit("map", (i, j),
+                   lambda i=i, j=j: timed("map", tasks.run_map_task,
+                                          reader, sigma, plan, i, j, store))
+        while futures:
+            if overlap_pending and shuffles_left == 0:
+                overlap_pending = False          # reduce tail is draining
+                overlap_work()
+            done, _ = wait(list(futures), return_when=FIRST_COMPLETED)
+            for fut in done:
+                kind, key = futures.pop(fut)
+                out = fut.result()               # propagate task errors
+                if kind == "map":
+                    for c in set(key):
+                        deps = waiting[c]
+                        deps.discard(key)
+                        if not deps:             # last tile for chunk c
+                            submit("shuffle", c, lambda c=c: timed(
+                                "shuffle", tasks.run_shuffle_task,
+                                plan, c, store))
+                elif kind == "shuffle":
+                    shuffles_left -= 1
+                    if shuffles_left == 0:       # mirrors all emitted
+                        for c in range(nc):
+                            submit("reduce", c, lambda c=c: timed(
+                                "reduce", tasks.run_reduce_task,
+                                plan, c, store))
+                else:                            # reduce: disjoint slices
+                    r0, r1 = plan.ranges[key]
+                    deg[r0:r1] = out["deg"]
+                    nnz_total += out["nnz"]
+    if overlap_pending:                          # degenerate tiny jobs
+        overlap_work()
+    wall = time.perf_counter() - t_start
+    busy_s = sum(busy.values())
     stats = {
-        "map_tasks": len(tiles), "shuffle_tasks": plan.nchunks,
-        "reduce_tasks": plan.nchunks, "chunks": plan.nchunks,
-        "chunk_size": plan.chunk_size, "t": plan.t_eff,
-        "map_s": round(sp_map.duration_s, 4),
-        "shuffle_s": round(sp_shuf.duration_s, 4),
-        "reduce_s": round(sp_red.duration_s, 4),
+        "map_tasks": len(tiles), "shuffle_tasks": nc, "reduce_tasks": nc,
+        "chunks": nc, "chunk_size": plan.chunk_size, "t": plan.t_eff,
+        "workers": workers, "prefetch_depth": plan.prefetch_depth,
+        # per-stage numbers are BUSY task-seconds (the stages interleave,
+        # so they no longer tile a wall-clock interval); overlap_s is the
+        # task-seconds the pool hid inside the build wall
+        "map_s": round(busy["map"], 4),
+        "shuffle_s": round(busy["shuffle"], 4),
+        "reduce_s": round(busy["reduce"], 4),
+        "build_wall_s": round(wall, 4),
+        "overlap_s": round(max(0.0, busy_s - wall), 4),
     }
+    return deg, nnz_total, stats
+
+
+def build_graph(reader, plan: JobPlan,
+                store: Optional[ShardStore] = None,
+                overlap_work: Optional[Callable[[], None]] = None,
+                prewarm: bool = True) -> tuple[ShardedCSRGraph, float]:
+    """Run the map + shuffle + reduce stages on the dependency-driven
+    scheduler; returns the sharded graph (with per-stage stats attached)
+    and the resolved sigma.  See :func:`_schedule_build` for the task
+    dependency structure and the ``overlap_work`` hook.
+
+    ``prewarm`` starts the first shard-window fetches before returning,
+    so the consumer's first pass starts hot (off for A/B baselines)."""
+    store = store or ShardStore(memory_budget=plan.memory_budget,
+                                spill_dir=plan.spill_dir,
+                                async_spill=plan.async_spill)
+    sigma = _resolve_sigma(reader, plan)
+    with obs.span("engine.build", path="ooc", workers=plan.workers,
+                  tasks=len(plan.tiles) + 2 * plan.nchunks):
+        deg, nnz, stats = _schedule_build(reader, sigma, plan, store,
+                                          overlap_work=overlap_work)
     for key in ("map_tasks", "shuffle_tasks", "reduce_tasks"):
         obs.counter(f"engine.{key}").inc(stats[key])
-    return ShardedCSRGraph(store=store, plan=plan, deg=deg, nnz=nnz,
-                           stats=stats), sigma
+    graph = ShardedCSRGraph(store=store, plan=plan, deg=deg, nnz=nnz,
+                            stats=stats)
+    if prewarm:
+        graph.prewarm()
+    return graph, sigma
 
 
 def _run_fused(plan: JobPlan, reader) -> JobResult:
@@ -147,9 +234,10 @@ def _run_fused(plan: JobPlan, reader) -> JobResult:
 
 
 def run_job(plan: JobPlan, reader) -> JobResult:
-    """Full out-of-core pipeline: staged graph build, shard-streaming
-    block Lanczos, chunked mini-batch k-means.  ``reader[c]`` must yield
-    the (rows, d) point chunk for range ``plan.ranges[c]``.
+    """Full out-of-core pipeline: dependency-scheduled graph build,
+    shard-streaming block Lanczos, chunked mini-batch k-means.
+    ``reader[c]`` must yield the (rows, d) point chunk for range
+    ``plan.ranges[c]``.
 
     Phase 1 honours the planner's routing (:func:`repro.engine.plan.
     route_path`): jobs whose points fit the memory budget but whose dense
@@ -159,24 +247,39 @@ def run_job(plan: JobPlan, reader) -> JobResult:
     On the ooc path the eigensolve is the *block* recurrence: each block
     step pulls every CSR shard from the store exactly once and amortizes
     it over the b-wide block, so the same Krylov dimension costs ~1/b the
-    shard loads (and spill-reloads) of the single-vector iteration."""
+    shard loads (and spill-reloads) of the single-vector iteration.  The
+    eigensolver's start block is drawn WHILE the reduce tail drains
+    (bitwise-identical to drawing it after — same key, same shape), and
+    the graph's prefetch pool is shut down before returning, so a job
+    never strands background threads."""
     if plan.path == "fused":
         return _run_fused(plan, reader)
     if plan.path == "auto":         # probe d only when routing needs it
         d = int(np.asarray(reader[0]).shape[1])
         if route_path(plan, d) == "fused":
             return _run_fused(plan, reader)
-    graph, sigma = build_graph(reader, plan)
-    op = make_normalized_operator(graph)
 
     key = jax.random.PRNGKey(plan.seed)
     _, k_lan, _k_km = jax.random.split(key, 3)
     b = plan.eff_block_size()
     block_steps = plan.num_block_steps()
+    seed_box: Dict = {}
+
+    def _warm_start():
+        # exactly the draw lz.init_block_state would make (same key,
+        # shape, dtype -> bitwise-identical eigensolve), issued while the
+        # reduce tail is still draining on the task pool
+        seed_box["V0"] = jax.block_until_ready(
+            jax.random.normal(k_lan, (b, plan.n), jnp.float32))
+
+    graph, sigma = build_graph(reader, plan, overlap_work=_warm_start)
+    op = make_normalized_operator(graph)
+
     with obs.span("engine.eigensolve", path="ooc",
                   block_steps=block_steps) as sp_eig:
         state = lz.block_lanczos(op.matmat, plan.n, block_steps, k_lan,
-                                 block_size=b)
+                                 block_size=b, V0=seed_box["V0"],
+                                 host_matmat=op.host_matmat)
         evals, Z = lz.block_topk_of_shifted(state, plan.k)
         jax.block_until_ready(Z)
 
@@ -194,6 +297,7 @@ def run_job(plan: JobPlan, reader) -> JobResult:
                  eigensolve_s=round(sp_eig.duration_s, 4),
                  kmeans_s=round(sp_km.duration_s, 4))
     obs.absorb_stats("engine", stats)
+    graph.close()                   # no stray prefetch threads after a job
     return JobResult(labels=labels, embedding=Y,
                      eigenvalues=np.asarray(evals), centers=centers,
                      sigma=sigma, graph=graph, stats=stats)

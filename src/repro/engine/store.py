@@ -5,23 +5,43 @@ blocks, shuffle mirror partials, final CSR shards — lives in one
 :class:`ShardStore`: a key -> {name: ndarray} map with an LRU RAM cache
 bounded by ``memory_budget`` bytes.  When a put/get pushes the resident set
 over budget, least-recently-used entries are written to ``spill_dir`` as
-``.npz`` files and dropped from RAM; a later ``get`` transparently reloads
-them.  With ``memory_budget=None`` nothing ever spills (pure in-RAM mode).
+raw ``.bin`` files (see :func:`save_entry`) and dropped from RAM; a later
+``get`` transparently reloads them.  With ``memory_budget=None`` nothing
+ever spills (pure in-RAM mode).
+
+The store is **thread-safe**: concurrent map/shuffle/reduce tasks and the
+operator's prefetch workers share one store, with all LRU/spill bookkeeping
+behind a lock.  Disk I/O happens *outside* the lock, so prefetch workers
+load spilled shards in parallel, and evictions are **asynchronous** by
+default (``async_spill=True``): ``_spill_one`` hands the file write to a
+single background writer thread and returns immediately — the evicted
+entry sits in a "spilling" state until the write lands, a ``get`` during
+that window joins the in-flight write (returns the still-held arrays
+without touching disk), and ``flush()`` / ``close()`` / ``spilled_keys()``
+are the quiescence points where every queued write has completed and the
+budget/stat accounting is exact.
 
 On-disk format (the shard-store contract, see API.md): one
-``<mangled-key>.npz`` per spilled entry, containing exactly the named
-arrays that were ``put``; keys mangle ``/`` to ``__``.  CSR shards use the
-names ``indptr`` (int64, rows+1), ``indices`` (int64, nnz) and ``data``
-(float32, nnz).
+``<mangled-key>.bin`` per spilled entry — a pickled header listing
+``(name, dtype, shape)`` for every array that was ``put``, followed by the
+raw array buffers back to back; keys mangle ``/`` to ``__``.  The format
+replaced ``.npz`` (PR 8): spill/reload is the engine's per-entry hot path
+and the zipfile layer cost ~20x the underlying memcpy on every reload.
+CSR shards use the names ``indptr`` (int64, rows+1), ``indices`` (int32,
+nnz) and ``data`` (float32, nnz).
 """
 from __future__ import annotations
 
 import os
+import pickle
 import shutil
 import tempfile
+import threading
 import weakref
 from collections import OrderedDict
-from typing import Dict, Iterator, Optional
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import dataclass, field
+from typing import Any, Dict, Iterator, Optional
 
 import numpy as np
 
@@ -30,10 +50,52 @@ def _nbytes(arrays: Dict[str, np.ndarray]) -> int:
     return int(sum(a.nbytes for a in arrays.values()))
 
 
+def save_entry(path: str, arrays: Dict[str, np.ndarray]) -> None:
+    """Write ``arrays`` in the store's raw spill format: an 8-byte header
+    length, a pickled ``[(name, dtype.str, shape), ...]`` header, then the
+    contiguous array buffers concatenated in header order."""
+    hdr = pickle.dumps([(k, a.dtype.str, a.shape) for k, a in arrays.items()],
+                       protocol=4)
+    with open(path, "wb") as f:
+        f.write(len(hdr).to_bytes(8, "little"))
+        f.write(hdr)
+        for a in arrays.values():
+            f.write(memoryview(np.ascontiguousarray(a)).cast("B"))
+
+
+def load_entry(path: str) -> Dict[str, np.ndarray]:
+    """Read a :func:`save_entry` file back into {name: ndarray}.  Arrays
+    are zero-copy (read-only) views over one contiguous buffer — store
+    consumers treat entries as immutable (a ``put`` replaces wholesale)."""
+    with open(path, "rb") as f:
+        buf = f.read()
+    hlen = int.from_bytes(buf[:8], "little")
+    out: Dict[str, np.ndarray] = {}
+    off = 8 + hlen
+    for name, dt, shape in pickle.loads(buf[8:8 + hlen]):
+        a = np.frombuffer(buf, dtype=np.dtype(dt),
+                          count=int(np.prod(shape, dtype=np.int64)),
+                          offset=off).reshape(shape)
+        out[name] = a
+        off += a.nbytes
+    return out
+
+
+@dataclass
+class _Spilling:
+    """An evicted entry whose spill write is still in flight."""
+    arrays: Dict[str, np.ndarray]
+    nbytes: int
+    seq: int                     # spill generation: stale writers no-op
+    future: Any = field(default=None)
+
+
 class ShardStore:
     def __init__(self, memory_budget: Optional[int] = None,
-                 spill_dir: Optional[str] = None):
+                 spill_dir: Optional[str] = None,
+                 async_spill: bool = True):
         self.memory_budget = memory_budget
+        self.async_spill = async_spill
         self._own_dir = spill_dir is None
         self.spill_dir = spill_dir or tempfile.mkdtemp(prefix="repro-shards-")
         os.makedirs(self.spill_dir, exist_ok=True)
@@ -43,81 +105,222 @@ class ShardStore:
             # caller's to manage)
             self._finalizer = weakref.finalize(
                 self, shutil.rmtree, self.spill_dir, ignore_errors=True)
+        self._lock = threading.RLock()
         self._ram: "OrderedDict[str, Dict[str, np.ndarray]]" = OrderedDict()
-        self._disk: Dict[str, str] = {}          # key -> npz path
+        self._disk: Dict[str, str] = {}          # key -> spill file path
+        self._spilling: Dict[str, _Spilling] = {}
+        self._spilling_bytes = 0
+        self._seq = 0
+        self._writer_pool: Optional[ThreadPoolExecutor] = None
+        self._writer_finalizer = None
         self.ram_bytes = 0
         self.stats = {
             "puts": 0, "gets": 0, "spills": 0, "drops": 0, "loads": 0,
-            "bytes_spilled": 0, "peak_ram_bytes": 0,
+            "spill_joins": 0, "bytes_spilled": 0, "peak_ram_bytes": 0,
         }
+
+    # -- background writer ---------------------------------------------------
+
+    def _writer(self) -> ThreadPoolExecutor:
+        # single worker: all spill writes serialize in submission order, so
+        # two spills of the same key can never race on one path
+        if self._writer_pool is None:
+            pool = ThreadPoolExecutor(max_workers=1,
+                                      thread_name_prefix="repro-store-spill")
+            self._writer_pool = pool
+            self._writer_finalizer = weakref.finalize(
+                self, ThreadPoolExecutor.shutdown, pool, wait=True)
+        return self._writer_pool
+
+    def _write_entry(self, key: str, arrays: Dict[str, np.ndarray],
+                     path: str, seq: int) -> None:
+        """Writer-thread body: the file write runs outside the lock; the
+        commit (or stale-write cleanup) takes it briefly."""
+        save_entry(path, arrays)
+        with self._lock:
+            ent = self._spilling.get(key)
+            if ent is not None and ent.seq == seq:
+                del self._spilling[key]
+                self._spilling_bytes -= ent.nbytes
+                self._disk[key] = path
+            elif ent is not None:
+                # a newer spill of the same key is queued BEHIND us (single
+                # writer, FIFO): it will rewrite the path — leave it alone
+                pass
+            elif key not in self._disk:
+                # deleted (or re-put) while we were writing: the file we
+                # just produced is an orphan
+                try:
+                    os.remove(path)
+                except OSError:
+                    pass
+
+    def flush(self) -> None:
+        """Block until every in-flight spill write has landed (write
+        errors propagate).  After ``flush`` returns — and no other thread
+        is mutating the store — ``ram_bytes`` / ``spilled_keys()`` /
+        ``stats`` describe a fully settled store."""
+        while True:
+            with self._lock:
+                futs = [e.future for e in self._spilling.values()
+                        if e.future is not None]
+            if not futs:
+                return
+            for f in futs:
+                f.result()
+
+    def join_writer(self) -> None:
+        """Flush and shut the background writer down WITHOUT dropping any
+        data (unlike :meth:`close`).  Non-final: the next async spill
+        lazily restarts the writer — callers use this to guarantee no
+        ``repro-store-spill`` thread outlives a finished job."""
+        self.flush()
+        with self._lock:
+            pool, self._writer_pool = self._writer_pool, None
+            fin, self._writer_finalizer = self._writer_finalizer, None
+        if pool is not None:
+            pool.shutdown(wait=True)
+        if fin is not None:
+            fin.detach()
+
+    def _throttle_spills(self) -> None:
+        """Backpressure: never let the writer queue hold more than one
+        budget's worth of evicted-but-unwritten bytes (a burst of puts
+        could otherwise queue unbounded RAM behind the single writer)."""
+        if self.memory_budget is None:
+            return
+        while True:
+            with self._lock:
+                if self._spilling_bytes <= self.memory_budget:
+                    return
+                fut = next(iter(self._spilling.values())).future
+            try:
+                fut.result()
+            except Exception:
+                pass
 
     # -- core ops -----------------------------------------------------------
 
-    def put(self, key: str, arrays: Dict[str, np.ndarray]) -> None:
-        arrays = {name: np.asarray(a) for name, a in arrays.items()}
-        self.delete(key)
-        self._ram[key] = arrays
-        self.ram_bytes += _nbytes(arrays)
-        self.stats["puts"] += 1
-        self.stats["peak_ram_bytes"] = max(self.stats["peak_ram_bytes"],
-                                           self.ram_bytes)
-        self._enforce_budget()
-
-    def get(self, key: str) -> Dict[str, np.ndarray]:
-        self.stats["gets"] += 1
-        if key in self._ram:
-            self._ram.move_to_end(key)           # LRU touch
-            return self._ram[key]
-        path = self._disk.get(key)
-        if path is None:
-            raise KeyError(f"shard store has no entry {key!r}")
-        with np.load(path) as z:
-            arrays = {name: z[name] for name in z.files}
-        self.stats["loads"] += 1
-        self._ram[key] = arrays
-        self.ram_bytes += _nbytes(arrays)
-        self.stats["peak_ram_bytes"] = max(self.stats["peak_ram_bytes"],
-                                           self.ram_bytes)
-        self._enforce_budget(keep=key)
-        return arrays
-
-    def delete(self, key: str) -> None:
+    def _forget_locked(self, key: str) -> Optional[str]:
+        """Drop every trace of ``key`` (RAM, spilling state, disk record);
+        returns the spill path to unlink, if any.  Caller holds the lock."""
         arrays = self._ram.pop(key, None)
         if arrays is not None:
             self.ram_bytes -= _nbytes(arrays)
-        path = self._disk.pop(key, None)
-        if path is not None and os.path.exists(path):
-            os.remove(path)
+        ent = self._spilling.pop(key, None)
+        if ent is not None:
+            # the in-flight writer will see its seq gone and remove the
+            # file it produces (or a re-put's newer write supersedes it)
+            self._spilling_bytes -= ent.nbytes
+        return self._disk.pop(key, None)
+
+    def put(self, key: str, arrays: Dict[str, np.ndarray]) -> None:
+        arrays = {name: np.asarray(a) for name, a in arrays.items()}
+        with self._lock:
+            stale = self._forget_locked(key)
+            if stale is not None and os.path.exists(stale):
+                os.remove(stale)
+            self._ram[key] = arrays
+            self.ram_bytes += _nbytes(arrays)
+            self.stats["puts"] += 1
+            self.stats["peak_ram_bytes"] = max(self.stats["peak_ram_bytes"],
+                                               self.ram_bytes)
+            self._enforce_budget()
+        self._throttle_spills()
+
+    def get(self, key: str) -> Dict[str, np.ndarray]:
+        with self._lock:
+            self.stats["gets"] += 1
+            if key in self._ram:
+                self._ram.move_to_end(key)       # LRU touch
+                return self._ram[key]
+            ent = self._spilling.get(key)
+            if ent is not None:
+                # join the in-flight write: promote the still-held arrays
+                # straight back to RAM — no disk round-trip.  The write
+                # continues and lands in _disk, so a later eviction of
+                # this entry is a plain drop.
+                self._ram[key] = ent.arrays
+                self.ram_bytes += ent.nbytes
+                self.stats["spill_joins"] += 1
+                self.stats["peak_ram_bytes"] = max(
+                    self.stats["peak_ram_bytes"], self.ram_bytes)
+                self._enforce_budget(keep=key)
+                return ent.arrays
+            path = self._disk.get(key)
+            if path is None:
+                raise KeyError(f"shard store has no entry {key!r}")
+        # disk I/O outside the lock: concurrent prefetch workers load
+        # different spilled shards in parallel
+        try:
+            arrays = load_entry(path)
+        except FileNotFoundError:
+            raise KeyError(f"shard store has no entry {key!r} "
+                           f"(deleted concurrently)") from None
+        with self._lock:
+            self.stats["loads"] += 1
+            if key in self._ram:                 # a concurrent get() won
+                self._ram.move_to_end(key)
+                return self._ram[key]
+            self._ram[key] = arrays
+            self.ram_bytes += _nbytes(arrays)
+            self.stats["peak_ram_bytes"] = max(self.stats["peak_ram_bytes"],
+                                               self.ram_bytes)
+            self._enforce_budget(keep=key)
+        return arrays
+
+    def delete(self, key: str) -> None:
+        with self._lock:
+            path = self._forget_locked(key)
+            if path is not None and os.path.exists(path):
+                os.remove(path)
 
     def __contains__(self, key: str) -> bool:
-        return key in self._ram or key in self._disk
+        with self._lock:
+            return (key in self._ram or key in self._disk
+                    or key in self._spilling)
 
     def keys(self, prefix: str = "") -> Iterator[str]:
-        seen = set(self._ram) | set(self._disk)
+        with self._lock:
+            seen = set(self._ram) | set(self._disk) | set(self._spilling)
         return iter(sorted(k for k in seen if k.startswith(prefix)))
 
     def spilled_keys(self) -> tuple[str, ...]:
         """Entries currently resident on disk only (spilled and not since
-        reloaded)."""
-        return tuple(sorted(k for k in self._disk if k not in self._ram))
+        reloaded).  A quiescence point: joins in-flight writes first so
+        every reported key's spill file actually exists."""
+        self.flush()
+        with self._lock:
+            return tuple(sorted(k for k in self._disk if k not in self._ram))
 
     # -- spilling -----------------------------------------------------------
 
     def _path(self, key: str) -> str:
-        return os.path.join(self.spill_dir, key.replace("/", "__") + ".npz")
+        return os.path.join(self.spill_dir, key.replace("/", "__") + ".bin")
 
     def _spill_one(self, key: str) -> None:
+        # caller holds the lock
         arrays = self._ram.pop(key)
         nbytes = _nbytes(arrays)
         self.ram_bytes -= nbytes
-        if key not in self._disk:                # first eviction: write it
-            path = self._path(key)
-            np.savez(path, **arrays)
+        if key in self._disk or key in self._spilling:
+            # the spill file is already current (or an identical write is in
+            # flight — promote-and-re-evict shares the same arrays): drop
+            self.stats["drops"] += 1
+            return
+        self.stats["bytes_spilled"] += nbytes
+        self.stats["spills"] += 1
+        path = self._path(key)
+        if not self.async_spill:
+            save_entry(path, arrays)
             self._disk[key] = path
-            self.stats["bytes_spilled"] += nbytes
-            self.stats["spills"] += 1
-        else:                                    # reloaded copy: just drop —
-            self.stats["drops"] += 1             # the npz is already current
+            return
+        self._seq += 1
+        ent = _Spilling(arrays=arrays, nbytes=nbytes, seq=self._seq)
+        self._spilling[key] = ent
+        self._spilling_bytes += nbytes
+        ent.future = self._writer().submit(self._write_entry, key, arrays,
+                                           path, ent.seq)
 
     def _enforce_budget(self, keep: Optional[str] = None) -> None:
         if self.memory_budget is None:
@@ -137,12 +340,27 @@ class ShardStore:
     def close(self) -> None:
         """Drop everything (RAM and spill files; removes the spill dir only
         when the store created it — also triggered automatically when a
-        store-owned dir's ShardStore is garbage collected)."""
-        for key in list(self._disk):
-            path = self._disk.pop(key)
+        store-owned dir's ShardStore is garbage collected).  Joins the
+        background writer so no write is in flight while files vanish."""
+        try:
+            self.flush()
+        except Exception:
+            pass                  # a failed write still must not block close
+        with self._lock:
+            pool, self._writer_pool = self._writer_pool, None
+            paths = list(self._disk.values())
+            self._disk.clear()
+            self._ram.clear()
+            self._spilling.clear()
+            self._spilling_bytes = 0
+            self.ram_bytes = 0
+        if pool is not None:
+            pool.shutdown(wait=True)
+            if self._writer_finalizer is not None:
+                self._writer_finalizer.detach()
+                self._writer_finalizer = None
+        for path in paths:
             if os.path.exists(path):
                 os.remove(path)
-        self._ram.clear()
-        self.ram_bytes = 0
         if self._own_dir:
             self._finalizer()     # rmtree now; disarms the GC finalizer

@@ -47,11 +47,16 @@ def run_map_task(reader, sigma, plan: JobPlan, i: int, j: int,
     xi = np.asarray(reader[i])
     xj = xi if i == j else np.asarray(reader[j])
     tile = kops.rbf_similarity(xi, xj, sigma)
+    # column ids travel as int32 from here on: every intermediate (and the
+    # final shard ``indices``) spills through the budgeted store, and the
+    # engine's n always fits — half the candidate-block spill bytes
     vals, cols = topt.tile_topt(tile, plan.ranges[j][0], t)
-    store.put(f"cand/{i}/{i}-{j}", {"vals": vals, "cols": cols})
+    store.put(f"cand/{i}/{i}-{j}", {"vals": vals,
+                                    "cols": cols.astype(np.int32)})
     if i != j:
         vals_t, cols_t = topt.tile_topt(tile.T, plan.ranges[i][0], t)
-        store.put(f"cand/{j}/{i}-{j}", {"vals": vals_t, "cols": cols_t})
+        store.put(f"cand/{j}/{i}-{j}", {"vals": vals_t,
+                                        "cols": cols_t.astype(np.int32)})
 
 
 def run_shuffle_task(plan: JobPlan, c: int, store: ShardStore) -> None:
@@ -75,7 +80,7 @@ def run_shuffle_task(plan: JobPlan, c: int, store: ShardStore) -> None:
     vals, cols = topt.merge_topt(vals, cols, plan.t_eff)
 
     r0, r1 = plan.ranges[c]
-    rows = np.repeat(np.arange(r0, r1, dtype=np.int64), vals.shape[1])
+    rows = np.repeat(np.arange(r0, r1, dtype=np.int32), vals.shape[1])
     cols = cols.reshape(-1)
     vals = vals.reshape(-1)
     keep = cols >= 0                      # drop the ragged-tile sentinels
@@ -138,7 +143,7 @@ def run_reduce_task(plan: JobPlan, c: int, store: ShardStore) -> dict:
     indptr = np.zeros(nrows + 1, np.int64)
     np.cumsum(counts, out=indptr[1:])
     data = vals.astype(np.float32)
-    store.put(f"shard/{c}", {"indptr": indptr, "indices": cols.astype(np.int64),
+    store.put(f"shard/{c}", {"indptr": indptr, "indices": cols.astype(np.int32),
                              "data": data})
     deg = np.bincount(rows_local, weights=data, minlength=nrows)
     return {"nnz": int(len(data)), "deg": deg.astype(np.float32)}

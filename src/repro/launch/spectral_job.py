@@ -65,6 +65,14 @@ def main(argv=None):
                          "beyond it spill to --spill-dir")
     ap.add_argument("--spill-dir", default=None,
                     help="engine spill directory (default: temp dir)")
+    ap.add_argument("--workers", type=int, default=1,
+                    help="engine task-pool width: map/shuffle/reduce run "
+                         "dependency-driven on this many threads (results "
+                         "are bitwise-identical at any width)")
+    ap.add_argument("--prefetch-depth", type=int, default=2,
+                    help="engine shard readahead window: how many upcoming "
+                         "CSR shards the streaming matmat fetches "
+                         "concurrently")
     ap.add_argument("--lanczos-steps", type=int, default=48,
                     help="target Krylov dimension (block solvers run "
                          "ceil(steps / block-size) block steps)")
@@ -105,6 +113,7 @@ def main(argv=None):
         compute_dtype=args.compute_dtype, schedule=schedule,
         chunk_size=args.chunk_size,
         memory_budget=args.memory_budget, spill_dir=args.spill_dir,
+        workers=args.workers, prefetch_depth=args.prefetch_depth,
         mesh=mesh)
 
     t0 = time.perf_counter()
@@ -144,6 +153,11 @@ def main(argv=None):
         if "prefetch_hits" in eng:
             print(f"[engine] prefetch_hits={eng['prefetch_hits']} "
                   f"prefetch_misses={eng['prefetch_misses']}")
+        if "overlap_s" in eng:
+            print(f"[engine] workers={eng['workers']} "
+                  f"build_wall_s={eng['build_wall_s']} "
+                  f"overlap_s={eng['overlap_s']} "
+                  f"spill_joins={eng['store_spill_joins']}")
     elif eng and "bytes_streamed" in eng:  # the fused matrix-free affinity
         print(f"[fused] compute_dtype={eng['compute_dtype']} "
               f"passes={eng['matrix_passes']} "

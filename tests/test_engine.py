@@ -68,7 +68,7 @@ def test_shard_store_spill_and_reload_roundtrip(tmp_path):
     spilled = store.spilled_keys()
     assert spilled, "budget should have forced spills"
     assert all(os.path.exists(os.path.join(
-        str(tmp_path), k.replace("/", "__") + ".npz")) for k in spilled)
+        str(tmp_path), k.replace("/", "__") + ".bin")) for k in spilled)
     for key, arrays in blocks.items():         # reload == original, any order
         got = store.get(key)
         for name, a in arrays.items():
@@ -88,7 +88,10 @@ def test_shard_store_get_keeps_larger_than_budget_entry(tmp_path):
     # entry whenever it was the only resident one, so every get() of a
     # larger-than-budget shard reloaded and re-dropped it while the spill
     # counter inflated with entries that were already on disk
-    store = ShardStore(memory_budget=100, spill_dir=str(tmp_path))
+    # (async_spill off: this test pins the synchronous loads/spills
+    # accounting; the async variants live in test_engine_async.py)
+    store = ShardStore(memory_budget=100, spill_dir=str(tmp_path),
+                       async_spill=False)
     a = {"x": np.arange(200, dtype=np.float32)}     # 800 B >> budget
     b = {"x": np.zeros(200, np.float32)}
     store.put("a", a)                               # spilled on put
@@ -99,15 +102,16 @@ def test_shard_store_get_keeps_larger_than_budget_entry(tmp_path):
     assert "a" in store._ram, "get() must keep the entry it just loaded"
     store.get("a")                                  # second get: RAM hit
     assert store.stats["loads"] == 1, "resident entry reloaded from disk"
-    # the one reload never re-wrote the npz or counted as a fresh spill
+    # the one reload never re-wrote the spill file or counted as a fresh spill
     assert store.stats["spills"] == 2
     assert store.stats["drops"] == 0
 
 
 def test_shard_store_redrop_counts_as_drop_not_spill(tmp_path):
     # a reloaded entry evicted AGAIN (to make room for another get) is a
-    # drop — its npz is already current — not a new spill
-    store = ShardStore(memory_budget=900, spill_dir=str(tmp_path))
+    # drop — its spill file is already current — not a new spill
+    store = ShardStore(memory_budget=900, spill_dir=str(tmp_path),
+                       async_spill=False)
     blocks = {k: {"x": np.full(200, i, np.float32)}   # 800 B each
               for i, k in enumerate("abc")}
     for k, v in blocks.items():
@@ -126,9 +130,10 @@ def test_shard_store_redrop_counts_as_drop_not_spill(tmp_path):
 
 
 def test_shard_store_delete_removes_spill_file(tmp_path):
-    store = ShardStore(memory_budget=10, spill_dir=str(tmp_path))
+    store = ShardStore(memory_budget=10, spill_dir=str(tmp_path),
+                       async_spill=False)
     store.put("a", {"x": np.zeros(100)})       # immediately over budget
-    (path,) = [os.path.join(str(tmp_path), "a.npz")]
+    (path,) = [os.path.join(str(tmp_path), "a.bin")]
     assert os.path.exists(path)
     store.delete("a")
     assert not os.path.exists(path) and "a" not in store
@@ -264,6 +269,10 @@ def test_operator_padding_matches_unpadded():
     A = np.asarray(op_pad.dense())
     np.testing.assert_allclose(A[:50, :50], np.asarray(op.dense()),
                                rtol=1e-5, atol=1e-6)
+    # the traced-callback matvec above immortalizes its closure (and so
+    # the graph) in jax's dispatch cache: close the shared prefetch pool
+    # explicitly, as every non-test operator consumer does
+    op.close()
 
 
 def test_engine_eigh_backend_uses_dense_fallback():

@@ -1,0 +1,295 @@
+"""PR 8 async engine: thread-safe store + async spill writer, the
+dependency-driven build scheduler, prefetch window/thread hygiene, the
+single-pass scatter, and the strided sigma sample.
+
+The load-bearing invariants:
+
+* concurrency never changes results — labels/embeddings are
+  bitwise-identical at every ``workers`` width;
+* the store never loses an entry or miscounts a byte under concurrent
+  put/get/delete, and async spilling is invisible except in the stats;
+* no fit strands a background thread.
+"""
+from __future__ import annotations
+
+import gc
+import os
+import threading
+
+import numpy as np
+import pytest
+
+from repro import engine
+from repro.cluster import SpectralClustering, ari
+from repro.data import synthetic
+from repro.data.chunked import ArrayChunks
+from repro.engine.operator import (_bincount_loop_rows, _csr_segment_matmat,
+                                   scatter_rows)
+from repro.engine.plan import JobPlan
+from repro.engine.runner import _resolve_sigma
+from repro.engine.store import ShardStore
+
+
+def _repro_threads(prefix: str = "repro-") -> list[str]:
+    return [t.name for t in threading.enumerate()
+            if t.name.startswith(prefix)]
+
+
+# ---------------------------------------------------------------------------
+# store: async spill semantics
+# ---------------------------------------------------------------------------
+
+def test_async_spill_roundtrip_and_flush(tmp_path):
+    store = ShardStore(memory_budget=900, spill_dir=str(tmp_path))
+    blocks = {f"k{i}": {"x": np.full(200, i, np.float32)} for i in range(4)}
+    for k, v in blocks.items():
+        store.put(k, v)                    # evictions queue async writes
+    store.flush()
+    # after the quiescence point every spilled entry's spill file exists and the
+    # spilling state is fully drained
+    assert store._spilling == {} and store._spilling_bytes == 0
+    for k in store.spilled_keys():
+        assert os.path.exists(os.path.join(
+            str(tmp_path), k.replace("/", "__") + ".bin"))
+    for k, v in blocks.items():            # any order, data intact
+        np.testing.assert_array_equal(store.get(k)["x"], v["x"])
+    store.close()
+
+
+def test_get_joins_in_flight_spill(tmp_path):
+    # a get() during the spill window must return the still-held arrays
+    # without a disk round-trip, and the entry is resident again
+    store = ShardStore(memory_budget=800, spill_dir=str(tmp_path))
+    a = {"x": np.arange(200, dtype=np.float32)}
+    store.put("a", a)
+    store.put("b", {"x": np.zeros(200, np.float32)})   # evicts a (async)
+    got = store.get("a")                   # joins or loads, timing decides
+    np.testing.assert_array_equal(got["x"], a["x"])
+    assert store.stats["spill_joins"] + store.stats["loads"] == 1
+    assert "a" in store._ram
+    store.flush()
+    # the joined entry's write still landed: evicting it again is a drop
+    assert "a" in store._disk
+    store.close()
+
+
+def test_delete_during_in_flight_spill_leaves_no_orphan(tmp_path):
+    store = ShardStore(memory_budget=800, spill_dir=str(tmp_path))
+    for i in range(8):
+        store.put(f"k{i}", {"x": np.full(200, i, np.float32)})
+        store.delete(f"k{i}")              # race the background writer
+    store.flush()
+    assert list(store.keys()) == []
+    # stale writers detected their seq was forgotten and removed the file
+    assert [f for f in os.listdir(str(tmp_path)) if f.endswith(".bin")] == []
+    store.close()
+
+
+def test_store_concurrency_torture(tmp_path):
+    # satellite (d): 8 threads hammer one store under a tight shared
+    # budget; nothing may be lost and the byte accounting must be exact
+    budget = 4000
+    store = ShardStore(memory_budget=budget, spill_dir=str(tmp_path))
+    n_threads, n_keys = 8, 12
+    errors: list[BaseException] = []
+
+    def worker(tid: int):
+        try:
+            rng = np.random.RandomState(tid)
+            for i in range(n_keys):
+                store.put(f"t{tid}/k{i}",
+                          {"x": np.full(100 + 8 * i, tid * 100 + i,
+                                        np.float32)})
+                j = rng.randint(0, i + 1)
+                got = store.get(f"t{tid}/k{j}")     # reload or join
+                assert got["x"][0] == tid * 100 + j
+            for i in range(0, n_keys, 3):           # delete every third
+                store.delete(f"t{tid}/k{i}")
+        except BaseException as e:                  # pragma: no cover
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker, args=(tid,))
+               for tid in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert errors == []
+    store.flush()
+    # no lost entries: every non-deleted key present with correct data
+    for tid in range(n_threads):
+        for i in range(n_keys):
+            key = f"t{tid}/k{i}"
+            if i % 3 == 0:
+                assert key not in store
+            else:
+                np.testing.assert_array_equal(
+                    store.get(key)["x"],
+                    np.full(100 + 8 * i, tid * 100 + i, np.float32))
+    store.flush()
+    # exact accounting at quiescence: ram_bytes is the sum of resident
+    # entries and the budget is respected
+    with store._lock:
+        resident = sum(sum(a.nbytes for a in e.values())
+                       for e in store._ram.values())
+    assert store.ram_bytes == resident
+    assert store.ram_bytes <= budget
+    assert store._spilling == {} and store._spilling_bytes == 0
+    store.close()
+    assert _repro_threads("repro-store") == []
+
+
+# ---------------------------------------------------------------------------
+# scatter implementations (satellite b)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("sorted_rows", [True, False])
+def test_scatter_rows_matches_bincount_loop(sorted_rows):
+    rng = np.random.RandomState(0)
+    nrows, nnz, b = 37, 500, 6
+    rows = rng.randint(0, nrows, nnz)
+    if sorted_rows:
+        rows = np.sort(rows)
+    prods = rng.randn(nnz, b).astype(np.float32)
+    Y = np.zeros((nrows, b), np.float32)
+    scatter_rows(Y, rows, prods)
+    # the loop accumulates in float64 (np.bincount), the single-pass
+    # scatter in float32 — identical up to f32 rounding
+    np.testing.assert_allclose(Y, _bincount_loop_rows(rows, prods, nrows),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_scatter_rows_empty_is_noop():
+    Y = np.ones((3, 2), np.float32)
+    scatter_rows(Y, np.empty(0, np.int64), np.empty((0, 2), np.float32))
+    np.testing.assert_array_equal(Y, np.ones((3, 2), np.float32))
+
+
+def test_device_segment_matmat_matches_loop():
+    rng = np.random.RandomState(1)
+    nrows, nnz, b = 19, 230, 4
+    rows = np.sort(rng.randint(0, nrows, nnz))
+    data = rng.rand(nnz).astype(np.float32)
+    indices = rng.randint(0, 50, nnz)
+    V = rng.randn(50, b).astype(np.float32)
+    out = np.asarray(_csr_segment_matmat(data, indices, rows, V, nrows))
+    ref = _bincount_loop_rows(rows, data[:, None] * V[indices], nrows)
+    np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-5)
+    # zero padding (the pow2 nnz buckets) is inert
+    pad = 64
+    out_p = np.asarray(_csr_segment_matmat(
+        np.pad(data, (0, pad)), np.pad(indices, (0, pad)),
+        np.pad(rows, (0, pad)), V, nrows))
+    np.testing.assert_allclose(out_p, out, rtol=1e-6)
+
+
+def test_matmat_impls_agree_on_real_graph(tmp_path):
+    pts = np.asarray(synthetic.blobs(160, 3, seed=3)[0])
+    plan = JobPlan(n=160, chunk_size=48, t=10, k=3, sigma=1.0,
+                   memory_budget=60_000, spill_dir=str(tmp_path))
+    graph, _ = engine.build_graph(ArrayChunks(pts, 48), plan)
+    V = np.random.RandomState(0).randn(160, 5).astype(np.float32)
+    outs = {}
+    for impl in ("host", "loop", "device"):
+        graph.matmat_impl = impl
+        outs[impl] = graph.matmat(V)
+    graph.close()
+    np.testing.assert_allclose(outs["host"], outs["loop"],
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(outs["device"], outs["loop"],
+                               rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# sigma sampling (satellite c)
+# ---------------------------------------------------------------------------
+
+def test_resolve_sigma_unbiased_by_chunk_order():
+    # class-sorted data used to put only ONE blob in the leading-chunk
+    # sample, estimating an intra-cluster bandwidth; the strided sample
+    # must agree with the shuffled estimate to within 10%
+    pts, labels = synthetic.blobs(1200, 3, seed=0)
+    pts, labels = np.asarray(pts), np.asarray(labels)
+    ordered = pts[np.argsort(labels, kind="stable")]
+    shuffled = pts[np.random.RandomState(0).permutation(len(pts))]
+    plan = JobPlan(n=len(pts), chunk_size=100, t=10, k=3)
+    s_sorted = _resolve_sigma(ArrayChunks(ordered, 100), plan)
+    s_shuffled = _resolve_sigma(ArrayChunks(shuffled, 100), plan)
+    assert s_sorted == pytest.approx(s_shuffled, rel=0.10)
+
+
+# ---------------------------------------------------------------------------
+# scheduler: bitwise-identical at any width, plan validation
+# ---------------------------------------------------------------------------
+
+def _run(workers, prefetch_depth, async_spill, spill_dir):
+    pts = np.asarray(synthetic.blobs(400, 3, seed=0)[0])
+    plan = JobPlan(n=400, chunk_size=64, t=12, k=3, memory_budget=150_000,
+                   spill_dir=spill_dir, seed=0, workers=workers,
+                   prefetch_depth=prefetch_depth, async_spill=async_spill)
+    return engine.run_job(plan, ArrayChunks(pts, 64))
+
+
+def test_run_job_bitwise_identical_across_workers(tmp_path):
+    seq = _run(1, 1, False, str(tmp_path / "seq"))
+    par = _run(4, 4, True, str(tmp_path / "par"))
+    np.testing.assert_array_equal(seq.labels, par.labels)
+    np.testing.assert_array_equal(np.asarray(seq.embedding),
+                                  np.asarray(par.embedding))
+    np.testing.assert_array_equal(np.asarray(seq.eigenvalues),
+                                  np.asarray(par.eigenvalues))
+    # the parallel run reports the overlap instrumentation
+    for key in ("build_wall_s", "overlap_s", "workers"):
+        assert key in par.stats
+    assert par.stats["workers"] == 4
+
+
+def test_jobplan_validates_async_knobs():
+    with pytest.raises(ValueError, match="workers"):
+        JobPlan(n=10, workers=0)
+    with pytest.raises(ValueError, match="prefetch_depth"):
+        JobPlan(n=10, prefetch_depth=0)
+    with pytest.raises(ValueError, match="workers"):
+        SpectralClustering(k=2, workers=0)
+    with pytest.raises(ValueError, match="prefetch_depth"):
+        SpectralClustering(k=2, prefetch_depth=0)
+
+
+# ---------------------------------------------------------------------------
+# thread hygiene (satellite a)
+# ---------------------------------------------------------------------------
+
+def test_fit_leaves_no_background_threads(tmp_path):
+    # regression: the shard-prefetch pool used to outlive the fit (one
+    # stranded "repro-shard-prefetch" thread per fitted estimator)
+    pts, truth = synthetic.blobs(300, 3, dim=4, spread=0.8, seed=1)
+    est = SpectralClustering(
+        k=3, affinity="ooc-topt", eigensolver="block-lanczos",
+        assigner="streaming", sparsify_t=10, sigma=1.0, lanczos_steps=96,
+        chunk_size=64, memory_budget=100_000,
+        spill_dir=str(tmp_path), workers=3, prefetch_depth=3, seed=0)
+    est.fit(pts)
+    assert ari(np.asarray(truth), np.asarray(est.labels_)) >= 0.95
+    gc.collect()
+    assert _repro_threads("repro-shard-prefetch") == []
+    assert _repro_threads("repro-store-spill") == []
+    assert _repro_threads("repro-engine-task") == []
+    eng = est.info_["engine"]
+    assert eng["prefetch_hits"] + eng["prefetch_misses"] > 0
+    assert eng["store_spills"] > 0          # the budget actually bit
+
+
+def test_graph_close_is_idempotent_and_nonfinal(tmp_path):
+    pts = np.asarray(synthetic.blobs(120, 2, seed=2)[0])
+    plan = JobPlan(n=120, chunk_size=40, t=8, k=2, sigma=1.0,
+                   spill_dir=str(tmp_path), prefetch_depth=2)
+    graph, _ = engine.build_graph(ArrayChunks(pts, 40), plan)
+    V = np.ones((120, 3), np.float32)
+    y1 = graph.matmat(V)
+    graph.close()
+    graph.close()                           # idempotent
+    assert _repro_threads("repro-shard-prefetch") == []
+    y2 = graph.matmat(V)                    # non-final: pool restarts
+    np.testing.assert_array_equal(y1, y2)
+    graph.close()
+    assert _repro_threads("repro-shard-prefetch") == []
