@@ -44,6 +44,14 @@ Prints ``name,us_per_call,derived`` CSV rows.
   obs_overhead      the observability tax: the fused fit path with the
                     obs layer on vs off (best-of-3 each), asserting the
                     <= 2% overhead contract.  Writes BENCH_obs.json.
+  chaos_sweep       fault-tolerance acceptance: injected task failures,
+                    spill corruption and stragglers at n=4096 must
+                    recover to labels bitwise-equal to the fault-free
+                    run (ARI == 1); the resilience machinery costs <= 3%
+                    build wall when nothing fails; and the serve path
+                    under 2x overload sheds with typed rejections while
+                    admitted p99 stays <= 2x the unloaded p99.  Writes
+                    BENCH_chaos.json.
 
 Run ``python benchmarks/run.py [mode ...]`` — no mode runs the full
 default suite; ``eigensolver_sweep`` / ``fused_sweep`` run just the
@@ -869,6 +877,172 @@ def serve_sweep(n: int = 8192, k: int = 8, ms=(1024, 8192),
     print(f"# wrote {out_json}")
 
 
+def chaos_sweep(n: int = 4096, k: int = 3,
+                out_json: str = "BENCH_chaos.json"):
+    """Hadoop-grade fault tolerance (ISSUE 9 acceptance) in three acts.
+
+    (a) Recovery is invisible: the n=4096 out-of-core job is run clean,
+        then under injected map/shuffle/reduce task failures, then with
+        spilled CSR shards corrupted on disk (bitflip + truncate), then
+        with a 3 s map straggler under speculative re-execution — every
+        faulted run must produce labels BITWISE-equal to the clean run
+        (so ARI == 1 by construction, and it is still asserted).
+    (b) Resilience is ~free: best-of-3 graph builds with the retry
+        machinery at its defaults vs max_retries=0 — <= 3% overhead.
+    (c) Overload degrades, not collapses: the batched predict service
+        under 2x its admission bound sheds the excess with typed
+        rejections while the admitted requests' p99 stays <= 2x the
+        unloaded p99.
+    """
+    from repro import engine
+    from repro.data.chunked import ArrayChunks
+    from repro.launch.cluster_serve import (ClusterServer, PredictRequest,
+                                            summarize)
+
+    pts, common = _async_problem(n, k)
+    results: dict = {"n": n, "k": k, "budget": common["memory_budget"],
+                     "runs": {}}
+
+    def run_engine(faults=None, **kw):
+        plan = engine.JobPlan(**common, workers=4, prefetch_depth=4,
+                              faults=faults, **kw)
+        t0 = time.perf_counter()
+        res = engine.run_job(plan, ArrayChunks(pts, 512))
+        return res, time.perf_counter() - t0
+
+    # -- (a) fault injection: bitwise recovery ----------------------------
+    run_engine()                                      # warm every jit
+    res_clean, clean_s = run_engine()
+    row("chaos_sweep/clean", clean_s * 1e6,
+        f"spills={res_clean.stats['store_spills']}")
+    results["runs"]["clean"] = {"wall_s": round(clean_s, 3)}
+
+    fault_runs = {
+        "task_failures": dict(
+            faults=(engine.FaultPlan()
+                    .fail("map", (0, 1))
+                    .fail_n("map", (2, 3), 2)
+                    .fail("shuffle", 1)
+                    .fail("reduce", 0)),
+            kw=dict(retry_backoff_s=0.01)),
+        "spill_corruption": dict(
+            faults=(engine.FaultPlan()
+                    .corrupt("shard/0", "bitflip")
+                    .corrupt("shard/3", "truncate")),
+            kw={}),
+        "straggler": dict(
+            faults=engine.FaultPlan().delay("map", (1, 1), 3.0),
+            kw=dict(speculation_factor=3.0)),
+    }
+    for tag, cfg in fault_runs.items():
+        faults = cfg["faults"]
+        res, wall = run_engine(faults=faults, **cfg["kw"])
+        st = res.stats
+        bitwise = bool(np.array_equal(res_clean.labels, res.labels))
+        a = float(ari(res_clean.labels, res.labels))
+        detail = (f"bitwise={bitwise} ari={a:.3f} "
+                  f"retries={st['retries']} "
+                  f"recoveries={st['store_recoveries']} "
+                  f"spec_launched={st['speculative_launched']} "
+                  f"spec_won={st['speculative_won']} fired={faults.fired}")
+        row(f"chaos_sweep/{tag}", wall * 1e6, detail)
+        results["runs"][tag] = {
+            "wall_s": round(wall, 3), "bitwise_equal_labels": bitwise,
+            "ari_vs_clean": a, "retries": int(st["retries"]),
+            "task_failures": int(st["task_failures"]),
+            "store_recoveries": int(st["store_recoveries"]),
+            "speculative_launched": int(st["speculative_launched"]),
+            "speculative_won": int(st["speculative_won"]),
+            "faults_fired": dict(faults.fired),
+        }
+        assert bitwise, f"{tag}: labels diverged from the fault-free run"
+        assert a == 1.0, (tag, a)
+    assert results["runs"]["task_failures"]["retries"] >= 4
+    assert results["runs"]["spill_corruption"]["store_recoveries"] >= 1
+    assert results["runs"]["straggler"]["speculative_won"] >= 1
+
+    # -- (b) zero-fault overhead of the resilience machinery --------------
+    def best_build(**kw):
+        walls = []
+        for _ in range(3):
+            plan = engine.JobPlan(**common, workers=4, prefetch_depth=4,
+                                  **kw)
+            t0 = time.perf_counter()
+            graph, _sig = engine.build_graph(ArrayChunks(pts, 512), plan,
+                                             prewarm=False)
+            walls.append(time.perf_counter() - t0)
+            graph.close()
+        return min(walls)
+
+    base_s = best_build(max_retries=0)
+    resil_s = best_build()                 # defaults: max_retries=2
+    overhead = resil_s / base_s - 1.0
+    row("chaos_sweep/overhead", resil_s * 1e6,
+        f"base={base_s:.3f}s resilient={resil_s:.3f}s "
+        f"overhead={overhead:.2%} (need <=3%)")
+    results["overhead"] = {
+        "build_wall_s_no_retry": round(base_s, 4),
+        "build_wall_s_resilient": round(resil_s, 4),
+        "overhead_frac": round(overhead, 4),
+    }
+    assert overhead <= 0.03, f"resilience overhead {overhead:.2%} > 3%"
+
+    # -- (c) serve under 2x overload: typed shed, bounded p99 -------------
+    serve_n, m, n_req = 2048, 256, 8
+    spts, _ = synthetic.blobs(serve_n, k, dim=8, spread=0.6, seed=0)
+    est = SpectralClustering(k=k, affinity="fused-rbf", sigma=1.0,
+                             seed=0, lanczos_steps=48)
+    est.fit(jnp.asarray(spts))
+    rng = np.random.RandomState(2)
+
+    def make_queue(count):
+        return [PredictRequest(
+            rid=rid,
+            points=(spts[rng.choice(serve_n, size=m)]
+                    + 0.05 * rng.randn(m, spts.shape[1])
+                    ).astype(np.float32)) for rid in range(count)]
+
+    np.asarray(est.predict(jnp.asarray(spts[:256])))  # warm the compile
+    bound = n_req * m                                 # rows of capacity
+
+    srv_u = ClusterServer(est, batch_rows=256)
+    t0 = time.perf_counter()
+    done_u = srv_u.run(make_queue(n_req))             # offered = capacity
+    s_u = summarize(done_u, time.perf_counter() - t0)
+
+    srv_o = ClusterServer(est, batch_rows=256, max_pending_rows=bound)
+    t0 = time.perf_counter()
+    done_o = srv_o.run(make_queue(2 * n_req))         # offered = 2x
+    s_o = summarize(done_o, time.perf_counter() - t0)
+
+    shed = [r for r in done_o if r.status == "shed"]
+    p99_ratio = s_o["latency_p99_ms"] / max(s_u["latency_p99_ms"], 1e-9)
+    row("chaos_sweep/serve_overload", 0.0,
+        f"unloaded_p99={s_u['latency_p99_ms']:.0f}ms "
+        f"overload_p99={s_o['latency_p99_ms']:.0f}ms "
+        f"ratio={p99_ratio:.2f}x (need <=2) shed={len(shed)}")
+    results["serve"] = {
+        "batch_rows": 256, "rows_per_request": m,
+        "max_pending_rows": bound,
+        "offered_requests_unloaded": n_req,
+        "offered_requests_overload": 2 * n_req,
+        "unloaded_p99_ms": s_u["latency_p99_ms"],
+        "overload_admitted_p99_ms": s_o["latency_p99_ms"],
+        "p99_ratio": round(p99_ratio, 3),
+        "completed": s_o["completed"], "shed": s_o["shed"],
+        "expired": s_o["expired"],
+    }
+    assert all(r.done for r in done_u)
+    assert shed, "2x overload against a bounded queue must shed"
+    assert all(r.error and "shed" in r.error for r in shed)
+    assert s_o["completed"] >= 1
+    assert p99_ratio <= 2.0, p99_ratio
+
+    with open(out_json, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"# wrote {out_json}")
+
+
 def tune_sweep(ns=(1024, 4096), quick: bool = False,
                out_json: str = "BENCH_tune.json"):
     """The schedule autotuner sweep (repro.tune): every schedulable Pallas
@@ -979,6 +1153,7 @@ MODES = {
     "serve_sweep": serve_sweep,
     "tune_sweep": tune_sweep,
     "obs_overhead": obs_overhead,
+    "chaos_sweep": chaos_sweep,
 }
 
 # modes the bare invocation runs (the sweep is opt-in: it is a benchmark

@@ -333,10 +333,16 @@ def ooc_topt_affinity(est, x, sigma, mesh) -> NormalizedOperator:
     ``est.memory_budget``, and the returned operator's matmat streams the
     shards through a host callback (one shard load per block).  Drop-in
     for any eigensolver/assigner.
+
+    Resilience: the build inherits the estimator's retry/speculation
+    knobs, and when ``est.stage_timeout_s`` trips (a stage deadline
+    expired, every outstanding task was cancelled) the fit degrades
+    gracefully to the in-memory "knn-topt" affinity — the same top-t
+    graph built without the engine — instead of failing the job.
     """
     import numpy as np
 
-    from repro import engine
+    from repro import engine, obs
     from repro.data.chunked import ArrayChunks
 
     n = int(x.shape[0])
@@ -346,9 +352,18 @@ def ooc_topt_affinity(est, x, sigma, mesh) -> NormalizedOperator:
         sigma=float(sigma), memory_budget=est.memory_budget,
         spill_dir=est.spill_dir, seed=est.seed,
         workers=getattr(est, "workers", 1),
-        prefetch_depth=getattr(est, "prefetch_depth", 2))
+        prefetch_depth=getattr(est, "prefetch_depth", 2),
+        max_retries=getattr(est, "max_retries", 2),
+        speculation_factor=getattr(est, "speculation_factor", 0.0),
+        stage_timeout_s=getattr(est, "stage_timeout_s", None),
+        faults=getattr(est, "faults", None))
     reader = ArrayChunks(np.asarray(x), plan.chunk_size)
-    graph, _sigma = engine.build_graph(reader, plan)
+    try:
+        graph, _sigma = engine.build_graph(reader, plan)
+    except engine.EngineTimeoutError as e:
+        obs.counter("engine.path_fallbacks").inc()
+        est._affinity_fallback = f"ooc-topt->knn-topt ({e})"
+        return AFFINITIES.get("knn-topt")(est, x, sigma, mesh)
     # same padding invariant as the dense backends: downstream shard_map
     # stages need row counts divisible by the mesh
     n_pad = mesh_utils.pad_to_multiple(n, mesh_utils.mesh_size(mesh))

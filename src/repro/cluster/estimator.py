@@ -103,6 +103,19 @@ class SpectralClustering:
     prefetch_depth: shard readahead window of the engine's streaming
                     matmat (how many upcoming CSR shards are fetched
                     concurrently while the current one multiplies).
+    max_retries:    engine per-task re-execution budget for the
+                    "ooc-topt" build (failed attempts retry with
+                    exponential backoff; retried results are
+                    bitwise-identical).
+    speculation_factor: engine straggler threshold k — a running task
+                    whose wall exceeds k x the stage's running-median
+                    wall gets one speculative backup attempt (0 = off).
+    stage_timeout_s: per-stage deadline for the engine build; on expiry
+                    the job cancels its outstanding tasks and the fit
+                    FALLS BACK to the in-memory "knn-topt" affinity (the
+                    same top-t graph, no spilling) instead of failing.
+    faults:         optional ``engine.FaultPlan`` for deterministic
+                    fault injection (tests/benchmarks; None = no-op).
     mesh:           device mesh; None = all local devices.
 
     Fitted attributes (original point order): ``labels_``, ``embedding_``,
@@ -119,7 +132,10 @@ class SpectralClustering:
                  minibatch_size: int = 256, chunk_size: int | None = None,
                  memory_budget: int | None = None,
                  spill_dir: str | None = None,
-                 workers: int = 1, prefetch_depth: int = 2, seed: int = 0,
+                 workers: int = 1, prefetch_depth: int = 2,
+                 max_retries: int = 2, speculation_factor: float = 0.0,
+                 stage_timeout_s: float | None = None, faults: Any = None,
+                 seed: int = 0,
                  dtype: Any = jnp.float32, mesh: Optional[Mesh] = None):
         # Resolve backends eagerly so a typo fails at construction, not
         # after an expensive similarity phase.
@@ -159,6 +175,18 @@ class SpectralClustering:
                 f"prefetch_depth must be >= 1, got {prefetch_depth}")
         self.workers = workers
         self.prefetch_depth = prefetch_depth
+        if max_retries < 0:
+            raise ValueError(f"max_retries must be >= 0, got {max_retries}")
+        if speculation_factor < 0:
+            raise ValueError(f"speculation_factor must be >= 0 (0 = off), "
+                             f"got {speculation_factor}")
+        if stage_timeout_s is not None and stage_timeout_s <= 0:
+            raise ValueError(f"stage_timeout_s must be positive seconds or "
+                             f"None, got {stage_timeout_s}")
+        self.max_retries = max_retries
+        self.speculation_factor = speculation_factor
+        self.stage_timeout_s = stage_timeout_s
+        self.faults = faults
         self.seed = seed
         self.dtype = dtype
         self.mesh = mesh
@@ -277,6 +305,10 @@ class SpectralClustering:
         op_stats = op.stats_snapshot()
         if op_stats:
             self.info_["engine"] = op_stats
+        fb = getattr(self, "_affinity_fallback", None)
+        if fb is not None:             # graceful-degradation audit trail
+            self.info_["affinity_fallback"] = fb
+            self._affinity_fallback = None
         # release backend worker resources (the engine's shard-prefetch
         # pool) — a fit must not strand background threads
         if getattr(op, "close", None) is not None:

@@ -36,6 +36,42 @@ from repro.distrib import mesh_utils
 
 TRANSFORM_PATHS = ("auto", "dense", "fused")
 
+
+class RequestRejected(RuntimeError):
+    """Base class for typed serving admission-control rejections (the
+    load-shedding contract of ``launch.cluster_serve.ClusterServer``)."""
+    status = "rejected"
+
+
+class QueueFullError(RequestRejected):
+    """Admission denied: accepting the request would push the pending-row
+    backlog past the server's bounded admission queue."""
+    status = "shed"
+
+    def __init__(self, rid: int, rows: int, pending_rows: int,
+                 max_pending_rows: int):
+        super().__init__(
+            f"request {rid} shed: {rows} rows would push the pending "
+            f"backlog ({pending_rows} rows) past the admission bound "
+            f"({max_pending_rows} rows)")
+        self.rid = rid
+        self.rows = rows
+        self.pending_rows = pending_rows
+        self.max_pending_rows = max_pending_rows
+
+
+class DeadlineExceededError(RequestRejected):
+    """An admitted request sat past its deadline before completing; its
+    remaining rows are dropped from the batch window."""
+    status = "expired"
+
+    def __init__(self, rid: int, deadline_s: float, waited_s: float):
+        super().__init__(f"request {rid} expired: waited {waited_s:.3f}s "
+                         f"against a {deadline_s:g}s deadline")
+        self.rid = rid
+        self.deadline_s = deadline_s
+        self.waited_s = waited_s
+
 # default ceiling on the materialized (m, n) query-vs-train kernel when the
 # estimator carries no memory_budget: 64 MiB ~= the m = n = 4096 f32 kernel
 # (same spirit as engine.route_path, which routes on the dense similarity)

@@ -4,17 +4,30 @@
 # shuffle merges tile output into symmetrized per-row-range CSR shards
 # (spilled to disk under a memory budget), reduce wires the shards into a
 # streaming NormalizedOperator for Lanczos plus a chunked mini-batch
-# k-means.  See API.md §repro.engine for the job-plan and shard contracts.
+# k-means.  Fault tolerance mirrors Hadoop too: task retry + speculative
+# re-execution in the scheduler, checksummed atomic spills with
+# lineage-based re-materialization in the store, and a deterministic
+# FaultPlan injection harness.  See API.md §repro.engine for the
+# job-plan, shard and fault-tolerance contracts.
+from repro.engine.faults import FaultPlan, InjectedFault
 from repro.engine.kmeans import streaming_kmeans
 from repro.engine.operator import ShardedCSRGraph, make_normalized_operator
 from repro.engine.plan import (JobPlan, chunk_ranges, map_tiles, num_chunks,
-                               route_path)
-from repro.engine.runner import JobResult, build_graph, run_job
-from repro.engine.store import ShardStore
+                               producer_of, route_path)
+from repro.engine.runner import (EngineError, EngineTimeoutError, JobResult,
+                                 build_graph, run_job)
+from repro.engine.store import (ShardCorruptionError, ShardLostError,
+                                ShardStore)
 
 __all__ = [
+    "EngineError",
+    "EngineTimeoutError",
+    "FaultPlan",
+    "InjectedFault",
     "JobPlan",
     "JobResult",
+    "ShardCorruptionError",
+    "ShardLostError",
     "ShardStore",
     "ShardedCSRGraph",
     "build_graph",
@@ -22,6 +35,7 @@ __all__ = [
     "make_normalized_operator",
     "map_tiles",
     "num_chunks",
+    "producer_of",
     "route_path",
     "run_job",
     "streaming_kmeans",

@@ -1,0 +1,158 @@
+"""Deterministic fault injection: the chaos harness for the engine.
+
+A :class:`FaultPlan` is a static list of fault directives keyed by
+``(stage, task-key, attempt)`` — the same coordinates the scheduler uses
+for its retry bookkeeping — plus spill-corruption directives keyed by
+store key.  Threaded through the runner (``JobPlan.faults``) and the
+:class:`~repro.engine.store.ShardStore` (``store.faults``), it lets a
+test or benchmark script say exactly which attempt of which task fails,
+which spill file gets truncated or bit-flipped, and which task stalls —
+and nothing else changes.  The default (``faults=None``) is a no-op on
+every hot path.
+
+Task keys are strings: ``"<i>-<j>"`` for map tiles, ``"<c>"`` for
+shuffle/reduce chunks (see :func:`task_key`).  Every *fail* and *delay*
+directive is keyed by attempt number, so "fail attempt 0, succeed on the
+retry" is one directive; *corrupt* directives fire exactly once, on the
+first spill write of the named store key (re-spills after a recovery
+write a clean file — otherwise a corrupt->recover->re-spill loop would
+never converge).
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+from typing import Dict, Optional, Tuple, Union
+
+
+class InjectedFault(RuntimeError):
+    """The exception a ``fail`` directive raises inside a task attempt."""
+
+    def __init__(self, stage: str, key: str, attempt: int):
+        super().__init__(f"injected fault: {stage} task {key} attempt "
+                         f"{attempt}")
+        self.stage = stage
+        self.key = key
+        self.attempt = attempt
+
+
+def task_key(key: Union[int, Tuple[int, int], str]) -> str:
+    """Normalize a scheduler task key to the FaultPlan string form:
+    map tiles ``(i, j)`` -> ``"i-j"``, shuffle/reduce chunk ``c`` ->
+    ``"c"``."""
+    if isinstance(key, tuple):
+        return f"{key[0]}-{key[1]}"
+    return str(key)
+
+
+class FaultPlan:
+    """A deterministic set of fault directives.  Thread-safe: directives
+    are armed at construction and checked (under a lock) from worker
+    threads; each fires at most once and is recorded in :attr:`fired`."""
+
+    _CORRUPT_MODES = ("truncate", "bitflip")
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._fail: Dict[Tuple[str, str, int], bool] = {}
+        self._delay: Dict[Tuple[str, str, int], float] = {}
+        self._corrupt: Dict[str, str] = {}       # store key -> mode
+        self.fired: Dict[str, int] = {"fail": 0, "delay": 0, "corrupt": 0}
+
+    # -- arming --------------------------------------------------------------
+
+    def fail(self, stage: str, key: Union[int, Tuple[int, int], str],
+             attempt: int = 0) -> "FaultPlan":
+        """Raise :class:`InjectedFault` when ``attempt`` of the named task
+        starts."""
+        self._fail[(stage, task_key(key), int(attempt))] = True
+        return self
+
+    def fail_n(self, stage: str, key, n: int) -> "FaultPlan":
+        """Fail the first ``n`` attempts of a task (it succeeds on attempt
+        ``n`` if the retry budget allows)."""
+        for a in range(int(n)):
+            self.fail(stage, key, a)
+        return self
+
+    def delay(self, stage: str, key, seconds: float,
+              attempt: int = 0) -> "FaultPlan":
+        """Sleep ``seconds`` at the start of ``attempt`` of the named task
+        — the straggler injector (speculative backups run a different
+        attempt number, so they dodge the delay)."""
+        self._delay[(stage, task_key(key), int(attempt))] = float(seconds)
+        return self
+
+    def corrupt(self, store_key: str, mode: str = "bitflip") -> "FaultPlan":
+        """Corrupt the spill file of ``store_key`` right after its first
+        write lands: ``"truncate"`` halves the file, ``"bitflip"`` flips
+        one payload byte.  Fires once."""
+        if mode not in self._CORRUPT_MODES:
+            raise ValueError(f"corrupt mode must be one of "
+                             f"{self._CORRUPT_MODES}, got {mode!r}")
+        self._corrupt[store_key] = mode
+        return self
+
+    @classmethod
+    def from_spec(cls, spec: Union[str, dict, None]) -> Optional["FaultPlan"]:
+        """Build a plan from a JSON string / dict, e.g.::
+
+            {"fail":    [["map", "0-0", 0], ["reduce", "1", 0]],
+             "delay":   [["map", "0-1", 2.0, 0]],
+             "corrupt": {"shard/0": "bitflip"}}
+
+        fail entries are ``[stage, key, attempt]`` (attempt optional,
+        default 0); delay entries are ``[stage, key, seconds, attempt]``.
+        Returns None for an empty/None spec (the no-op default)."""
+        if spec is None or spec == "":
+            return None
+        if isinstance(spec, str):
+            spec = json.loads(spec)
+        plan = cls()
+        for ent in spec.get("fail", []):
+            stage, key = ent[0], ent[1]
+            plan.fail(stage, key, ent[2] if len(ent) > 2 else 0)
+        for ent in spec.get("delay", []):
+            stage, key, seconds = ent[0], ent[1], float(ent[2])
+            plan.delay(stage, key, seconds, ent[3] if len(ent) > 3 else 0)
+        for store_key, mode in spec.get("corrupt", {}).items():
+            plan.corrupt(store_key, mode)
+        return plan
+
+    # -- firing (runner / store hooks) --------------------------------------
+
+    def on_task_start(self, stage: str, key, attempt: int) -> None:
+        """Runner hook, called at the start of every task attempt: applies
+        a matching delay, then raises a matching injected failure."""
+        tk = (stage, task_key(key), int(attempt))
+        with self._lock:
+            seconds = self._delay.pop(tk, None)
+            if seconds is not None:
+                self.fired["delay"] += 1
+        if seconds is not None:
+            time.sleep(seconds)
+        with self._lock:
+            if self._fail.pop(tk, None):
+                self.fired["fail"] += 1
+                raise InjectedFault(stage, tk[1], int(attempt))
+
+    def on_spill(self, store_key: str, path: str) -> None:
+        """Store hook, called after a spill write lands: corrupts the file
+        on disk if a directive names this key (once)."""
+        with self._lock:
+            mode = self._corrupt.pop(store_key, None)
+            if mode is not None:
+                self.fired["corrupt"] += 1
+        if mode is None:
+            return
+        size = os.path.getsize(path)
+        if mode == "truncate":
+            os.truncate(path, size // 2)
+        else:                                     # bitflip: last byte is
+            with open(path, "r+b") as f:          # always payload
+                f.seek(size - 1)
+                b = f.read(1)
+                f.seek(size - 1)
+                f.write(bytes([b[0] ^ 0xFF]))

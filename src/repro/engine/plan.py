@@ -11,8 +11,8 @@ the same property Hadoop gets from its immutable job config.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Optional
+from dataclasses import dataclass, field
+from typing import Any, Optional, Tuple, Union
 
 from repro.data.chunked import chunk_ranges  # noqa: F401  (re-exported)
 
@@ -68,6 +68,28 @@ class JobPlan:
                     picks per the memory budget).
     compute_dtype:  fused-kernel MXU precision (None/"float32"/"bf16"),
                     only read on the fused path.
+    max_retries:    per-task re-execution budget (Hadoop's
+                    mapred.map.max.attempts minus one): a failed attempt
+                    is resubmitted up to this many times with exponential
+                    backoff before the job aborts.  Retried tasks are
+                    bitwise-identical to first-try successes (tasks are
+                    deterministic functions of the store).
+    retry_backoff_s: base backoff before retry attempt a (sleeps
+                    ``retry_backoff_s * 2**(a-1)``, capped at 2s).
+    speculation_factor: straggler threshold k — a running task whose wall
+                    exceeds k x the running median of completed walls for
+                    its stage gets one speculative backup attempt; first
+                    completion wins, the loser is discarded.  0 disables
+                    speculation (the default: non-speculative runs keep
+                    the consume-on-fold input lifecycle).
+    stage_timeout_s: per-stage deadline for the build scheduler; on
+                    expiry every outstanding future is cancelled and a
+                    typed ``EngineTimeoutError`` propagates (callers fall
+                    back per :func:`route_path` — see
+                    ``cluster.affinity.ooc_topt_affinity``).
+    faults:         optional :class:`~repro.engine.faults.FaultPlan`
+                    threaded through the runner and store — deterministic
+                    fault injection for tests/benchmarks (None = no-op).
     """
 
     n: int
@@ -86,6 +108,11 @@ class JobPlan:
     workers: int = 1
     prefetch_depth: int = 2
     async_spill: bool = True
+    max_retries: int = 2
+    retry_backoff_s: float = 0.05
+    speculation_factor: float = 0.0
+    stage_timeout_s: Optional[float] = None
+    faults: Optional[Any] = field(default=None, compare=False)
 
     def __post_init__(self):
         if self.path not in ("ooc", "fused", "auto"):
@@ -111,6 +138,18 @@ class JobPlan:
         if self.prefetch_depth < 1:
             raise ValueError(
                 f"prefetch_depth must be >= 1, got {self.prefetch_depth}")
+        if self.max_retries < 0:
+            raise ValueError(
+                f"max_retries must be >= 0, got {self.max_retries}")
+        if self.retry_backoff_s < 0:
+            raise ValueError(
+                f"retry_backoff_s must be >= 0, got {self.retry_backoff_s}")
+        if self.speculation_factor < 0:
+            raise ValueError(f"speculation_factor must be >= 0 (0 = off), "
+                             f"got {self.speculation_factor}")
+        if self.stage_timeout_s is not None and self.stage_timeout_s <= 0:
+            raise ValueError(f"stage_timeout_s must be positive seconds or "
+                             f"None, got {self.stage_timeout_s}")
 
     @property
     def ranges(self) -> list[tuple[int, int]]:
@@ -139,6 +178,31 @@ class JobPlan:
         """Block steps spanning the same Krylov dimension as
         ``num_lanczos_steps`` single-vector iterations."""
         return max(1, -(-self.num_lanczos_steps() // self.eff_block_size()))
+
+
+def producer_of(key: str) -> Tuple[str, Union[int, Tuple[int, int]]]:
+    """Task lineage: map a store key back to the (stage, task-key) that
+    produced it.  This is the planner's re-materialization index — every
+    intermediate's producer is a pure function of the key string, so a
+    corrupt or lost entry can be rebuilt by re-running its producing task
+    (see ``runner._install_lineage_recovery``):
+
+      ``cand/<c>/<i>-<j>`` -> ("map", (i, j))      pure; re-run directly
+      ``topt/<c>``         -> ("shuffle", c)       inputs consumed: re-run
+      ``mirror/<d>/<c>``   -> ("shuffle", c)       via recompute (tasks.py)
+      ``shard/<c>``        -> ("reduce", c)        via recompute (tasks.py)
+    """
+    parts = key.split("/")
+    if parts[0] == "cand" and len(parts) == 3:
+        i, j = parts[2].split("-")
+        return "map", (int(i), int(j))
+    if parts[0] == "topt" and len(parts) == 2:
+        return "shuffle", int(parts[1])
+    if parts[0] == "mirror" and len(parts) == 3:
+        return "shuffle", int(parts[2])
+    if parts[0] == "shard" and len(parts) == 2:
+        return "reduce", int(parts[1])
+    raise KeyError(f"no known producer for store key {key!r}")
 
 
 def route_path(plan: JobPlan, d: int, *, itemsize: int = 4,

@@ -17,6 +17,7 @@ classic sequential schedule exactly).
 """
 from __future__ import annotations
 
+import statistics
 import threading
 import time
 from concurrent.futures import FIRST_COMPLETED, ThreadPoolExecutor, wait
@@ -36,6 +37,23 @@ from repro.engine import tasks
 from repro.engine.operator import (ShardedCSRGraph, make_normalized_operator)
 from repro.engine.plan import JobPlan, route_path
 from repro.engine.store import ShardStore
+
+
+class EngineError(RuntimeError):
+    """Base class for engine scheduling failures."""
+
+
+class EngineTimeoutError(EngineError):
+    """A build stage blew its ``plan.stage_timeout_s`` deadline.  Raised
+    by the scheduler after cancelling every queued task (running attempts
+    are joined — threads cannot be killed — so no task outlives the
+    job)."""
+
+    def __init__(self, stage: str, seconds: float):
+        super().__init__(f"engine stage {stage!r} exceeded its "
+                         f"{seconds:g}s deadline")
+        self.stage = stage
+        self.seconds = seconds
 
 
 @dataclass
@@ -67,6 +85,18 @@ def _resolve_sigma(reader, plan: JobPlan, sample_rows: int = 1024) -> float:
     return float(sim.median_sigma(jnp.asarray(xs)))
 
 
+@dataclass
+class _TaskState:
+    """Scheduler-side bookkeeping for one logical task across attempts."""
+    kind: str
+    key: object
+    attempts: int = 0            # attempts launched so far
+    failures: int = 0
+    inflight: int = 0            # attempts currently submitted/running
+    done: bool = False           # first successful completion landed
+    backup: bool = False         # a speculative duplicate was launched
+
+
 def _schedule_build(reader, sigma, plan: JobPlan, store: ShardStore,
                     overlap_work: Optional[Callable[[], None]] = None
                     ) -> tuple[np.ndarray, int, Dict]:
@@ -77,6 +107,24 @@ def _schedule_build(reader, sigma, plan: JobPlan, store: ShardStore,
       shuffle c    the map tiles touching chunk c (row i == c or j == c)
       reduce c     ALL shuffles (any shuffle may mirror triplets into c)
 
+    Fault tolerance (the Hadoop task-attempt model):
+
+      * a failed attempt is resubmitted with exponential backoff up to
+        ``plan.max_retries`` times; tasks are deterministic functions of
+        the store, so a retried success is bitwise-identical;
+      * with ``plan.speculation_factor`` k > 0, a running task whose wall
+        exceeds k x the running median of completed walls for its stage
+        gets ONE speculative backup attempt — first completion wins, the
+        loser's (identical) output is discarded.  In speculation mode
+        tasks run ``consume=False`` and the scheduler deletes a task's
+        inputs only after every attempt has settled, so a duplicate can
+        never read half-deleted inputs;
+      * ``plan.stage_timeout_s`` bounds each stage's wall; on expiry (or
+        on retry exhaustion) every queued task is cancelled
+        (``shutdown(cancel_futures=True)`` in the ``finally``), running
+        attempts are joined, and the typed error propagates — a failed
+        job never leaks tasks that keep spilling into the store.
+
     ``overlap_work`` (if given) runs ONCE on the scheduler thread as soon
     as the last shuffle finishes — i.e. while the reduce tail is still
     draining on the workers — so callers can overlap eigensolver seeding
@@ -84,61 +132,175 @@ def _schedule_build(reader, sigma, plan: JobPlan, store: ShardStore,
     tiles = plan.tiles
     nc = plan.nchunks
     workers = max(1, int(plan.workers))
+    faults = plan.faults
+    speculate = plan.speculation_factor > 0
+    consume = not speculate
     busy = {"map": 0.0, "shuffle": 0.0, "reduce": 0.0}
+    walls = {"map": [], "shuffle": [], "reduce": []}
     busy_lock = threading.Lock()
     deg = np.zeros(plan.n, np.float32)
     nnz_total = 0
+    counters = {"retries": 0, "task_failures": 0,
+                "speculative_launched": 0, "speculative_won": 0}
 
-    def timed(stage, fn, *args):
+    def timed(stage, fn, *args, **kw):
         t0 = time.perf_counter()
-        out = fn(*args)
+        out = fn(*args, **kw)
+        dt = time.perf_counter() - t0
         with busy_lock:
-            busy[stage] += time.perf_counter() - t0
+            busy[stage] += dt
+            walls[stage].append(dt)
         return out
 
+    def run_task(kind, key):
+        if kind == "map":
+            return timed("map", tasks.run_map_task,
+                         reader, sigma, plan, key[0], key[1], store)
+        if kind == "shuffle":
+            return timed("shuffle", tasks.run_shuffle_task,
+                         plan, key, store, consume=consume)
+        return timed("reduce", tasks.run_reduce_task,
+                     plan, key, store, consume=consume)
+
+    tstate: Dict[tuple, _TaskState] = {}
+    starts: Dict[tuple, float] = {}       # (kind, key, attempt) -> exec start
+    stage_t0: Dict[str, float] = {}
+    stage_left = {"map": len(tiles), "shuffle": nc, "reduce": nc}
     waiting = {c: {tl for tl in tiles if c in tl} for c in range(nc)}
     shuffles_left = nc
     overlap_pending = overlap_work is not None
     t_start = time.perf_counter()
-    with ThreadPoolExecutor(max_workers=workers,
-                            thread_name_prefix="repro-engine-task") as pool:
-        futures: Dict = {}
+    # speculation / deadlines need a clock tick even when nothing finishes
+    poll = 0.05 if (speculate or plan.stage_timeout_s is not None) else None
+    pool = ThreadPoolExecutor(max_workers=workers,
+                              thread_name_prefix="repro-engine-task")
+    futures: Dict = {}
 
-        def submit(kind, key, fn):
-            futures[pool.submit(fn)] = (kind, key)
+    def submit(kind, key, attempt=0, speculative=False):
+        st = tstate.setdefault((kind, key), _TaskState(kind, key))
+        st.attempts += 1
+        st.inflight += 1
+        stage_t0.setdefault(kind, time.perf_counter())
 
+        def body(kind=kind, key=key, attempt=attempt,
+                 speculative=speculative):
+            if attempt > 0 and not speculative and plan.retry_backoff_s:
+                time.sleep(min(plan.retry_backoff_s * 2 ** (attempt - 1),
+                               2.0))
+            starts[(kind, key, attempt)] = time.perf_counter()
+            if faults is not None:
+                faults.on_task_start(kind, key, attempt)
+            return run_task(kind, key)
+
+        futures[pool.submit(body)] = (kind, key, attempt, speculative)
+
+    def finish(kind, key, out):
+        nonlocal shuffles_left, nnz_total
+        if kind == "map":
+            for c in set(key):
+                deps = waiting[c]
+                deps.discard(key)
+                if not deps:                 # last tile for chunk c
+                    submit("shuffle", c)
+        elif kind == "shuffle":
+            shuffles_left -= 1
+            if shuffles_left == 0:           # mirrors all emitted
+                for c in range(nc):
+                    submit("reduce", c)
+        else:                                # reduce: disjoint slices
+            r0, r1 = plan.ranges[key]
+            deg[r0:r1] = out["deg"]
+            nnz_total += out["nnz"]
+        stage_left[kind] -= 1
+
+    def settle(st: _TaskState):
+        # speculation mode defers a winning task's input deletes until no
+        # attempt (winner or loser) can still be reading them
+        if consume or not st.done or st.inflight > 0:
+            return
+        if st.kind == "shuffle":
+            doomed = list(store.keys(f"cand/{st.key}/"))
+        elif st.kind == "reduce":
+            doomed = [f"topt/{st.key}"] + list(store.keys(f"mirror/{st.key}/"))
+        else:
+            return
+        for k in doomed:
+            store.delete(k)
+
+    fatal = None
+    try:
         for (i, j) in tiles:
-            submit("map", (i, j),
-                   lambda i=i, j=j: timed("map", tasks.run_map_task,
-                                          reader, sigma, plan, i, j, store))
-        while futures:
+            submit("map", (i, j))
+        while futures and fatal is None:
             if overlap_pending and shuffles_left == 0:
-                overlap_pending = False          # reduce tail is draining
+                overlap_pending = False      # reduce tail is draining
                 overlap_work()
-            done, _ = wait(list(futures), return_when=FIRST_COMPLETED)
+            done, _ = wait(list(futures), return_when=FIRST_COMPLETED,
+                           timeout=poll)
+            now = time.perf_counter()
             for fut in done:
-                kind, key = futures.pop(fut)
-                out = fut.result()               # propagate task errors
-                if kind == "map":
-                    for c in set(key):
-                        deps = waiting[c]
-                        deps.discard(key)
-                        if not deps:             # last tile for chunk c
-                            submit("shuffle", c, lambda c=c: timed(
-                                "shuffle", tasks.run_shuffle_task,
-                                plan, c, store))
-                elif kind == "shuffle":
-                    shuffles_left -= 1
-                    if shuffles_left == 0:       # mirrors all emitted
-                        for c in range(nc):
-                            submit("reduce", c, lambda c=c: timed(
-                                "reduce", tasks.run_reduce_task,
-                                plan, c, store))
-                else:                            # reduce: disjoint slices
-                    r0, r1 = plan.ranges[key]
-                    deg[r0:r1] = out["deg"]
-                    nnz_total += out["nnz"]
-    if overlap_pending:                          # degenerate tiny jobs
+                kind, key, attempt, speculative = futures.pop(fut)
+                st = tstate[(kind, key)]
+                st.inflight -= 1
+                starts.pop((kind, key, attempt), None)
+                err = fut.exception()
+                if err is None:
+                    if not st.done:          # first completion wins
+                        st.done = True
+                        if speculative:
+                            counters["speculative_won"] += 1
+                        finish(kind, key, fut.result())
+                    # else: the losing duplicate — identical output,
+                    # already superseded; discard
+                elif not st.done:
+                    st.failures += 1
+                    counters["task_failures"] += 1
+                    if st.failures <= plan.max_retries:
+                        counters["retries"] += 1
+                        submit(kind, key, attempt=st.attempts)
+                    else:
+                        fatal = err          # budget exhausted: abort job
+                # a losing attempt's error is moot — the task completed
+                settle(st)
+            if fatal is not None:
+                break
+            if plan.stage_timeout_s is not None:
+                for stage, left in stage_left.items():
+                    t0s = stage_t0.get(stage)
+                    if (t0s is not None and left > 0
+                            and now - t0s > plan.stage_timeout_s):
+                        raise EngineTimeoutError(stage, plan.stage_timeout_s)
+            if speculate:
+                with busy_lock:
+                    meds = {s: statistics.median(w) if len(w) >= 3 else None
+                            for s, w in walls.items()}
+                for kind, key, attempt, spec in list(futures.values()):
+                    st = tstate[(kind, key)]
+                    med = meds[kind]
+                    if st.done or st.backup or spec or med is None:
+                        continue
+                    t0a = starts.get((kind, key, attempt))
+                    if t0a is None:          # queued, not yet running
+                        continue
+                    if now - t0a > plan.speculation_factor * max(med, 1e-3):
+                        st.backup = True     # one backup per task
+                        counters["speculative_launched"] += 1
+                        submit(kind, key, attempt=st.attempts,
+                               speculative=True)
+        if fatal is not None:
+            raise fatal
+    finally:
+        # the first unrecoverable failure cancels every queued task and
+        # joins the running ones — a failed job never leaks attempts that
+        # keep spilling into the store
+        pool.shutdown(wait=True, cancel_futures=True)
+    if not consume:
+        # deferred-GC stragglers: losing attempts that re-put an input
+        # after its consumer settled (all attempts have joined by now)
+        for prefix in ("cand/", "topt/", "mirror/"):
+            for k in list(store.keys(prefix)):
+                store.delete(k)
+    if overlap_pending:                      # degenerate tiny jobs
         overlap_work()
     wall = time.perf_counter() - t_start
     busy_s = sum(busy.values())
@@ -146,6 +308,11 @@ def _schedule_build(reader, sigma, plan: JobPlan, store: ShardStore,
         "map_tasks": len(tiles), "shuffle_tasks": nc, "reduce_tasks": nc,
         "chunks": nc, "chunk_size": plan.chunk_size, "t": plan.t_eff,
         "workers": workers, "prefetch_depth": plan.prefetch_depth,
+        "max_retries": plan.max_retries,
+        "retries": counters["retries"],
+        "task_failures": counters["task_failures"],
+        "speculative_launched": counters["speculative_launched"],
+        "speculative_won": counters["speculative_won"],
         # per-stage numbers are BUSY task-seconds (the stages interleave,
         # so they no longer tile a wall-clock interval); overlap_s is the
         # task-seconds the pool hid inside the build wall
@@ -156,6 +323,26 @@ def _schedule_build(reader, sigma, plan: JobPlan, store: ShardStore,
         "overlap_s": round(max(0.0, busy_s - wall), 4),
     }
     return deg, nnz_total, stats
+
+
+def _install_lineage_recovery(store: ShardStore, reader, sigma,
+                              plan: JobPlan) -> None:
+    """Arm the store's recovery hook with the planner's task lineage: a
+    corrupt or lost spill entry is rebuilt by re-running the math of its
+    producing task (``tasks.recompute_entry`` — bitwise-identical to the
+    original), so a ``get`` mid-eigensolve heals instead of crashing.
+    Installed BEFORE the build so corruption of any intermediate —
+    candidate block, top-t, mirror, CSR shard — recovers too."""
+    def recover(key: str, exc: Exception) -> bool:
+        try:
+            arrays = tasks.recompute_entry(reader, sigma, plan, key)
+        except KeyError:
+            return False                     # no lineage for this key
+        store.put(key, arrays)
+        obs.counter("engine.shard_recovered").inc()
+        return True
+
+    store.recovery = recover
 
 
 def build_graph(reader, plan: JobPlan,
@@ -172,7 +359,10 @@ def build_graph(reader, plan: JobPlan,
     store = store or ShardStore(memory_budget=plan.memory_budget,
                                 spill_dir=plan.spill_dir,
                                 async_spill=plan.async_spill)
+    if plan.faults is not None:
+        store.faults = plan.faults
     sigma = _resolve_sigma(reader, plan)
+    _install_lineage_recovery(store, reader, sigma, plan)
     with obs.span("engine.build", path="ooc", workers=plan.workers,
                   tasks=len(plan.tiles) + 2 * plan.nchunks):
         deg, nnz, stats = _schedule_build(reader, sigma, plan, store,
@@ -252,12 +442,20 @@ def run_job(plan: JobPlan, reader) -> JobResult:
     (bitwise-identical to drawing it after — same key, same shape), and
     the graph's prefetch pool is shut down before returning, so a job
     never strands background threads."""
+    fallback = None
     if plan.path == "fused":
         return _run_fused(plan, reader)
     if plan.path == "auto":         # probe d only when routing needs it
         d = int(np.asarray(reader[0]).shape[1])
         if route_path(plan, d) == "fused":
-            return _run_fused(plan, reader)
+            try:
+                return _run_fused(plan, reader)
+            except Exception as e:
+                # graceful degradation: an auto-routed fused job that
+                # fails falls back to the ooc pipeline (an explicitly
+                # forced path propagates its error instead)
+                obs.counter("engine.path_fallbacks").inc()
+                fallback = f"fused->ooc ({type(e).__name__})"
 
     key = jax.random.PRNGKey(plan.seed)
     _, k_lan, _k_km = jax.random.split(key, 3)
@@ -296,6 +494,8 @@ def run_job(plan: JobPlan, reader) -> JobResult:
                  matrix_passes=block_steps,
                  eigensolve_s=round(sp_eig.duration_s, 4),
                  kmeans_s=round(sp_km.duration_s, 4))
+    if fallback is not None:
+        stats["path_fallback"] = fallback
     obs.absorb_stats("engine", stats)
     graph.close()                   # no stray prefetch threads after a job
     return JobResult(labels=labels, embedding=Y,

@@ -21,14 +21,24 @@ without touching disk), and ``flush()`` / ``close()`` / ``spilled_keys()``
 are the quiescence points where every queued write has completed and the
 budget/stat accounting is exact.
 
-On-disk format (the shard-store contract, see API.md): one
-``<mangled-key>.bin`` per spilled entry — a pickled header listing
+On-disk format v2 (the shard-store contract, see API.md): one
+``<mangled-key>.bin`` per spilled entry — an 8-byte magic, header length,
+payload length and payload CRC32, a pickled header listing
 ``(name, dtype, shape)`` for every array that was ``put``, followed by the
-raw array buffers back to back; keys mangle ``/`` to ``__``.  The format
-replaced ``.npz`` (PR 8): spill/reload is the engine's per-entry hot path
-and the zipfile layer cost ~20x the underlying memcpy on every reload.
-CSR shards use the names ``indptr`` (int64, rows+1), ``indices`` (int32,
-nnz) and ``data`` (float32, nnz).
+raw array buffers back to back; keys mangle ``/`` to ``__``.  Writes are
+**atomic** (tmp file + ``os.replace``) and reads **verified**: a
+truncated or bit-flipped file raises :class:`ShardCorruptionError`
+instead of silently misparsing.  v1 files (no magic; PR 8's unchecked
+layout) still load.  CSR shards use the names ``indptr`` (int64, rows+1),
+``indices`` (int32, nnz) and ``data`` (float32, nnz).
+
+Resilience hooks: ``store.recovery`` — a ``(key, exc) -> bool`` callable
+consulted when a ``get`` hits a corrupt (:class:`ShardCorruptionError`)
+or lost (:class:`ShardLostError`) spill file; the runner installs a
+task-lineage hook that re-runs the producing task (re-``put``-ing the
+entry) and the ``get`` then retries.  ``store.faults`` — an optional
+:class:`~repro.engine.faults.FaultPlan` whose ``on_spill`` hook runs
+after each spill write lands (deterministic corruption injection).
 """
 from __future__ import annotations
 
@@ -38,12 +48,40 @@ import shutil
 import tempfile
 import threading
 import weakref
+import zlib
 from collections import OrderedDict
 from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
-from typing import Any, Dict, Iterator, Optional
+from typing import Any, Callable, Dict, Iterator, Optional
 
 import numpy as np
+
+_MAGIC = b"RSHRDv2\n"                 # 8 bytes; v1 files start with a tiny
+_V2_HEAD = len(_MAGIC) + 8 + 8 + 4    # little-endian header length instead
+
+
+class ShardCorruptionError(ValueError):
+    """A spill file failed verification (bad length or CRC32)."""
+
+    def __init__(self, path: str, reason: str, key: Optional[str] = None):
+        self.path = path
+        self.reason = reason
+        self.key = key
+        super().__init__(f"corrupt spill file {path!r}: {reason}")
+
+
+class ShardLostError(KeyError):
+    """A spilled entry's file vanished from disk (the store still had a
+    record of it) — the typed signal the lineage-recovery hook catches."""
+
+    def __init__(self, key: str, path: str):
+        self.key = key
+        self.path = path
+        super().__init__(key)
+
+    def __str__(self) -> str:
+        return (f"spill file for entry {self.key!r} lost "
+                f"(expected at {self.path!r})")
 
 
 def _nbytes(arrays: Dict[str, np.ndarray]) -> int:
@@ -51,34 +89,80 @@ def _nbytes(arrays: Dict[str, np.ndarray]) -> int:
 
 
 def save_entry(path: str, arrays: Dict[str, np.ndarray]) -> None:
-    """Write ``arrays`` in the store's raw spill format: an 8-byte header
-    length, a pickled ``[(name, dtype.str, shape), ...]`` header, then the
-    contiguous array buffers concatenated in header order."""
+    """Write ``arrays`` in spill format v2: magic, 8-byte header length,
+    8-byte payload length, 4-byte payload CRC32, the pickled
+    ``[(name, dtype.str, shape), ...]`` header, then the contiguous array
+    buffers concatenated in header order.  The write is atomic — a tmp
+    file in the same directory is ``os.replace``d over ``path``, so a
+    crash mid-write can never leave a half-written file under the real
+    name."""
+    bufs = [memoryview(np.ascontiguousarray(a)).cast("B")
+            for a in arrays.values()]
     hdr = pickle.dumps([(k, a.dtype.str, a.shape) for k, a in arrays.items()],
                        protocol=4)
-    with open(path, "wb") as f:
-        f.write(len(hdr).to_bytes(8, "little"))
-        f.write(hdr)
-        for a in arrays.values():
-            f.write(memoryview(np.ascontiguousarray(a)).cast("B"))
+    crc = 0
+    payload_len = 0
+    for b in bufs:
+        crc = zlib.crc32(b, crc)
+        payload_len += len(b)
+    tmp = f"{path}.tmp.{os.getpid()}.{threading.get_ident()}"
+    try:
+        with open(tmp, "wb") as f:
+            f.write(_MAGIC)
+            f.write(len(hdr).to_bytes(8, "little"))
+            f.write(payload_len.to_bytes(8, "little"))
+            f.write((crc & 0xFFFFFFFF).to_bytes(4, "little"))
+            f.write(hdr)
+            for b in bufs:
+                f.write(b)
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.remove(tmp)
+
+
+def _parse_entries(buf: bytes, hdr_bytes: bytes, off: int,
+                   path: str) -> Dict[str, np.ndarray]:
+    try:
+        entries = pickle.loads(hdr_bytes)
+    except Exception as e:
+        raise ShardCorruptionError(path, f"unreadable header ({e})") from e
+    out: Dict[str, np.ndarray] = {}
+    for name, dt, shape in entries:
+        count = int(np.prod(shape, dtype=np.int64))
+        a = np.frombuffer(buf, dtype=np.dtype(dt), count=count,
+                          offset=off).reshape(shape)
+        out[name] = a
+        off += a.nbytes
+    return out
 
 
 def load_entry(path: str) -> Dict[str, np.ndarray]:
     """Read a :func:`save_entry` file back into {name: ndarray}.  Arrays
     are zero-copy (read-only) views over one contiguous buffer — store
-    consumers treat entries as immutable (a ``put`` replaces wholesale)."""
+    consumers treat entries as immutable (a ``put`` replaces wholesale).
+
+    v2 files are verified (total length, then payload CRC32) and raise
+    :class:`ShardCorruptionError` on any mismatch; legacy v1 files (no
+    magic) take the old unchecked parse for compatibility."""
     with open(path, "rb") as f:
         buf = f.read()
-    hlen = int.from_bytes(buf[:8], "little")
-    out: Dict[str, np.ndarray] = {}
-    off = 8 + hlen
-    for name, dt, shape in pickle.loads(buf[8:8 + hlen]):
-        a = np.frombuffer(buf, dtype=np.dtype(dt),
-                          count=int(np.prod(shape, dtype=np.int64)),
-                          offset=off).reshape(shape)
-        out[name] = a
-        off += a.nbytes
-    return out
+    if buf[:len(_MAGIC)] != _MAGIC:               # legacy v1 layout
+        hlen = int.from_bytes(buf[:8], "little")
+        if 8 + hlen > len(buf):
+            raise ShardCorruptionError(path, "truncated v1 header")
+        return _parse_entries(buf, buf[8:8 + hlen], 8 + hlen, path)
+    hlen = int.from_bytes(buf[8:16], "little")
+    plen = int.from_bytes(buf[16:24], "little")
+    crc = int.from_bytes(buf[24:28], "little")
+    off = _V2_HEAD + hlen
+    if len(buf) != off + plen:
+        raise ShardCorruptionError(
+            path, f"bad length (expected {off + plen} bytes, "
+                  f"found {len(buf)})")
+    if zlib.crc32(buf[off:]) & 0xFFFFFFFF != crc:
+        raise ShardCorruptionError(path, "payload CRC32 mismatch")
+    return _parse_entries(buf, buf[28:28 + hlen], off, path)
 
 
 @dataclass
@@ -114,10 +198,20 @@ class ShardStore:
         self._writer_pool: Optional[ThreadPoolExecutor] = None
         self._writer_finalizer = None
         self.ram_bytes = 0
+        # resilience hooks (see module docstring): the runner installs a
+        # lineage-recovery callable; tests/benchmarks install a FaultPlan
+        self.recovery: Optional[Callable[[str, Exception], bool]] = None
+        self.faults: Any = None
         self.stats = {
             "puts": 0, "gets": 0, "spills": 0, "drops": 0, "loads": 0,
             "spill_joins": 0, "bytes_spilled": 0, "peak_ram_bytes": 0,
+            "recoveries": 0,
         }
+
+    def _post_spill(self, key: str, path: str) -> None:
+        """Fault-injection hook point: runs after a spill write lands."""
+        if self.faults is not None:
+            self.faults.on_spill(key, path)
 
     # -- background writer ---------------------------------------------------
 
@@ -137,6 +231,7 @@ class ShardStore:
         """Writer-thread body: the file write runs outside the lock; the
         commit (or stale-write cleanup) takes it briefly."""
         save_entry(path, arrays)
+        self._post_spill(key, path)
         with self._lock:
             ent = self._spilling.get(key)
             if ent is not None and ent.seq == seq:
@@ -228,7 +323,8 @@ class ShardStore:
             self._enforce_budget()
         self._throttle_spills()
 
-    def get(self, key: str) -> Dict[str, np.ndarray]:
+    def get(self, key: str, *,
+            _recovered: bool = False) -> Dict[str, np.ndarray]:
         with self._lock:
             self.stats["gets"] += 1
             if key in self._ram:
@@ -254,9 +350,8 @@ class ShardStore:
         # different spilled shards in parallel
         try:
             arrays = load_entry(path)
-        except FileNotFoundError:
-            raise KeyError(f"shard store has no entry {key!r} "
-                           f"(deleted concurrently)") from None
+        except (FileNotFoundError, ShardCorruptionError) as e:
+            return self._failed_load(key, path, e, _recovered)
         with self._lock:
             self.stats["loads"] += 1
             if key in self._ram:                 # a concurrent get() won
@@ -268,6 +363,39 @@ class ShardStore:
                                                self.ram_bytes)
             self._enforce_budget(keep=key)
         return arrays
+
+    def _failed_load(self, key: str, path: str, err: Exception,
+                     already_recovered: bool) -> Dict[str, np.ndarray]:
+        """A disk load came back corrupt or file-not-found.  Distinguish
+        the benign races (a concurrent put/delete of the same key) from
+        genuine data loss; on loss, consult the lineage-recovery hook —
+        a successful hook re-``put``s the entry and the get retries."""
+        retry = False
+        with self._lock:
+            if key in self._ram:                 # concurrent re-put won
+                self._ram.move_to_end(key)
+                return self._ram[key]
+            if key in self._spilling:            # re-put/spill in flight
+                retry = True
+            elif key not in self._disk:          # deleted concurrently
+                raise KeyError(f"shard store has no entry {key!r} "
+                               f"(deleted concurrently)") from None
+        if retry:
+            return self.get(key, _recovered=already_recovered)
+        if isinstance(err, ShardCorruptionError):
+            err.key = key
+            exc: Exception = err
+        else:
+            exc = ShardLostError(key, path)
+        hook = self.recovery
+        if already_recovered or hook is None or not hook(key, exc):
+            # unrecoverable: leave the store's record (and any corrupt
+            # file) in place so retries of the consuming task fail the
+            # same way instead of silently folding without this entry
+            raise exc
+        with self._lock:
+            self.stats["recoveries"] += 1
+        return self.get(key, _recovered=True)
 
     def delete(self, key: str) -> None:
         with self._lock:
@@ -313,6 +441,7 @@ class ShardStore:
         path = self._path(key)
         if not self.async_spill:
             save_entry(path, arrays)
+            self._post_spill(key, path)
             self._disk[key] = path
             return
         self._seq += 1

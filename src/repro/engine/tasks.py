@@ -20,16 +20,24 @@ Stage layout (the paper's Hadoop phases, chunk-granular):
 All intermediates flow through the store, so they count against the memory
 budget and spill exactly like Hadoop's map-side spill files.  Map tasks
 are pure (re-running one just overwrites its candidate blocks); shuffle
-and reduce tasks *consume* their inputs to keep the working set bounded,
-so re-executing one after a failure means re-running its producing stage
-for that row range first — the same recovery granularity Hadoop gets by
-re-fetching map output.
+and reduce tasks *consume* their inputs to keep the working set bounded
+(``consume=False`` — used when speculative backups may run a duplicate
+attempt — defers the deletes to the scheduler), so re-executing one after
+a failure means re-running its producing stage for that row range first —
+the same recovery granularity Hadoop gets by re-fetching map output.
+
+The ``recompute_*`` functions at the bottom are that recovery path: they
+re-derive any store entry directly from the reader, replaying the exact
+fold order of the original build (candidate keys in sorted-string order,
+mirrors after the own top-t), so a recovered entry is **bitwise
+identical** to the one it replaces — ``deg`` and the eigensolve stay
+valid mid-flight.
 """
 from __future__ import annotations
 
 import numpy as np
 
-from repro.engine.plan import JobPlan
+from repro.engine.plan import JobPlan, producer_of
 from repro.engine.store import ShardStore
 from repro.kernels import ops as kops
 from repro.kernels import topt
@@ -59,37 +67,38 @@ def run_map_task(reader, sigma, plan: JobPlan, i: int, j: int,
                                         "cols": cols_t.astype(np.int32)})
 
 
-def run_shuffle_task(plan: JobPlan, c: int, store: ShardStore) -> None:
-    """Merge row range ``c``'s candidate blocks into its final top-t and
-    emit the mirror triplets that symmetrize the graph."""
-    # fold candidate blocks one at a time (running width <= 2t): the
-    # shuffle working set stays O(chunk * t) under any n, and each block
-    # is dropped from the store the moment it is folded — concatenating
-    # all blocks first would pin an O(n * t) buffer regardless of the
-    # memory budget
+def _fold_topt(blocks, plan: JobPlan):
+    """Fold ``(vals, cols)`` candidate blocks IN ITERATION ORDER into the
+    final per-row top-t: running width stays <= 2t, and the final
+    ``merge_topt`` always runs (it canonicalizes the single-block case).
+    The fold order is part of the bitwise contract — replays must present
+    blocks in the same (sorted-string key) order."""
     vals = cols = None
-    for k in list(store.keys(f"cand/{c}/")):
-        b = store.get(k)
+    for bv, bc in blocks:
         if vals is None:
-            vals, cols = b["vals"], b["cols"]
+            vals, cols = bv, bc
         else:
-            vals = np.concatenate([vals, b["vals"]], axis=1)
-            cols = np.concatenate([cols, b["cols"]], axis=1)
+            vals = np.concatenate([vals, bv], axis=1)
+            cols = np.concatenate([cols, bc], axis=1)
             vals, cols = topt.merge_topt(vals, cols, plan.t_eff)
-        store.delete(k)
-    vals, cols = topt.merge_topt(vals, cols, plan.t_eff)
+    return topt.merge_topt(vals, cols, plan.t_eff)
 
+
+def _topt_triplets(vals, cols, plan: JobPlan, c: int):
+    """Flatten a folded top-t block to kept (rows, cols, vals) triplets."""
     r0, r1 = plan.ranges[c]
     rows = np.repeat(np.arange(r0, r1, dtype=np.int32), vals.shape[1])
     cols = cols.reshape(-1)
     vals = vals.reshape(-1)
     keep = cols >= 0                      # drop the ragged-tile sentinels
-    rows, cols, vals = rows[keep], cols[keep], vals[keep]
-    store.put(f"topt/{c}", {"rows": rows, "cols": cols,
-                            "vals": vals.astype(np.float32)})
+    return rows[keep], cols[keep], vals[keep]
 
-    # Symmetrization shuffle: ship each kept entry to its column's row range
-    # as a transposed triplet (max-merged there by the reduce task).
+
+def _mirror_groups(rows, cols, vals, plan: JobPlan):
+    """The symmetrization shuffle's destination grouping: each kept entry
+    shipped to its column's row range as a transposed triplet.  Returns
+    {dest_chunk: (m_rows, m_cols, m_vals)} in the store's mirror-block
+    layout."""
     dest = _chunk_of(cols, plan)
     order = np.argsort(dest, kind="stable")
     rows, cols, vals, dest = rows[order], cols[order], vals[order], dest[order]
@@ -97,10 +106,38 @@ def run_shuffle_task(plan: JobPlan, c: int, store: ShardStore) -> None:
     dests = dest[np.r_[0, bounds]] if len(dest) else np.empty(0, np.int64)
     groups = zip(np.split(cols, bounds), np.split(rows, bounds),
                  np.split(vals, bounds))
-    for (m_rows, m_cols, m_vals), d in zip(groups, dests):
-        store.put(f"mirror/{int(d)}/{c}",
-                  {"rows": m_rows, "cols": m_cols,
-                   "vals": m_vals.astype(np.float32)})
+    return {int(d): (m_rows, m_cols, m_vals.astype(np.float32))
+            for (m_rows, m_cols, m_vals), d in zip(groups, dests)}
+
+
+def run_shuffle_task(plan: JobPlan, c: int, store: ShardStore,
+                     consume: bool = True) -> None:
+    """Merge row range ``c``'s candidate blocks into its final top-t and
+    emit the mirror triplets that symmetrize the graph.
+
+    ``consume=True`` drops each candidate block the moment it is folded
+    (bounded working set); the scheduler passes ``False`` when a
+    speculative duplicate of this task may still be reading the inputs,
+    and deletes them itself once every attempt has settled."""
+    def blocks():
+        # fold candidate blocks one at a time (running width <= 2t): the
+        # shuffle working set stays O(chunk * t) under any n —
+        # concatenating all blocks first would pin an O(n * t) buffer
+        # regardless of the memory budget
+        for k in list(store.keys(f"cand/{c}/")):
+            b = store.get(k)
+            yield b["vals"], b["cols"]
+            if consume:
+                store.delete(k)
+
+    vals, cols = _fold_topt(blocks(), plan)
+    rows, cols, vals = _topt_triplets(vals, cols, plan, c)
+    store.put(f"topt/{c}", {"rows": rows, "cols": cols,
+                            "vals": vals.astype(np.float32)})
+    for d, (m_rows, m_cols, m_vals) in sorted(
+            _mirror_groups(rows, cols, vals, plan).items()):
+        store.put(f"mirror/{d}/{c}",
+                  {"rows": m_rows, "cols": m_cols, "vals": m_vals})
 
 
 def _dedupe_max(rows: np.ndarray, cols: np.ndarray, vals: np.ndarray):
@@ -116,26 +153,20 @@ def _dedupe_max(rows: np.ndarray, cols: np.ndarray, vals: np.ndarray):
     return rows, cols, vals
 
 
-def run_reduce_task(plan: JobPlan, c: int, store: ShardStore) -> dict:
-    """Max-merge row range ``c``'s top-t with all incoming mirrors into a
-    sorted CSR shard ``shard/<c>``.  Returns {"nnz": ..., "deg": (rows,)}.
-
-    Mirrors are folded one block at a time (dedupe after each) so the
-    resident triplet set never exceeds the final shard size plus one
-    block, even when data skew routes most mirrors to one row range.
-    """
+def _fold_shard(block_triplets, plan: JobPlan, c: int):
+    """Fold (rows, cols, vals) triplet blocks in iteration order — dedupe
+    (max-merge) after every block — and build the CSR shard arrays.
+    Returns (arrays, deg, nnz)."""
     r0, r1 = plan.ranges[c]
     nrows = r1 - r0
     rows = cols = vals = None
-    for k in [f"topt/{c}"] + list(store.keys(f"mirror/{c}/")):
-        b = store.get(k)
+    for b_rows, b_cols, b_vals in block_triplets:
         if rows is None:
-            rows, cols, vals = b["rows"], b["cols"], b["vals"]
+            rows, cols, vals = b_rows, b_cols, b_vals
         else:
-            rows = np.concatenate([rows, b["rows"]])
-            cols = np.concatenate([cols, b["cols"]])
-            vals = np.concatenate([vals, b["vals"]])
-        store.delete(k)
+            rows = np.concatenate([rows, b_rows])
+            cols = np.concatenate([cols, b_cols])
+            vals = np.concatenate([vals, b_vals])
         rows, cols, vals = _dedupe_max(rows, cols, vals)
 
     rows_local = rows - r0
@@ -143,7 +174,108 @@ def run_reduce_task(plan: JobPlan, c: int, store: ShardStore) -> dict:
     indptr = np.zeros(nrows + 1, np.int64)
     np.cumsum(counts, out=indptr[1:])
     data = vals.astype(np.float32)
-    store.put(f"shard/{c}", {"indptr": indptr, "indices": cols.astype(np.int32),
-                             "data": data})
+    arrays = {"indptr": indptr, "indices": cols.astype(np.int32),
+              "data": data}
     deg = np.bincount(rows_local, weights=data, minlength=nrows)
-    return {"nnz": int(len(data)), "deg": deg.astype(np.float32)}
+    return arrays, deg.astype(np.float32), int(len(data))
+
+
+def run_reduce_task(plan: JobPlan, c: int, store: ShardStore,
+                    consume: bool = True) -> dict:
+    """Max-merge row range ``c``'s top-t with all incoming mirrors into a
+    sorted CSR shard ``shard/<c>``.  Returns {"nnz": ..., "deg": (rows,)}.
+
+    Mirrors are folded one block at a time (dedupe after each) so the
+    resident triplet set never exceeds the final shard size plus one
+    block, even when data skew routes most mirrors to one row range.
+    ``consume=False`` defers input deletes to the scheduler (speculative
+    duplicates may still be reading them).
+    """
+    def blocks():
+        for k in [f"topt/{c}"] + list(store.keys(f"mirror/{c}/")):
+            b = store.get(k)
+            yield b["rows"], b["cols"], b["vals"]
+            if consume:
+                store.delete(k)
+
+    arrays, deg, nnz = _fold_shard(blocks(), plan, c)
+    store.put(f"shard/{c}", arrays)
+    return {"nnz": nnz, "deg": deg}
+
+
+# -- lineage recovery: recompute any store entry from the reader -------------
+
+def _candidate_block(reader, sigma, plan: JobPlan, c: int, i: int, j: int):
+    """Bitwise replay of the candidate block :func:`run_map_task` emits at
+    ``cand/<c>/<i>-<j>`` (``c`` is ``i`` or ``j``)."""
+    t = plan.t_eff
+    xi = np.asarray(reader[i])
+    xj = xi if i == j else np.asarray(reader[j])
+    tile = kops.rbf_similarity(xi, xj, sigma)
+    if c == i:
+        vals, cols = topt.tile_topt(tile, plan.ranges[j][0], t)
+    else:
+        vals, cols = topt.tile_topt(tile.T, plan.ranges[i][0], t)
+    return vals, cols.astype(np.int32)
+
+
+def recompute_topt_triplets(reader, sigma, plan: JobPlan, c: int):
+    """Re-derive ``topt/<c>``'s kept (rows, cols, vals) triplets straight
+    from the reader, replaying the shuffle's exact fold order (candidate
+    keys in sorted-STRING order, the order ``store.keys`` yields them)."""
+    nc = plan.nchunks
+    keyed = sorted((f"cand/{c}/{min(c, o)}-{max(c, o)}",
+                    min(c, o), max(c, o)) for o in range(nc))
+    blocks = (_candidate_block(reader, sigma, plan, c, i, j)
+              for _, i, j in keyed)
+    vals, cols = _fold_topt(blocks, plan)
+    return _topt_triplets(vals, cols, plan, c)
+
+
+def recompute_shard(reader, sigma, plan: JobPlan, c: int):
+    """Lineage recovery for ``shard/<c>``: replay the map + shuffle math
+    of every contributing row range and the reduce fold.  Costs about two
+    map stages of compute (each chunk's top-t is re-derived to learn what
+    it mirrored into ``c``) but touches none of the consumed
+    intermediates — and the result is bitwise-identical to the original
+    shard, so ``deg`` and an in-flight eigensolve stay valid.  Returns
+    the shard's {indptr, indices, data} arrays."""
+    own = None
+    mirrors = {}
+    for s in range(plan.nchunks):
+        tr = recompute_topt_triplets(reader, sigma, plan, s)
+        if s == c:
+            own = (tr[0], tr[1], tr[2].astype(np.float32))
+        g = _mirror_groups(*tr, plan)
+        if c in g:
+            mirrors[s] = g[c]
+    ordered = sorted(mirrors.items(), key=lambda kv: f"mirror/{c}/{kv[0]}")
+    arrays, _deg, _nnz = _fold_shard(
+        [own] + [m for _, m in ordered], plan, c)
+    return arrays
+
+
+def recompute_entry(reader, sigma, plan: JobPlan, key: str):
+    """Rebuild ANY store entry from its lineage (see
+    :func:`repro.engine.plan.producer_of`).  Used by the runner's
+    store-recovery hook when a spill file is corrupt or lost."""
+    stage, tkey = producer_of(key)
+    parts = key.split("/")
+    if stage == "map":
+        i, j = tkey
+        vals, cols = _candidate_block(reader, sigma, plan,
+                                      int(parts[1]), i, j)
+        return {"vals": vals, "cols": cols}
+    if parts[0] == "topt":
+        rows, cols, vals = recompute_topt_triplets(reader, sigma, plan, tkey)
+        return {"rows": rows, "cols": cols, "vals": vals.astype(np.float32)}
+    if parts[0] == "mirror":
+        d = int(parts[1])
+        tr = recompute_topt_triplets(reader, sigma, plan, tkey)
+        groups = _mirror_groups(*tr, plan)
+        if d not in groups:
+            raise KeyError(f"lineage of {key!r} produced no block for "
+                           f"chunk {d} (entry never existed)")
+        m_rows, m_cols, m_vals = groups[d]
+        return {"rows": m_rows, "cols": m_cols, "vals": m_vals}
+    return recompute_shard(reader, sigma, plan, tkey)

@@ -18,6 +18,18 @@ set — unfilled rows ride along as padding and are discarded on scatter.
 With an existing ``--model-dir`` the fit step is skipped: the service
 loads and serves (fit once, serve anywhere — including a different device
 count, the checkpoint is elastic).
+
+Admission control (the resilience contract, see API.md "Fault
+tolerance"): the server optionally bounds its pending-row backlog
+(``max_pending_rows``) — a submit that would blow the bound is *shed*
+with a typed :class:`~repro.cluster.serving.QueueFullError` instead of
+growing the queue without limit — and every request may carry a deadline
+(``deadline_s``, or the server-wide ``default_deadline_s``): requests
+that sit past it are *expired* with a typed
+:class:`~repro.cluster.serving.DeadlineExceededError` and their
+remaining rows never occupy batch slots.  ``serve.queue_depth`` (gauge),
+``serve.shed`` and ``serve.expired`` (counters) track it in the obs
+registry.
 """
 from __future__ import annotations
 
@@ -31,6 +43,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import obs
+from repro.cluster.serving import DeadlineExceededError, QueueFullError
 
 
 @dataclass
@@ -41,6 +54,9 @@ class PredictRequest:
     t_submit: float = 0.0
     t_done: float = 0.0
     _filled: int = field(default=0, repr=False)   # rows already served
+    deadline_s: float | None = None          # per-request; None = server's
+    status: str = "pending"                  # pending|active|ok|shed|expired
+    error: str | None = None                 # typed-rejection message
 
     @property
     def latency_s(self) -> float:
@@ -52,18 +68,30 @@ class PredictRequest:
 
 
 class ClusterServer:
-    """Static-shape batched predict: one (B, d) buffer, liveness mask."""
+    """Static-shape batched predict: one (B, d) buffer, liveness mask.
 
-    def __init__(self, est, batch_rows: int = 256):
+    ``max_pending_rows`` bounds the admission queue (None = unbounded,
+    the classic behaviour); ``default_deadline_s`` applies to requests
+    that carry no ``deadline_s`` of their own (None = no deadline)."""
+
+    def __init__(self, est, batch_rows: int = 256,
+                 max_pending_rows: int | None = None,
+                 default_deadline_s: float | None = None):
         est._check_fitted()
         if est._train_x is None:
             raise ValueError("serving needs a feature-space model "
                              "(precomputed-affinity fits cannot predict)")
+        if max_pending_rows is not None and max_pending_rows <= 0:
+            raise ValueError(f"max_pending_rows must be positive or None, "
+                             f"got {max_pending_rows}")
         self.est = est
         self.B = int(batch_rows)
         self.d = int(est._train_x.shape[1])
+        self.max_pending_rows = max_pending_rows
+        self.default_deadline_s = default_deadline_s
         self.steps = 0
-        self.stats = {"batches": 0, "rows_live": 0, "rows_padded": 0}
+        self.stats = {"batches": 0, "rows_live": 0, "rows_padded": 0,
+                      "shed": 0, "expired": 0}
         # the SHARED histogram type backs both the live metrics and
         # summarize()'s p50/p95/p99 (exact nearest-rank at service scale)
         self.batch_ms = obs.histogram("serve.batch_ms")
@@ -72,6 +100,59 @@ class ClusterServer:
         # est.predict routes (dense/fused) on static metadata, so the
         # whole embed+assign pipeline traces into a single computation
         self._predict = jax.jit(lambda xb: est.predict(xb))
+
+    # -- admission control ---------------------------------------------------
+
+    @staticmethod
+    def pending_rows(active: deque) -> int:
+        """Rows admitted but not yet served (the backlog the admission
+        bound and the queue-depth gauge measure)."""
+        return sum(len(r.points) - r._filled for r in active)
+
+    def admit(self, req: PredictRequest, active: deque,
+              now: float | None = None) -> bool:
+        """Admit ``req`` into the active window, or shed it with a typed
+        rejection when the pending-row backlog is at its bound.  A
+        request larger than the whole bound is still admitted when the
+        queue is empty (it would otherwise be undeliverable) — it streams
+        through B rows per step like any oversized request."""
+        now = time.perf_counter() if now is None else now
+        if req.t_submit == 0.0:
+            req.t_submit = now
+        rows = len(req.points)
+        if self.max_pending_rows is not None:
+            pending = self.pending_rows(active)
+            if pending > 0 and pending + rows > self.max_pending_rows:
+                err = QueueFullError(req.rid, rows, pending,
+                                     self.max_pending_rows)
+                req.status, req.error, req.t_done = err.status, str(err), now
+                self.stats["shed"] += 1
+                obs.counter("serve.shed").inc()
+                return False
+        req.status = "active"
+        active.append(req)
+        obs.gauge("serve.queue_depth").set(self.pending_rows(active))
+        return True
+
+    def _expire(self, active: deque, now: float) -> int:
+        """Drop admitted requests that sat past their deadline; their
+        remaining rows never occupy batch slots."""
+        expired = 0
+        for req in list(active):
+            ddl = (req.deadline_s if req.deadline_s is not None
+                   else self.default_deadline_s)
+            if ddl is None or req.done:
+                continue
+            waited = now - req.t_submit
+            if waited > ddl:
+                err = DeadlineExceededError(req.rid, ddl, waited)
+                req.status, req.error, req.t_done = err.status, str(err), now
+                active.remove(req)
+                expired += 1
+        if expired:
+            self.stats["expired"] += expired
+            obs.counter("serve.expired").inc(expired)
+        return expired
 
     def _pack(self, active: deque) -> tuple[np.ndarray, np.ndarray, list]:
         """Fill the (B, d) buffer from the active queue (FIFO, splitting
@@ -95,7 +176,9 @@ class ClusterServer:
 
     def step(self, active: deque) -> int:
         """One static-shape predict over the packed batch; scatters labels
-        back and retires completed requests.  Returns rows served."""
+        back and retires completed requests (expiring any that outlived
+        their deadline first).  Returns rows served."""
+        self._expire(active, time.perf_counter())
         buf, mask, placed = self._pack(active)
         if not placed:
             return 0
@@ -111,9 +194,11 @@ class ClusterServer:
                 req._filled += take
                 if req.done:
                     req.t_done = now
+                    req.status = "ok"
                     self.request_ms.observe(1e3 * req.latency_s)
             while active and active[0].done:
                 active.popleft()
+            obs.gauge("serve.queue_depth").set(self.pending_rows(active))
             live = int(mask.sum())
             sp.set(rows_live=live)
         self.steps += 1
@@ -129,17 +214,22 @@ class ClusterServer:
         return live
 
     def run(self, queue: list[PredictRequest]) -> list[PredictRequest]:
-        """Serve every request to completion (requests enter the active
-        window in arrival order; the window drains front-first, so a big
-        request streams through B rows per step without starving the
-        batch — trailing slack is refilled from the queue)."""
+        """Serve every request that survives admission to completion
+        (requests enter the active window in arrival order; the window
+        drains front-first, so a big request streams through B rows per
+        step without starving the batch — trailing slack is refilled from
+        the queue).  Shed and expired requests come back with their typed
+        status/``error`` set instead of labels."""
         t0 = time.perf_counter()
+        active: deque = deque()
         for req in queue:
             req.t_submit = t0
             if len(req.points) == 0:             # degenerate: nothing to do
                 req.labels = np.empty((0,), np.int32)
                 req.t_done = t0
-        active = deque(r for r in queue if not r.done)
+                req.status = "ok"
+                continue
+            self.admit(req, active, now=t0)
         while active:
             self.step(active)
         return list(queue)
@@ -148,19 +238,24 @@ class ClusterServer:
 def summarize(done: list[PredictRequest], wall_s: float) -> dict:
     # the shared histogram type does the percentile math: exact
     # nearest-rank (p50 of [a, b] is a; p99 of n=1 is that sample —
-    # no len//2 off-by-one on small n)
+    # no len//2 off-by-one on small n).  Latency percentiles cover
+    # COMPLETED requests only; shed/expired are counted separately.
+    ok = [r for r in done if r.done]
     hist = obs.Histogram("serve.summary_latency_ms")
-    for r in done:
+    for r in ok:
         hist.observe(1e3 * r.latency_s)
-    total = sum(len(r.points) for r in done)
+    total = sum(len(r.points) for r in ok)
     return {
         "requests": len(done),
+        "completed": len(ok),
+        "shed": sum(r.status == "shed" for r in done),
+        "expired": sum(r.status == "expired" for r in done),
         "points": total,
         "points_per_s": total / max(wall_s, 1e-9),
         "latency_p50_ms": hist.percentile(50),
         "latency_p95_ms": hist.percentile(95),
         "latency_p99_ms": hist.percentile(99),
-        "latency_max_ms": 1e3 * max((r.latency_s for r in done),
+        "latency_max_ms": 1e3 * max((r.latency_s for r in ok),
                                     default=0.0),
     }
 
@@ -186,6 +281,13 @@ def main(argv=None):
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--points-per-request", type=int, default=100)
     ap.add_argument("--batch-rows", type=int, default=256)
+    ap.add_argument("--max-pending-rows", type=int, default=None,
+                    help="bounded admission queue: shed requests that "
+                         "would push the pending backlog past this many "
+                         "rows (default: unbounded)")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="server-wide request deadline; requests that sit "
+                         "past it are expired with a typed rejection")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--trace-out", default=None, metavar="FILE.json",
                     help="write a Chrome-trace of the run (chrome://tracing)")
@@ -225,7 +327,9 @@ def main(argv=None):
             rid=rid, points=(train[idx]
                              + 0.05 * rng.randn(m, d)).astype(np.float32)))
 
-    srv = ClusterServer(est, batch_rows=args.batch_rows)
+    srv = ClusterServer(est, batch_rows=args.batch_rows,
+                        max_pending_rows=args.max_pending_rows,
+                        default_deadline_s=args.deadline_s)
     t0 = time.perf_counter()
     done = srv.run(queue)
     wall = time.perf_counter() - t0
@@ -233,17 +337,21 @@ def main(argv=None):
     fill = srv.stats["rows_live"] / max(
         srv.stats["rows_live"] + srv.stats["rows_padded"], 1)
     path = est.info_.get("transform", {}).get("path", "n/a")
-    print(f"[cluster_serve] {s['requests']} requests, {s['points']} points, "
+    print(f"[cluster_serve] {s['requests']} requests "
+          f"({s['completed']} ok, {s['shed']} shed, {s['expired']} "
+          f"expired), {s['points']} points, "
           f"{srv.steps} batch steps ({fill:.0%} fill), {wall:.2f}s "
           f"({s['points_per_s']:.0f} pts/s, "
           f"p50={s['latency_p50_ms']:.0f}ms p95={s['latency_p95_ms']:.0f}ms "
           f"p99={s['latency_p99_ms']:.0f}ms max={s['latency_max_ms']:.0f}ms) "
           f"path={path}")
     print(f"[obs] serve wall={wall:.3f}s batches={srv.stats['batches']} "
-          f"fill={fill:.0%} request_p99_ms={s['latency_p99_ms']:.1f}")
+          f"fill={fill:.0%} request_p99_ms={s['latency_p99_ms']:.1f} "
+          f"shed={s['shed']} expired={s['expired']}")
     obs.write_artifacts(args.trace_out, args.metrics_out)
-    assert all(r.done for r in done)
-    assert all(len(r.labels) == len(r.points) for r in done)
+    assert all(r.done for r in done
+               if r.status not in ("shed", "expired"))
+    assert all(len(r.labels) == len(r.points) for r in done if r.done)
 
 
 if __name__ == "__main__":

@@ -73,6 +73,22 @@ def main(argv=None):
                     help="engine shard readahead window: how many upcoming "
                          "CSR shards the streaming matmat fetches "
                          "concurrently")
+    ap.add_argument("--max-retries", type=int, default=2,
+                    help="engine per-task retry budget before the build "
+                         "aborts (Hadoop-style task attempts)")
+    ap.add_argument("--speculation-factor", type=float, default=0.0,
+                    help="launch a speculative backup attempt once a task "
+                         "runs this many times longer than the running "
+                         "median (0 disables; first completion wins)")
+    ap.add_argument("--stage-timeout-s", type=float, default=None,
+                    help="engine per-stage wall-clock deadline; on expiry "
+                         "the build raises EngineTimeoutError and the "
+                         "affinity falls back to the in-memory knn-topt path")
+    ap.add_argument("--chaos", default=None, metavar="JSON",
+                    help="deterministic fault-injection plan for resilience "
+                         "drills, e.g. '{\"fail\": [[\"map\", \"0-0\", 0]], "
+                         "\"corrupt\": {\"shard/0\": \"bitflip\"}}' "
+                         "(see repro.engine.FaultPlan.from_spec)")
     ap.add_argument("--lanczos-steps", type=int, default=48,
                     help="target Krylov dimension (block solvers run "
                          "ceil(steps / block-size) block steps)")
@@ -103,6 +119,11 @@ def main(argv=None):
         import json
         schedule = json.loads(schedule)   # inline Schedule-field object
 
+    faults = None
+    if args.chaos:
+        from repro import engine
+        faults = engine.FaultPlan.from_spec(args.chaos)
+
     mesh = mesh_utils.local_mesh("rows")
     mgr = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
     est = SpectralClustering(
@@ -114,6 +135,9 @@ def main(argv=None):
         chunk_size=args.chunk_size,
         memory_budget=args.memory_budget, spill_dir=args.spill_dir,
         workers=args.workers, prefetch_depth=args.prefetch_depth,
+        max_retries=args.max_retries,
+        speculation_factor=args.speculation_factor,
+        stage_timeout_s=args.stage_timeout_s, faults=faults,
         mesh=mesh)
 
     t0 = time.perf_counter()
@@ -158,6 +182,14 @@ def main(argv=None):
                   f"build_wall_s={eng['build_wall_s']} "
                   f"overlap_s={eng['overlap_s']} "
                   f"spill_joins={eng['store_spill_joins']}")
+        print(f"[obs] engine.retries={eng.get('retries', 0)} "
+              f"engine.task_failures={eng.get('task_failures', 0)} "
+              f"engine.shard_recovered={eng.get('store_recoveries', 0)} "
+              f"engine.speculative_launched="
+              f"{eng.get('speculative_launched', 0)} "
+              f"engine.speculative_won={eng.get('speculative_won', 0)}")
+    if "affinity_fallback" in est.info_:
+        print(f"[engine] fallback: {est.info_['affinity_fallback']}")
     elif eng and "bytes_streamed" in eng:  # the fused matrix-free affinity
         print(f"[fused] compute_dtype={eng['compute_dtype']} "
               f"passes={eng['matrix_passes']} "

@@ -1,0 +1,365 @@
+"""Fault tolerance (PR 9): retry & speculation, checksummed spills with
+lineage recovery, deterministic fault injection, serve admission control.
+
+The load-bearing contract is *bitwise determinism under faults*: any
+FaultPlan whose per-task failure count stays within the retry budget must
+yield the exact same graph (degrees, dense form) and the same labels as
+the fault-free build — recovery is invisible to the numerics.
+"""
+from __future__ import annotations
+
+import os
+import pickle
+import threading
+from collections import deque
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro import engine, obs
+from repro.cluster import SpectralClustering, ari
+from repro.cluster.serving import DeadlineExceededError, QueueFullError
+from repro.data import synthetic
+from repro.data.chunked import ArrayChunks
+from repro.engine.faults import FaultPlan, InjectedFault, task_key
+from repro.engine.plan import JobPlan, producer_of
+from repro.engine.store import (ShardCorruptionError, ShardLostError,
+                                ShardStore, load_entry, save_entry)
+from repro.launch.cluster_serve import ClusterServer, PredictRequest, summarize
+
+
+# ---------------------------------------------------------------------------
+# spill format v2: atomic writes, verification, legacy compat
+# ---------------------------------------------------------------------------
+
+def _arrays(seed=0):
+    rng = np.random.RandomState(seed)
+    return {"x": rng.randn(37, 3).astype(np.float32),
+            "idx": np.arange(11, dtype=np.int64)}
+
+
+def test_save_entry_roundtrip_and_no_tmp_litter(tmp_path):
+    path = str(tmp_path / "e.bin")
+    arrays = _arrays()
+    save_entry(path, arrays)
+    got = load_entry(path)
+    for name, a in arrays.items():
+        np.testing.assert_array_equal(got[name], a)
+    # the atomic-write protocol must not leave tmp files behind
+    assert [f for f in os.listdir(tmp_path) if ".tmp." in f] == []
+
+
+@pytest.mark.parametrize("mode", ["truncate", "bitflip"])
+def test_corruption_is_detected(tmp_path, mode):
+    path = str(tmp_path / "e.bin")
+    save_entry(path, _arrays())
+    size = os.path.getsize(path)
+    if mode == "truncate":
+        os.truncate(path, size // 2)
+    else:
+        with open(path, "r+b") as f:
+            f.seek(size - 1)
+            b = f.read(1)
+            f.seek(size - 1)
+            f.write(bytes([b[0] ^ 0xFF]))
+    with pytest.raises(ShardCorruptionError) as ei:
+        load_entry(path)
+    assert path in str(ei.value)
+
+
+def test_legacy_v1_spill_files_still_load(tmp_path):
+    # v1 layout: 8-byte little-endian header length, pickled
+    # [(name, dtype, shape)], then raw buffers — no magic, no checksum
+    arrays = _arrays(seed=3)
+    hdr = pickle.dumps([(k, a.dtype.str, a.shape) for k, a in arrays.items()],
+                      protocol=4)
+    path = str(tmp_path / "v1.bin")
+    with open(path, "wb") as f:
+        f.write(len(hdr).to_bytes(8, "little"))
+        f.write(hdr)
+        for a in arrays.values():
+            f.write(memoryview(np.ascontiguousarray(a)).cast("B"))
+    got = load_entry(path)
+    for name, a in arrays.items():
+        np.testing.assert_array_equal(got[name], a)
+
+
+def test_missing_spill_file_raises_typed_lost_error(tmp_path):
+    store = ShardStore(memory_budget=2000, spill_dir=str(tmp_path),
+                       async_spill=False)
+    for i in range(6):
+        store.put(f"blk/{i}", {"x": np.full(256, i, np.float32)})
+    spilled = store.spilled_keys()
+    assert spilled
+    victim = spilled[0]
+    path = os.path.join(str(tmp_path), victim.replace("/", "__") + ".bin")
+    os.remove(path)
+    with pytest.raises(ShardLostError) as ei:
+        store.get(victim)
+    assert ei.value.key == victim
+    assert victim.replace("/", "__") in str(ei.value)   # names the path
+
+
+def test_store_recovery_hook_remakes_corrupt_entries(tmp_path):
+    store = ShardStore(memory_budget=2000, spill_dir=str(tmp_path),
+                       async_spill=False)
+    originals = {f"blk/{i}": {"x": np.full(256, i, np.float32)}
+                 for i in range(6)}
+    for key, arrays in originals.items():
+        store.put(key, arrays)
+    victim = store.spilled_keys()[0]
+    path = os.path.join(str(tmp_path), victim.replace("/", "__") + ".bin")
+    os.truncate(path, os.path.getsize(path) // 2)
+
+    def recover(key, err):
+        assert key == victim
+        assert isinstance(err, ShardCorruptionError)
+        store.put(key, originals[key])
+        return True
+
+    store.recovery = recover
+    np.testing.assert_array_equal(store.get(victim)["x"],
+                                  originals[victim]["x"])
+    assert store.stats["recoveries"] == 1
+
+
+# ---------------------------------------------------------------------------
+# lineage: every store key names its producing task
+# ---------------------------------------------------------------------------
+
+def test_producer_of_maps_every_key_family():
+    assert producer_of("cand/2/1-3") == ("map", (1, 3))
+    assert producer_of("topt/4") == ("shuffle", 4)
+    assert producer_of("mirror/2/0") == ("shuffle", 0)
+    assert producer_of("shard/1") == ("reduce", 1)
+    with pytest.raises(KeyError):
+        producer_of("nonsense/0")
+
+
+# ---------------------------------------------------------------------------
+# engine under injected faults: bitwise-identical recovery
+# ---------------------------------------------------------------------------
+
+_N, _CHUNK, _T = 96, 24, 5
+
+
+def _points():
+    pts, _ = synthetic.blobs(_N, 3, dim=3, spread=0.8, seed=7)
+    return np.asarray(pts, np.float32)
+
+
+def _build(tmp_dir, faults=None, memory_budget=8 * 1024, **kw):
+    plan = JobPlan(n=_N, chunk_size=_CHUNK, t=_T, k=3, sigma=1.0,
+                   memory_budget=memory_budget, spill_dir=str(tmp_dir),
+                   workers=2, faults=faults, **kw)
+    graph, _ = engine.build_graph(ArrayChunks(_points(), _CHUNK), plan)
+    return graph
+
+
+@pytest.fixture(scope="module")
+def baseline(tmp_path_factory):
+    g = _build(tmp_path_factory.mktemp("baseline"))
+    return np.asarray(g.deg).copy(), g.to_dense()
+
+
+def test_task_failures_within_budget_are_bitwise_invisible(tmp_path, baseline):
+    deg0, dense0 = baseline
+    faults = (FaultPlan()
+              .fail_n("map", (0, 1), 2)
+              .fail("shuffle", 1)
+              .fail("reduce", 2))
+    g = _build(tmp_path, faults=faults, max_retries=2, retry_backoff_s=0.01)
+    stats = g.stats_snapshot()
+    assert stats["task_failures"] == 4
+    assert stats["retries"] == 4
+    np.testing.assert_array_equal(np.asarray(g.deg), deg0)
+    np.testing.assert_array_equal(g.to_dense(), dense0)
+
+
+def test_spill_corruption_recovers_through_lineage(tmp_path, baseline):
+    deg0, dense0 = baseline
+    faults = (FaultPlan()
+              .corrupt("shard/0", "bitflip")
+              .corrupt("shard/2", "truncate"))
+    g = _build(tmp_path, faults=faults, memory_budget=2 * 1024)
+    g_dense = g.to_dense()          # forces every shard through store.get
+    assert faults.fired["corrupt"] >= 1
+    assert g.stats_snapshot()["store_recoveries"] >= 1
+    np.testing.assert_array_equal(np.asarray(g.deg), deg0)
+    np.testing.assert_array_equal(g_dense, dense0)
+
+
+@settings(max_examples=4, deadline=None)
+@given(st.integers(0, 2), st.integers(0, 3), st.integers(1, 2))
+def test_chaos_property_bitwise_equal_within_budget(stage_idx, key_idx,
+                                                    n_failures):
+    """Any FaultPlan whose per-task failures stay <= max_retries yields a
+    bitwise-identical graph: deg, dense form, and the downstream labels
+    can't tell a retried build from a clean one."""
+    stage = ("map", "shuffle", "reduce")[stage_idx]
+    if stage == "map":
+        tiles = [(i, j) for i in range(_N // _CHUNK)
+                 for j in range(i, _N // _CHUNK)]
+        key = tiles[key_idx % len(tiles)]
+    else:
+        key = key_idx % (_N // _CHUNK)
+    faults = FaultPlan().fail_n(stage, key, n_failures)
+    import tempfile
+    with tempfile.TemporaryDirectory() as d_f, \
+            tempfile.TemporaryDirectory() as d_0:
+        g0 = _build(d_0)
+        g = _build(d_f, faults=faults, max_retries=2, retry_backoff_s=0.01)
+        assert faults.fired["fail"] == n_failures
+        np.testing.assert_array_equal(np.asarray(g.deg), np.asarray(g0.deg))
+        np.testing.assert_array_equal(g.to_dense(), g0.to_dense())
+
+
+def _engine_threads():
+    return [t for t in threading.enumerate()
+            if t.name.startswith("repro-engine")]
+
+
+def test_retry_exhaustion_raises_and_leaks_no_threads(tmp_path):
+    before = len(_engine_threads())
+    faults = FaultPlan().fail_n("map", (0, 0), 3)
+    with pytest.raises(InjectedFault):
+        _build(tmp_path, faults=faults, max_retries=1, retry_backoff_s=0.01)
+    assert len(_engine_threads()) == before
+
+
+def test_straggler_speculation_wins_and_stays_bitwise(tmp_path, baseline):
+    deg0, dense0 = baseline
+    faults = FaultPlan().delay("map", (1, 2), 1.5)
+    g = _build(tmp_path, faults=faults, speculation_factor=4.0)
+    stats = g.stats_snapshot()
+    assert stats["speculative_launched"] >= 1
+    assert stats["speculative_won"] >= 1
+    np.testing.assert_array_equal(np.asarray(g.deg), deg0)
+    np.testing.assert_array_equal(g.to_dense(), dense0)
+
+
+def test_stage_timeout_raises_typed_error(tmp_path):
+    faults = FaultPlan().delay("map", (0, 0), 1.5)
+    with pytest.raises(engine.EngineTimeoutError) as ei:
+        _build(tmp_path, faults=faults, stage_timeout_s=0.3)
+    assert ei.value.stage == "map"
+    assert "0.3" in str(ei.value)
+
+
+def test_fault_plan_from_spec_round_trip():
+    plan = FaultPlan.from_spec(
+        '{"fail": [["map", "0-1", 0], ["reduce", "2"]],'
+        ' "delay": [["shuffle", "1", 0.5]],'
+        ' "corrupt": {"shard/0": "truncate"}}')
+    assert ("map", "0-1", 0) in plan._fail
+    assert ("reduce", "2", 0) in plan._fail
+    assert plan._delay[("shuffle", "1", 0)] == 0.5
+    assert plan._corrupt["shard/0"] == "truncate"
+    assert FaultPlan.from_spec(None) is None
+    assert FaultPlan.from_spec("") is None
+    assert task_key((3, 4)) == "3-4"
+    with pytest.raises(ValueError):
+        FaultPlan().corrupt("shard/0", "melt")
+
+
+# ---------------------------------------------------------------------------
+# estimator: graceful degradation + resilience knobs
+# ---------------------------------------------------------------------------
+
+def test_estimator_falls_back_to_in_memory_on_timeout():
+    pts, _ = synthetic.blobs(90, 3, dim=3, spread=0.08, seed=4)
+    faults = FaultPlan().delay("map", (0, 0), 2.0)
+    est = SpectralClustering(3, affinity="ooc-topt", sigma=1.0,
+                             sparsify_t=6, chunk_size=30, seed=0,
+                             stage_timeout_s=0.3, faults=faults)
+    est.fit(jnp.asarray(pts))
+    assert est.info_["affinity_fallback"].startswith("ooc-topt->knn-topt")
+    # degraded != different: the fallback runs the same knn-topt affinity
+    # a direct fit would, so the labels agree exactly
+    ref = SpectralClustering(3, affinity="knn-topt", sigma=1.0,
+                             sparsify_t=6, seed=0).fit(jnp.asarray(pts))
+    assert ari(np.asarray(ref.labels_), np.asarray(est.labels_)) == 1.0
+
+
+def test_estimator_validates_resilience_knobs():
+    with pytest.raises(ValueError):
+        SpectralClustering(3, max_retries=-1)
+    with pytest.raises(ValueError):
+        SpectralClustering(3, speculation_factor=-0.5)
+    with pytest.raises(ValueError):
+        SpectralClustering(3, stage_timeout_s=0.0)
+
+
+# ---------------------------------------------------------------------------
+# serving: bounded admission, deadlines, typed rejections
+# ---------------------------------------------------------------------------
+
+def _served_est():
+    pts, _ = synthetic.blobs(120, 3, dim=4, spread=0.08, seed=4)
+    est = SpectralClustering(3, affinity="triangular", sigma=1.0,
+                             lanczos_steps=32, seed=0)
+    est.fit(jnp.asarray(pts))
+    return est, np.asarray(pts, np.float32)
+
+
+def test_server_sheds_past_admission_bound():
+    est, pts = _served_est()
+    srv = ClusterServer(est, batch_rows=32, max_pending_rows=64)
+    queue = [PredictRequest(rid=i, points=pts[:40].copy()) for i in range(4)]
+    done = srv.run(queue)
+    ok = [r for r in done if r.status == "ok"]
+    shed = [r for r in done if r.status == "shed"]
+    assert len(ok) == 1 and len(shed) == 3      # 40 + 40 > 64 on the 2nd
+    assert srv.stats["shed"] == 3
+    for r in shed:
+        assert r.error and "shed" in r.error and r.labels is None
+    for r in ok:
+        assert r.done
+
+
+def test_oversized_request_admitted_when_queue_empty():
+    est, pts = _served_est()
+    srv = ClusterServer(est, batch_rows=32, max_pending_rows=16)
+    done = srv.run([PredictRequest(rid=0, points=pts[:100].copy())])
+    assert done[0].status == "ok" and done[0].done
+
+
+def test_deadline_expires_stalled_requests():
+    est, pts = _served_est()
+    srv = ClusterServer(est, batch_rows=16, default_deadline_s=10.0)
+    fast = PredictRequest(rid=0, points=pts[:16].copy())
+    slow = PredictRequest(rid=1, points=pts[16:32].copy(), deadline_s=0.01)
+    real_predict = srv._predict
+
+    def slow_predict(xb):
+        import time
+        time.sleep(0.05)                        # one batch outlives slow's
+        return real_predict(xb)                 # per-request deadline
+
+    srv._predict = slow_predict
+    done = srv.run([fast, slow])
+    assert done[0].status == "ok"
+    assert done[1].status == "expired"
+    assert "expired" in done[1].error
+    assert srv.stats["expired"] == 1
+
+
+def test_typed_rejections_and_summary_counts():
+    err_q = QueueFullError(3, 40, 60, 64)
+    assert err_q.status == "shed" and isinstance(err_q, RuntimeError)
+    err_d = DeadlineExceededError(7, 0.5, 0.9)
+    assert err_d.status == "expired" and isinstance(err_d, RuntimeError)
+
+    reqs = []
+    for rid, status in enumerate(["ok", "shed", "expired", "ok"]):
+        r = PredictRequest(rid=rid, points=np.zeros((2, 4), np.float32),
+                           t_submit=1.0, t_done=2.0, status=status)
+        if status == "ok":
+            r.labels = np.zeros(2, np.int32)
+            r._filled = 2
+        reqs.append(r)
+    s = summarize(reqs, wall_s=1.0)
+    assert s["completed"] == 2 and s["shed"] == 1 and s["expired"] == 1
