@@ -882,7 +882,10 @@ def chaos_sweep(n: int = 4096, k: int = 3,
     """Hadoop-grade fault tolerance (ISSUE 9 acceptance) in three acts.
 
     (a) Recovery is invisible: the n=4096 out-of-core job is run clean,
-        then under injected map/shuffle/reduce task failures, then with
+        then under injected map/shuffle/reduce task failures — including
+        MID-fold failures, where the dying attempt has already consumed
+        part of its input set and the retry must re-materialize the
+        missing blocks from lineage — then with
         spilled CSR shards corrupted on disk (bitflip + truncate), then
         with a 3 s map straggler under speculative re-execution — every
         faulted run must produce labels BITWISE-equal to the clean run
@@ -923,7 +926,9 @@ def chaos_sweep(n: int = 4096, k: int = 3,
                     .fail("map", (0, 1))
                     .fail_n("map", (2, 3), 2)
                     .fail("shuffle", 1)
-                    .fail("reduce", 0)),
+                    .fail_midfold("shuffle", 2, after_inputs=3)
+                    .fail("reduce", 0)
+                    .fail_midfold("reduce", 3, after_inputs=2)),
             kw=dict(retry_backoff_s=0.01)),
         "spill_corruption": dict(
             faults=(engine.FaultPlan()
@@ -942,6 +947,7 @@ def chaos_sweep(n: int = 4096, k: int = 3,
         a = float(ari(res_clean.labels, res.labels))
         detail = (f"bitwise={bitwise} ari={a:.3f} "
                   f"retries={st['retries']} "
+                  f"healed={st['inputs_healed']} "
                   f"recoveries={st['store_recoveries']} "
                   f"spec_launched={st['speculative_launched']} "
                   f"spec_won={st['speculative_won']} fired={faults.fired}")
@@ -950,6 +956,7 @@ def chaos_sweep(n: int = 4096, k: int = 3,
             "wall_s": round(wall, 3), "bitwise_equal_labels": bitwise,
             "ari_vs_clean": a, "retries": int(st["retries"]),
             "task_failures": int(st["task_failures"]),
+            "inputs_healed": int(st["inputs_healed"]),
             "store_recoveries": int(st["store_recoveries"]),
             "speculative_launched": int(st["speculative_launched"]),
             "speculative_won": int(st["speculative_won"]),
@@ -957,7 +964,9 @@ def chaos_sweep(n: int = 4096, k: int = 3,
         }
         assert bitwise, f"{tag}: labels diverged from the fault-free run"
         assert a == 1.0, (tag, a)
-    assert results["runs"]["task_failures"]["retries"] >= 4
+    assert results["runs"]["task_failures"]["retries"] >= 6
+    # shuffle 2 consumed 3 cand blocks, reduce 3 consumed topt + 1 mirror
+    assert results["runs"]["task_failures"]["inputs_healed"] >= 5
     assert results["runs"]["spill_corruption"]["store_recoveries"] >= 1
     assert results["runs"]["straggler"]["speculative_won"] >= 1
 

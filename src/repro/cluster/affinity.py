@@ -336,9 +336,10 @@ def ooc_topt_affinity(est, x, sigma, mesh) -> NormalizedOperator:
 
     Resilience: the build inherits the estimator's retry/speculation
     knobs, and when ``est.stage_timeout_s`` trips (a stage deadline
-    expired, every outstanding task was cancelled) the fit degrades
-    gracefully to the in-memory "knn-topt" affinity — the same top-t
-    graph built without the engine — instead of failing the job.
+    expired: queued tasks cancelled, hung attempts abandoned on daemon
+    workers, so the deadline bounds this call's wall time) the fit
+    degrades gracefully to the in-memory "knn-topt" affinity — the same
+    top-t graph built without the engine — instead of failing the job.
     """
     import numpy as np
 

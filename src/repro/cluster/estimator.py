@@ -111,9 +111,11 @@ class SpectralClustering:
                     whose wall exceeds k x the stage's running-median
                     wall gets one speculative backup attempt (0 = off).
     stage_timeout_s: per-stage deadline for the engine build; on expiry
-                    the job cancels its outstanding tasks and the fit
-                    FALLS BACK to the in-memory "knn-topt" affinity (the
-                    same top-t graph, no spilling) instead of failing.
+                    the job cancels queued tasks, abandons hung attempts
+                    (the deadline bounds the fit's wall time even when a
+                    task sticks in blocked I/O) and the fit FALLS BACK to
+                    the in-memory "knn-topt" affinity (the same top-t
+                    graph, no spilling) instead of failing.
     faults:         optional ``engine.FaultPlan`` for deterministic
                     fault injection (tests/benchmarks; None = no-op).
     mesh:           device mesh; None = all local devices.

@@ -13,10 +13,13 @@ every hot path.
 Task keys are strings: ``"<i>-<j>"`` for map tiles, ``"<c>"`` for
 shuffle/reduce chunks (see :func:`task_key`).  Every *fail* and *delay*
 directive is keyed by attempt number, so "fail attempt 0, succeed on the
-retry" is one directive; *corrupt* directives fire exactly once, on the
-first spill write of the named store key (re-spills after a recovery
-write a clean file — otherwise a corrupt->recover->re-spill loop would
-never converge).
+retry" is one directive; *fail_midfold* directives fire once, inside the
+named shuffle/reduce fold AFTER it has consumed (deleted) a given number
+of its input blocks — the partially-executed-task failure mode whose
+retry must re-materialize the consumed inputs; *corrupt* directives fire
+exactly once, on the first spill write of the named store key (re-spills
+after a recovery write a clean file — otherwise a
+corrupt->recover->re-spill loop would never converge).
 """
 from __future__ import annotations
 
@@ -28,11 +31,14 @@ from typing import Dict, Optional, Tuple, Union
 
 
 class InjectedFault(RuntimeError):
-    """The exception a ``fail`` directive raises inside a task attempt."""
+    """The exception a ``fail`` / ``fail_midfold`` directive raises inside
+    a task attempt (``attempt`` is None for mid-fold fire-once
+    directives, which hit whichever attempt consumes enough inputs)."""
 
-    def __init__(self, stage: str, key: str, attempt: int):
-        super().__init__(f"injected fault: {stage} task {key} attempt "
-                         f"{attempt}")
+    def __init__(self, stage: str, key: str, attempt: Optional[int] = None,
+                 where: str = "task start"):
+        at = "" if attempt is None else f" attempt {attempt}"
+        super().__init__(f"injected fault: {stage} task {key}{at} ({where})")
         self.stage = stage
         self.key = key
         self.attempt = attempt
@@ -40,9 +46,9 @@ class InjectedFault(RuntimeError):
 
 def task_key(key: Union[int, Tuple[int, int], str]) -> str:
     """Normalize a scheduler task key to the FaultPlan string form:
-    map tiles ``(i, j)`` -> ``"i-j"``, shuffle/reduce chunk ``c`` ->
-    ``"c"``."""
-    if isinstance(key, tuple):
+    map tiles ``(i, j)`` -> ``"i-j"`` (lists too, so JSON specs may
+    write ``[i, j]``), shuffle/reduce chunk ``c`` -> ``"c"``."""
+    if isinstance(key, (tuple, list)):
         return f"{key[0]}-{key[1]}"
     return str(key)
 
@@ -58,8 +64,10 @@ class FaultPlan:
         self._lock = threading.Lock()
         self._fail: Dict[Tuple[str, str, int], bool] = {}
         self._delay: Dict[Tuple[str, str, int], float] = {}
+        self._midfold: Dict[Tuple[str, str], int] = {}   # inputs left
         self._corrupt: Dict[str, str] = {}       # store key -> mode
-        self.fired: Dict[str, int] = {"fail": 0, "delay": 0, "corrupt": 0}
+        self.fired: Dict[str, int] = {"fail": 0, "delay": 0, "midfold": 0,
+                                      "corrupt": 0}
 
     # -- arming --------------------------------------------------------------
 
@@ -77,6 +85,23 @@ class FaultPlan:
             self.fail(stage, key, a)
         return self
 
+    def fail_midfold(self, stage: str, key,
+                     after_inputs: int = 1) -> "FaultPlan":
+        """Raise :class:`InjectedFault` inside the named shuffle/reduce
+        task AFTER its consume-mode fold has deleted ``after_inputs`` of
+        its input blocks — the partially-executed failure a start-keyed
+        ``fail`` can never produce (it fires before any input is
+        touched).  Fires once, so the retry runs to completion."""
+        if stage not in ("shuffle", "reduce"):
+            raise ValueError(f"fail_midfold stage must be 'shuffle' or "
+                             f"'reduce' (only they consume inputs), "
+                             f"got {stage!r}")
+        if int(after_inputs) < 1:
+            raise ValueError(f"after_inputs must be >= 1, "
+                             f"got {after_inputs}")
+        self._midfold[(stage, task_key(key))] = int(after_inputs)
+        return self
+
     def delay(self, stage: str, key, seconds: float,
               attempt: int = 0) -> "FaultPlan":
         """Sleep ``seconds`` at the start of ``attempt`` of the named task
@@ -88,7 +113,8 @@ class FaultPlan:
     def corrupt(self, store_key: str, mode: str = "bitflip") -> "FaultPlan":
         """Corrupt the spill file of ``store_key`` right after its first
         write lands: ``"truncate"`` halves the file, ``"bitflip"`` flips
-        one payload byte.  Fires once."""
+        the file's last byte (always inside the v2 checksum's header +
+        payload coverage).  Fires once."""
         if mode not in self._CORRUPT_MODES:
             raise ValueError(f"corrupt mode must be one of "
                              f"{self._CORRUPT_MODES}, got {mode!r}")
@@ -99,13 +125,16 @@ class FaultPlan:
     def from_spec(cls, spec: Union[str, dict, None]) -> Optional["FaultPlan"]:
         """Build a plan from a JSON string / dict, e.g.::
 
-            {"fail":    [["map", "0-0", 0], ["reduce", "1", 0]],
-             "delay":   [["map", "0-1", 2.0, 0]],
-             "corrupt": {"shard/0": "bitflip"}}
+            {"fail":         [["map", "0-0", 0], ["reduce", "1", 0]],
+             "fail_midfold": [["shuffle", "1", 2]],
+             "delay":        [["map", "0-1", 2.0, 0]],
+             "corrupt":      {"shard/0": "bitflip"}}
 
         fail entries are ``[stage, key, attempt]`` (attempt optional,
-        default 0); delay entries are ``[stage, key, seconds, attempt]``.
-        Returns None for an empty/None spec (the no-op default)."""
+        default 0); fail_midfold entries are ``[stage, key,
+        after_inputs]`` (after_inputs optional, default 1); delay entries
+        are ``[stage, key, seconds, attempt]``.  Returns None for an
+        empty/None spec (the no-op default)."""
         if spec is None or spec == "":
             return None
         if isinstance(spec, str):
@@ -114,6 +143,8 @@ class FaultPlan:
         for ent in spec.get("fail", []):
             stage, key = ent[0], ent[1]
             plan.fail(stage, key, ent[2] if len(ent) > 2 else 0)
+        for ent in spec.get("fail_midfold", []):
+            plan.fail_midfold(ent[0], ent[1], ent[2] if len(ent) > 2 else 1)
         for ent in spec.get("delay", []):
             stage, key, seconds = ent[0], ent[1], float(ent[2])
             plan.delay(stage, key, seconds, ent[3] if len(ent) > 3 else 0)
@@ -138,6 +169,24 @@ class FaultPlan:
                 self.fired["fail"] += 1
                 raise InjectedFault(stage, tk[1], int(attempt))
 
+    def on_input_consumed(self, stage: str, key) -> None:
+        """Task hook, called right after a consume-mode shuffle/reduce
+        fold deletes one of its input blocks: counts an armed
+        ``fail_midfold`` directive down and raises when it reaches zero —
+        by then the attempt has genuinely destroyed part of its input
+        set, so the retry must exercise the scheduler's input healing."""
+        mk = (stage, task_key(key))
+        with self._lock:
+            left = self._midfold.get(mk)
+            if left is None:
+                return
+            if left > 1:
+                self._midfold[mk] = left - 1
+                return
+            del self._midfold[mk]
+            self.fired["midfold"] += 1
+        raise InjectedFault(stage, mk[1], where="mid-fold")
+
     def on_spill(self, store_key: str, path: str) -> None:
         """Store hook, called after a spill write lands: corrupts the file
         on disk if a directive names this key (once)."""
@@ -150,8 +199,13 @@ class FaultPlan:
         size = os.path.getsize(path)
         if mode == "truncate":
             os.truncate(path, size // 2)
-        else:                                     # bitflip: last byte is
-            with open(path, "r+b") as f:          # always payload
+        else:
+            # bitflip: flip the file's LAST byte — the final payload byte
+            # when the entry has one, or (all arrays empty: payload_len 0)
+            # the last byte of the pickled header.  Either way the byte
+            # sits inside the v2 checksum's coverage (header + payload),
+            # so the drill always exercises the CRC-detect path.
+            with open(path, "r+b") as f:
                 f.seek(size - 1)
                 b = f.read(1)
                 f.seek(size - 1)

@@ -73,7 +73,10 @@ class JobPlan:
                     is resubmitted up to this many times with exponential
                     backoff before the job aborts.  Retried tasks are
                     bitwise-identical to first-try successes (tasks are
-                    deterministic functions of the store).
+                    deterministic functions of the store; a retry of a
+                    shuffle/reduce that consumed part of its inputs
+                    before failing first re-materializes the missing
+                    blocks from lineage).
     retry_backoff_s: base backoff before retry attempt a (sleeps
                     ``retry_backoff_s * 2**(a-1)``, capped at 2s).
     speculation_factor: straggler threshold k — a running task whose wall
@@ -83,9 +86,11 @@ class JobPlan:
                     speculation (the default: non-speculative runs keep
                     the consume-on-fold input lifecycle).
     stage_timeout_s: per-stage deadline for the build scheduler; on
-                    expiry every outstanding future is cancelled and a
-                    typed ``EngineTimeoutError`` propagates (callers fall
-                    back per :func:`route_path` — see
+                    expiry every queued task is cancelled, running
+                    attempts are ABANDONED on their daemon workers (a
+                    hung attempt cannot drag the job past the deadline),
+                    and a typed ``EngineTimeoutError`` propagates
+                    (callers fall back per :func:`route_path` — see
                     ``cluster.affinity.ooc_topt_affinity``).
     faults:         optional :class:`~repro.engine.faults.FaultPlan`
                     threaded through the runner and store — deterministic

@@ -17,10 +17,11 @@ classic sequential schedule exactly).
 """
 from __future__ import annotations
 
+import queue
 import statistics
 import threading
 import time
-from concurrent.futures import FIRST_COMPLETED, ThreadPoolExecutor, wait
+from concurrent.futures import FIRST_COMPLETED, Future, wait
 from dataclasses import dataclass, field
 from typing import Callable, Dict, Optional
 
@@ -45,15 +46,86 @@ class EngineError(RuntimeError):
 
 class EngineTimeoutError(EngineError):
     """A build stage blew its ``plan.stage_timeout_s`` deadline.  Raised
-    by the scheduler after cancelling every queued task (running attempts
-    are joined — threads cannot be killed — so no task outlives the
-    job)."""
+    by the scheduler after cancelling every queued task; running attempts
+    are NOT joined (threads cannot be killed) — they are abandoned on
+    their daemon worker threads (see :class:`_DaemonPool`), so the
+    deadline genuinely bounds the caller's wall time even when an attempt
+    hangs in blocked I/O or an infinite loop.  An abandoned attempt may
+    still write into the failed job's store before its thread exits; the
+    store is job-private and discarded with the job, so nothing observes
+    those writes."""
 
     def __init__(self, stage: str, seconds: float):
         super().__init__(f"engine stage {stage!r} exceeded its "
                          f"{seconds:g}s deadline")
         self.stage = stage
         self.seconds = seconds
+
+
+class _DaemonPool:
+    """Minimal executor over DAEMON worker threads: ``submit`` returns a
+    real :class:`concurrent.futures.Future` (so ``wait`` interoperates),
+    ``shutdown`` matches the stdlib signature.
+
+    Exists because ``ThreadPoolExecutor`` joins its non-daemon workers at
+    shutdown *and* interpreter exit: one attempt stuck in blocked I/O
+    would hang the job (and the process) forever, which is exactly what
+    ``plan.stage_timeout_s`` promises cannot happen.  Daemon workers let
+    the deadline path call ``shutdown(wait=False)`` and abandon a hung
+    attempt — the zombie thread can finish in the background or die with
+    the interpreter, but it can no longer block anyone.  Every other
+    failure path keeps ``wait=True`` and loses nothing."""
+
+    def __init__(self, max_workers: int, thread_name_prefix: str = "pool"):
+        self._q: "queue.SimpleQueue" = queue.SimpleQueue()
+        self._lock = threading.Lock()
+        self._pending: set = set()          # submitted, not yet picked up
+        self._shutdown = False
+        self._threads = []
+        for i in range(max(1, int(max_workers))):
+            t = threading.Thread(target=self._worker, daemon=True,
+                                 name=f"{thread_name_prefix}_{i}")
+            t.start()
+            self._threads.append(t)
+
+    def _worker(self) -> None:
+        while True:
+            item = self._q.get()
+            if item is None:                # shutdown sentinel
+                return
+            fut, fn = item
+            with self._lock:
+                self._pending.discard(fut)
+            if not fut.set_running_or_notify_cancel():
+                continue                    # cancelled while queued
+            try:
+                fut.set_result(fn())
+            except BaseException as e:      # noqa: BLE001 — future carries it
+                fut.set_exception(e)
+
+    def submit(self, fn: Callable) -> Future:
+        fut: Future = Future()
+        with self._lock:
+            if self._shutdown:
+                raise RuntimeError("cannot submit to a shut-down pool")
+            self._pending.add(fut)
+        self._q.put((fut, fn))
+        return fut
+
+    def shutdown(self, wait: bool = True,
+                 cancel_futures: bool = False) -> None:
+        with self._lock:
+            first = not self._shutdown
+            self._shutdown = True
+            doomed = list(self._pending) if cancel_futures else []
+        for fut in doomed:
+            fut.cancel()                    # running ones decline, as stdlib
+        if first:
+            for _ in self._threads:
+                self._q.put(None)
+        if wait:
+            for t in self._threads:
+                t.join()
 
 
 @dataclass
@@ -111,7 +183,13 @@ def _schedule_build(reader, sigma, plan: JobPlan, store: ShardStore,
 
       * a failed attempt is resubmitted with exponential backoff up to
         ``plan.max_retries`` times; tasks are deterministic functions of
-        the store, so a retried success is bitwise-identical;
+        the store, so a retried success is bitwise-identical.  In consume
+        mode a failed shuffle/reduce attempt may have already deleted
+        part of its input set (it consumes blocks as it folds), so the
+        retry first re-materializes every missing input via the lineage
+        path (``tasks.recompute_entry`` — a bitwise replay): a mid-fold
+        failure can never make the retry fold a partial input set and
+        silently drop neighbours;
       * with ``plan.speculation_factor`` k > 0, a running task whose wall
         exceeds k x the running median of completed walls for its stage
         gets ONE speculative backup attempt — first completion wins, the
@@ -119,11 +197,14 @@ def _schedule_build(reader, sigma, plan: JobPlan, store: ShardStore,
         tasks run ``consume=False`` and the scheduler deletes a task's
         inputs only after every attempt has settled, so a duplicate can
         never read half-deleted inputs;
-      * ``plan.stage_timeout_s`` bounds each stage's wall; on expiry (or
-        on retry exhaustion) every queued task is cancelled
-        (``shutdown(cancel_futures=True)`` in the ``finally``), running
-        attempts are joined, and the typed error propagates — a failed
-        job never leaks tasks that keep spilling into the store.
+      * ``plan.stage_timeout_s`` bounds each stage's wall; on expiry
+        every queued task is cancelled, running attempts are ABANDONED on
+        their daemon workers (joining could hang forever on a stuck
+        attempt — see :class:`_DaemonPool`), and the typed error
+        propagates, so the deadline bounds the job's wall time.  On retry
+        exhaustion the scheduler cancels the queue but does join running
+        attempts — a failed-but-not-hung job never leaks tasks that keep
+        spilling into the store.
 
     ``overlap_work`` (if given) runs ONCE on the scheduler thread as soon
     as the last shuffle finishes — i.e. while the reduce tail is still
@@ -140,7 +221,7 @@ def _schedule_build(reader, sigma, plan: JobPlan, store: ShardStore,
     busy_lock = threading.Lock()
     deg = np.zeros(plan.n, np.float32)
     nnz_total = 0
-    counters = {"retries": 0, "task_failures": 0,
+    counters = {"retries": 0, "task_failures": 0, "inputs_healed": 0,
                 "speculative_launched": 0, "speculative_won": 0}
 
     def timed(stage, fn, *args, **kw):
@@ -167,14 +248,39 @@ def _schedule_build(reader, sigma, plan: JobPlan, store: ShardStore,
     stage_t0: Dict[str, float] = {}
     stage_left = {"map": len(tiles), "shuffle": nc, "reduce": nc}
     waiting = {c: {tl for tl in tiles if c in tl} for c in range(nc)}
+    mirror_srcs: Dict[int, set] = {}      # reduce c <- shuffles that fed it
     shuffles_left = nc
     overlap_pending = overlap_work is not None
     t_start = time.perf_counter()
     # speculation / deadlines need a clock tick even when nothing finishes
     poll = 0.05 if (speculate or plan.stage_timeout_s is not None) else None
-    pool = ThreadPoolExecutor(max_workers=workers,
-                              thread_name_prefix="repro-engine-task")
+    pool = _DaemonPool(workers, thread_name_prefix="repro-engine-task")
     futures: Dict = {}
+
+    def heal_inputs(kind, key):
+        """Consume-mode retries only: a failed shuffle/reduce attempt
+        deletes inputs as it folds, so the retry would otherwise see —
+        and silently fold — only the not-yet-consumed remainder.
+        Re-materialize every missing input from lineage (a bitwise replay
+        of its producing task) before re-running the fold; ``store.keys``
+        then presents the full set in the original sorted order, so the
+        retried fold is bitwise-identical to an untouched first run."""
+        if kind == "shuffle":
+            expected = [f"cand/{key}/{min(key, o)}-{max(key, o)}"
+                        for o in range(nc)]
+        elif kind == "reduce":
+            expected = ([f"topt/{key}"] +
+                        [f"mirror/{key}/{s}"
+                         for s in sorted(mirror_srcs.get(key, ()))])
+        else:
+            return                        # map tasks consume nothing
+        for skey in expected:
+            if skey in store:
+                continue
+            store.put(skey, tasks.recompute_entry(reader, sigma, plan, skey))
+            with busy_lock:
+                counters["inputs_healed"] += 1
+            obs.counter("engine.inputs_healed").inc()
 
     def submit(kind, key, attempt=0, speculative=False):
         st = tstate.setdefault((kind, key), _TaskState(kind, key))
@@ -187,6 +293,8 @@ def _schedule_build(reader, sigma, plan: JobPlan, store: ShardStore,
             if attempt > 0 and not speculative and plan.retry_backoff_s:
                 time.sleep(min(plan.retry_backoff_s * 2 ** (attempt - 1),
                                2.0))
+            if attempt > 0 and consume:
+                heal_inputs(kind, key)
             starts[(kind, key, attempt)] = time.perf_counter()
             if faults is not None:
                 faults.on_task_start(kind, key, attempt)
@@ -203,6 +311,8 @@ def _schedule_build(reader, sigma, plan: JobPlan, store: ShardStore,
                 if not deps:                 # last tile for chunk c
                     submit("shuffle", c)
         elif kind == "shuffle":
+            for d in out:                    # record reduce d's input set
+                mirror_srcs.setdefault(d, set()).add(key)
             shuffles_left -= 1
             if shuffles_left == 0:           # mirrors all emitted
                 for c in range(nc):
@@ -228,6 +338,7 @@ def _schedule_build(reader, sigma, plan: JobPlan, store: ShardStore,
             store.delete(k)
 
     fatal = None
+    timed_out = False
     try:
         for (i, j) in tiles:
             submit("map", (i, j))
@@ -269,6 +380,7 @@ def _schedule_build(reader, sigma, plan: JobPlan, store: ShardStore,
                     t0s = stage_t0.get(stage)
                     if (t0s is not None and left > 0
                             and now - t0s > plan.stage_timeout_s):
+                        timed_out = True
                         raise EngineTimeoutError(stage, plan.stage_timeout_s)
             if speculate:
                 with busy_lock:
@@ -292,8 +404,12 @@ def _schedule_build(reader, sigma, plan: JobPlan, store: ShardStore,
     finally:
         # the first unrecoverable failure cancels every queued task and
         # joins the running ones — a failed job never leaks attempts that
-        # keep spilling into the store
-        pool.shutdown(wait=True, cancel_futures=True)
+        # keep spilling into the store.  A blown stage deadline must NOT
+        # join (a hung attempt would hang the join too, defeating the
+        # deadline): its running attempts are abandoned on their daemon
+        # workers instead, and the job's private store is discarded with
+        # the job, so their late writes are unobservable.
+        pool.shutdown(wait=not timed_out, cancel_futures=True)
     if not consume:
         # deferred-GC stragglers: losing attempts that re-put an input
         # after its consumer settled (all attempts have joined by now)
@@ -311,6 +427,7 @@ def _schedule_build(reader, sigma, plan: JobPlan, store: ShardStore,
         "max_retries": plan.max_retries,
         "retries": counters["retries"],
         "task_failures": counters["task_failures"],
+        "inputs_healed": counters["inputs_healed"],
         "speculative_launched": counters["speculative_launched"],
         "speculative_won": counters["speculative_won"],
         # per-stage numbers are BUSY task-seconds (the stages interleave,

@@ -23,11 +23,13 @@ budget/stat accounting is exact.
 
 On-disk format v2 (the shard-store contract, see API.md): one
 ``<mangled-key>.bin`` per spilled entry — an 8-byte magic, header length,
-payload length and payload CRC32, a pickled header listing
+payload length and a CRC32 covering everything after the fixed preamble
+(the pickled header AND the payload), then the pickled header listing
 ``(name, dtype, shape)`` for every array that was ``put``, followed by the
 raw array buffers back to back; keys mangle ``/`` to ``__``.  Writes are
 **atomic** (tmp file + ``os.replace``) and reads **verified**: a
-truncated or bit-flipped file raises :class:`ShardCorruptionError`
+truncated or bit-flipped file — payload bytes or a flipped shape/dtype
+literal inside the header alike — raises :class:`ShardCorruptionError`
 instead of silently misparsing.  v1 files (no magic; PR 8's unchecked
 layout) still load.  CSR shards use the names ``indptr`` (int64, rows+1),
 ``indices`` (int32, nnz) and ``data`` (float32, nnz).
@@ -90,17 +92,19 @@ def _nbytes(arrays: Dict[str, np.ndarray]) -> int:
 
 def save_entry(path: str, arrays: Dict[str, np.ndarray]) -> None:
     """Write ``arrays`` in spill format v2: magic, 8-byte header length,
-    8-byte payload length, 4-byte payload CRC32, the pickled
-    ``[(name, dtype.str, shape), ...]`` header, then the contiguous array
-    buffers concatenated in header order.  The write is atomic — a tmp
-    file in the same directory is ``os.replace``d over ``path``, so a
-    crash mid-write can never leave a half-written file under the real
-    name."""
+    8-byte payload length, a 4-byte CRC32 of header-plus-payload, the
+    pickled ``[(name, dtype.str, shape), ...]`` header, then the
+    contiguous array buffers concatenated in header order.  The CRC
+    covers the header bytes too — a flipped byte inside a pickled
+    shape/dtype literal could otherwise deserialize cleanly into a
+    wrongly-shaped array.  The write is atomic — a tmp file in the same
+    directory is ``os.replace``d over ``path``, so a crash mid-write can
+    never leave a half-written file under the real name."""
     bufs = [memoryview(np.ascontiguousarray(a)).cast("B")
             for a in arrays.values()]
     hdr = pickle.dumps([(k, a.dtype.str, a.shape) for k, a in arrays.items()],
                        protocol=4)
-    crc = 0
+    crc = zlib.crc32(hdr)
     payload_len = 0
     for b in bufs:
         crc = zlib.crc32(b, crc)
@@ -142,7 +146,8 @@ def load_entry(path: str) -> Dict[str, np.ndarray]:
     are zero-copy (read-only) views over one contiguous buffer — store
     consumers treat entries as immutable (a ``put`` replaces wholesale).
 
-    v2 files are verified (total length, then payload CRC32) and raise
+    v2 files are verified (total length, then the CRC32 of everything
+    after the fixed preamble — pickled header and payload) and raise
     :class:`ShardCorruptionError` on any mismatch; legacy v1 files (no
     magic) take the old unchecked parse for compatibility."""
     with open(path, "rb") as f:
@@ -160,8 +165,8 @@ def load_entry(path: str) -> Dict[str, np.ndarray]:
         raise ShardCorruptionError(
             path, f"bad length (expected {off + plen} bytes, "
                   f"found {len(buf)})")
-    if zlib.crc32(buf[off:]) & 0xFFFFFFFF != crc:
-        raise ShardCorruptionError(path, "payload CRC32 mismatch")
+    if zlib.crc32(buf[_V2_HEAD:]) & 0xFFFFFFFF != crc:
+        raise ShardCorruptionError(path, "CRC32 mismatch (header or payload)")
     return _parse_entries(buf, buf[28:28 + hlen], off, path)
 
 

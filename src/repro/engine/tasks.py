@@ -22,9 +22,12 @@ budget and spill exactly like Hadoop's map-side spill files.  Map tasks
 are pure (re-running one just overwrites its candidate blocks); shuffle
 and reduce tasks *consume* their inputs to keep the working set bounded
 (``consume=False`` — used when speculative backups may run a duplicate
-attempt — defers the deletes to the scheduler), so re-executing one after
-a failure means re-running its producing stage for that row range first —
-the same recovery granularity Hadoop gets by re-fetching map output.
+attempt — defers the deletes to the scheduler).  A consume-mode attempt
+that fails MID-fold has therefore already destroyed part of its input
+set, so before retrying one the scheduler re-materializes every missing
+input through the ``recompute_*`` lineage path below (see
+``runner._schedule_build``) — the same recovery granularity Hadoop gets
+by re-fetching map output.
 
 The ``recompute_*`` functions at the bottom are that recovery path: they
 re-derive any store entry directly from the reader, replaying the exact
@@ -111,9 +114,12 @@ def _mirror_groups(rows, cols, vals, plan: JobPlan):
 
 
 def run_shuffle_task(plan: JobPlan, c: int, store: ShardStore,
-                     consume: bool = True) -> None:
+                     consume: bool = True) -> list:
     """Merge row range ``c``'s candidate blocks into its final top-t and
-    emit the mirror triplets that symmetrize the graph.
+    emit the mirror triplets that symmetrize the graph.  Returns the
+    sorted list of destination chunks it mirrored into — the scheduler
+    records them as the matching reduce task's expected input set (for
+    retry-time input healing).
 
     ``consume=True`` drops each candidate block the moment it is folded
     (bounded working set); the scheduler passes ``False`` when a
@@ -129,15 +135,18 @@ def run_shuffle_task(plan: JobPlan, c: int, store: ShardStore,
             yield b["vals"], b["cols"]
             if consume:
                 store.delete(k)
+                if plan.faults is not None:
+                    plan.faults.on_input_consumed("shuffle", c)
 
     vals, cols = _fold_topt(blocks(), plan)
     rows, cols, vals = _topt_triplets(vals, cols, plan, c)
     store.put(f"topt/{c}", {"rows": rows, "cols": cols,
                             "vals": vals.astype(np.float32)})
-    for d, (m_rows, m_cols, m_vals) in sorted(
-            _mirror_groups(rows, cols, vals, plan).items()):
+    groups = sorted(_mirror_groups(rows, cols, vals, plan).items())
+    for d, (m_rows, m_cols, m_vals) in groups:
         store.put(f"mirror/{d}/{c}",
                   {"rows": m_rows, "cols": m_cols, "vals": m_vals})
+    return [d for d, _ in groups]
 
 
 def _dedupe_max(rows: np.ndarray, cols: np.ndarray, vals: np.ndarray):
@@ -197,6 +206,8 @@ def run_reduce_task(plan: JobPlan, c: int, store: ShardStore,
             yield b["rows"], b["cols"], b["vals"]
             if consume:
                 store.delete(k)
+                if plan.faults is not None:
+                    plan.faults.on_input_consumed("reduce", c)
 
     arrays, deg, nnz = _fold_shard(blocks(), plan, c)
     store.put(f"shard/{c}", arrays)

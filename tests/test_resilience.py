@@ -11,6 +11,7 @@ from __future__ import annotations
 import os
 import pickle
 import threading
+import time
 from collections import deque
 
 import jax.numpy as jnp
@@ -68,6 +69,34 @@ def test_corruption_is_detected(tmp_path, mode):
     with pytest.raises(ShardCorruptionError) as ei:
         load_entry(path)
     assert path in str(ei.value)
+
+
+def test_header_corruption_is_detected(tmp_path):
+    # the v2 CRC covers the pickled header too: a flipped byte inside a
+    # shape/dtype literal must not deserialize into a wrongly-shaped
+    # array — it has to fail verification like any payload flip
+    path = str(tmp_path / "e.bin")
+    save_entry(path, _arrays())
+    with open(path, "r+b") as f:
+        f.seek(30)                          # inside the pickled header
+        b = f.read(1)
+        f.seek(30)
+        f.write(bytes([b[0] ^ 0x01]))
+    with pytest.raises(ShardCorruptionError):
+        load_entry(path)
+
+
+def test_bitflip_on_empty_payload_entry_still_detected(tmp_path):
+    # an entry whose arrays are all empty has payload length 0, so the
+    # fault injector's last-byte flip lands on a header byte — which the
+    # header-covering checksum must still catch
+    path = str(tmp_path / "empty.bin")
+    save_entry(path, {"x": np.empty((0,), np.float32)})
+    faults = FaultPlan().corrupt("blk/empty", "bitflip")
+    faults.on_spill("blk/empty", path)
+    assert faults.fired["corrupt"] == 1
+    with pytest.raises(ShardCorruptionError):
+        load_entry(path)
 
 
 def test_legacy_v1_spill_files_still_load(tmp_path):
@@ -179,6 +208,26 @@ def test_task_failures_within_budget_are_bitwise_invisible(tmp_path, baseline):
     np.testing.assert_array_equal(g.to_dense(), dense0)
 
 
+def test_midfold_failure_retry_heals_consumed_inputs(tmp_path, baseline):
+    """The reviewer's scenario: a consume-mode shuffle/reduce that fails
+    MID-fold has already deleted part of its input set.  The retry must
+    re-materialize the consumed blocks from lineage and rebuild the exact
+    graph — not silently fold the not-yet-consumed remainder."""
+    deg0, dense0 = baseline
+    faults = (FaultPlan()
+              .fail_midfold("shuffle", 1, after_inputs=2)
+              .fail_midfold("reduce", 2, after_inputs=1))
+    g = _build(tmp_path, faults=faults, max_retries=2, retry_backoff_s=0.01)
+    stats = g.stats_snapshot()
+    assert faults.fired["midfold"] == 2
+    assert stats["task_failures"] == 2
+    assert stats["retries"] == 2
+    # shuffle 1 consumed 2 cand blocks, reduce 2 consumed topt/2
+    assert stats["inputs_healed"] == 3
+    np.testing.assert_array_equal(np.asarray(g.deg), deg0)
+    np.testing.assert_array_equal(g.to_dense(), dense0)
+
+
 def test_spill_corruption_recovers_through_lineage(tmp_path, baseline):
     deg0, dense0 = baseline
     faults = (FaultPlan()
@@ -249,13 +298,27 @@ def test_stage_timeout_raises_typed_error(tmp_path):
     assert "0.3" in str(ei.value)
 
 
+def test_stage_timeout_bounds_wall_despite_hung_task(tmp_path):
+    # an attempt stuck far past the deadline must not hang the job: the
+    # scheduler abandons running attempts (daemon workers) on expiry
+    # instead of joining them, so the caller gets control back ~on time
+    faults = FaultPlan().delay("map", (0, 0), 6.0)
+    t0 = time.monotonic()
+    with pytest.raises(engine.EngineTimeoutError):
+        _build(tmp_path, faults=faults, stage_timeout_s=0.3)
+    assert time.monotonic() - t0 < 3.0
+
+
 def test_fault_plan_from_spec_round_trip():
     plan = FaultPlan.from_spec(
         '{"fail": [["map", "0-1", 0], ["reduce", "2"]],'
+        ' "fail_midfold": [["shuffle", "1", 2], ["reduce", "0"]],'
         ' "delay": [["shuffle", "1", 0.5]],'
         ' "corrupt": {"shard/0": "truncate"}}')
     assert ("map", "0-1", 0) in plan._fail
     assert ("reduce", "2", 0) in plan._fail
+    assert plan._midfold[("shuffle", "1")] == 2
+    assert plan._midfold[("reduce", "0")] == 1
     assert plan._delay[("shuffle", "1", 0)] == 0.5
     assert plan._corrupt["shard/0"] == "truncate"
     assert FaultPlan.from_spec(None) is None
@@ -263,6 +326,10 @@ def test_fault_plan_from_spec_round_trip():
     assert task_key((3, 4)) == "3-4"
     with pytest.raises(ValueError):
         FaultPlan().corrupt("shard/0", "melt")
+    with pytest.raises(ValueError):
+        FaultPlan().fail_midfold("map", (0, 0))     # map consumes nothing
+    with pytest.raises(ValueError):
+        FaultPlan().fail_midfold("shuffle", 1, after_inputs=0)
 
 
 # ---------------------------------------------------------------------------
