@@ -1,0 +1,31 @@
+"""Repo-aware static analysis + runtime lock-discipline checking.
+
+The paper's thesis is that the *framework* guarantees correct parallel
+execution; this package is that guarantee for our hand-rolled concurrent
+runtime.  ``python -m repro.analysis check src/`` runs an AST pass with
+three repo-tuned rule families — concurrency (C0xx), jax-purity (J0xx),
+kernel-contract (K0xx) — against a committed baseline, and
+:mod:`repro.analysis.lockcheck` cross-validates the static lock-order
+rule at test time (``REPRO_LOCKCHECK=1``).  See API.md "Static analysis"
+for the rule catalog.
+"""
+from repro.analysis.baseline import (apply_baseline, load_baseline,
+                                     save_baseline)
+from repro.analysis.engine import (Module, Project, format_human,
+                                   load_project, run_rules)
+from repro.analysis.findings import CheckReport, Finding, RuleInfo
+
+
+def check(paths, root=".", baseline_path=None, only=None) -> CheckReport:
+    """Parse, run every rule, apply the baseline; the one-call API the
+    CLI and tests share."""
+    project = load_project(paths, root=root)
+    findings = run_rules(project, only=only)
+    baseline = load_baseline(baseline_path) if baseline_path else {}
+    return apply_baseline(findings, baseline,
+                          files_checked=len(project.modules))
+
+
+__all__ = ["check", "CheckReport", "Finding", "RuleInfo", "Module",
+           "Project", "load_project", "run_rules", "format_human",
+           "load_baseline", "save_baseline", "apply_baseline"]

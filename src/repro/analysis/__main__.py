@@ -1,0 +1,85 @@
+"""CLI: ``python -m repro.analysis check src/ [--baseline F] [--json]``.
+
+Exit code 0 when every finding is baselined (or none exist), 1 when new
+findings gate the change, 2 on usage errors.  ``--update-baseline``
+rewrites the baseline from the current run (accept-and-move-on for
+legacy findings); ``rules`` prints the catalog.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.analysis import (check, format_human, load_baseline,
+                            save_baseline)
+from repro.analysis.findings import finalize_fingerprints
+from repro.analysis.rules import RULES
+
+
+def _cmd_check(args: argparse.Namespace) -> int:
+    report = check(args.paths, root=args.root,
+                   baseline_path=args.baseline, only=args.rules)
+    if args.update_baseline:
+        if not args.baseline:
+            print("--update-baseline requires --baseline", file=sys.stderr)
+            return 2
+        save_baseline(args.baseline,
+                      finalize_fingerprints(report.findings))
+        print(f"[analysis] baseline {args.baseline} updated: "
+              f"{len(report.findings)} finding(s) accepted "
+              f"({len(report.expired)} stale entr"
+              f"{'y' if len(report.expired) == 1 else 'ies'} dropped)")
+        return 0
+    if args.json:
+        print(json.dumps(report.to_dict(), indent=2, sort_keys=True))
+    else:
+        print(format_human(report, baseline_path=args.baseline))
+    return 1 if report.new else 0
+
+
+def _cmd_rules(_args: argparse.Namespace) -> int:
+    for rule_id in sorted(RULES):
+        info = RULES[rule_id]
+        print(f"{rule_id}  [{info.severity:7s}] ({info.family}) "
+              f"{info.summary}")
+    return 0
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Repo-aware static analysis (see API.md).")
+    sub = parser.add_subparsers(dest="cmd", required=True)
+
+    p_check = sub.add_parser("check", help="run every rule over paths")
+    p_check.add_argument("paths", nargs="+",
+                         help="files or directories to analyze")
+    p_check.add_argument("--root", default=".",
+                         help="repo root paths are relative to")
+    p_check.add_argument("--baseline", default=None,
+                         help="baseline JSON; findings in it don't gate")
+    p_check.add_argument("--update-baseline", action="store_true",
+                         help="rewrite the baseline from this run")
+    p_check.add_argument("--json", action="store_true",
+                         help="machine-readable report on stdout")
+    p_check.add_argument("--rules", nargs="*", default=None,
+                         help="run only these rule ids")
+    p_check.set_defaults(fn=_cmd_check)
+
+    p_rules = sub.add_parser("rules", help="print the rule catalog")
+    p_rules.set_defaults(fn=_cmd_rules)
+
+    args = parser.parse_args(argv)
+    # a bad --baseline should be a clean usage error, not a traceback
+    if getattr(args, "baseline", None):
+        try:
+            load_baseline(args.baseline)
+        except (ValueError, json.JSONDecodeError) as e:
+            print(f"error: {e}", file=sys.stderr)
+            return 2
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

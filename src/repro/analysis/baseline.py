@@ -1,0 +1,70 @@
+"""Baseline file: the committed ledger of accepted legacy findings.
+
+CI gates on *unbaselined* findings only — the pass can land on a codebase
+with known, deliberate violations (e.g. ``flash_attention`` predating the
+schedule layer) without blocking every PR, while any NEW violation fails.
+``--update-baseline`` rewrites the file from the current run (adding new
+findings, dropping expired entries), so the workflow is:
+
+    python -m repro.analysis check src/ --baseline .analysis-baseline.json
+    # fix what you can; for the rest:
+    python -m repro.analysis check src/ --baseline .analysis-baseline.json \
+        --update-baseline
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, List
+
+from repro.analysis.findings import CheckReport, Finding
+
+BASELINE_VERSION = 1
+
+
+def load_baseline(path: str) -> Dict[str, Dict[str, Any]]:
+    """fingerprint -> entry map; a missing file is an empty baseline, a
+    corrupt or version-mismatched one is an error (a silently ignored
+    baseline would re-flag hundreds of accepted findings)."""
+    if not os.path.exists(path):
+        return {}
+    with open(path) as f:
+        doc = json.load(f)
+    if doc.get("version") != BASELINE_VERSION:
+        raise ValueError(f"baseline {path!r} has version "
+                         f"{doc.get('version')!r}, expected "
+                         f"{BASELINE_VERSION}")
+    return {e["fingerprint"]: e for e in doc.get("findings", [])}
+
+
+def save_baseline(path: str, findings: List[Finding]) -> None:
+    doc = {"version": BASELINE_VERSION,
+           "findings": [{"fingerprint": f.fingerprint, "rule": f.rule,
+                         "path": f.path, "message": f.message,
+                         "snippet": f.snippet}
+                        for f in sorted(findings,
+                                        key=lambda f: (f.path, f.line,
+                                                       f.rule))]}
+    tmp = f"{path}.tmp.{os.getpid()}"
+    with open(tmp, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+    os.replace(tmp, path)
+
+
+def apply_baseline(findings: List[Finding],
+                   baseline: Dict[str, Dict[str, Any]],
+                   files_checked: int = 0) -> CheckReport:
+    """Split findings into new vs baselined; baseline entries whose
+    fingerprint no longer matches any finding are reported as expired."""
+    report = CheckReport(findings=list(findings), files_checked=files_checked)
+    live = set()
+    for f in findings:
+        if f.fingerprint in baseline:
+            live.add(f.fingerprint)
+            report.baselined.append(f)
+        else:
+            report.new.append(f)
+    report.expired = [e for fp, e in sorted(baseline.items())
+                      if fp not in live]
+    return report

@@ -1,0 +1,171 @@
+"""The analysis driver: parse every ``.py`` under the given paths into a
+:class:`Project`, run each registered rule over it, honor inline
+suppressions, and return fingerprinted findings.
+
+Rules are *project-scoped*, not file-scoped — the lock-order graph and
+the kernel/ref-twin contract both need to see every module at once — so
+a rule is one ``check(project) -> [Finding]`` callable (see
+:mod:`repro.analysis.rules`).
+
+Inline suppression: a flagged line carrying ``# repro: ignore`` mutes
+every rule on that line; ``# repro: ignore[C001,K002]`` mutes only the
+named rules.  Suppressions are for deliberate, commented exceptions —
+legacy debt belongs in the baseline instead (see
+:mod:`repro.analysis.baseline`).
+"""
+from __future__ import annotations
+
+import ast
+import os
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+from repro.analysis.findings import Finding, finalize_fingerprints
+
+_SUPPRESS_RE = re.compile(r"#\s*repro:\s*ignore(?:\[([A-Za-z0-9_,\s]+)\])?")
+
+
+@dataclass
+class Module:
+    """One parsed source file plus everything rules ask of it."""
+    path: str                    # repo-relative, forward slashes
+    name: str                    # dotted module name best-effort
+    source: str
+    tree: ast.Module
+    lines: List[str] = field(default_factory=list)
+
+    def line(self, lineno: int) -> str:
+        if 1 <= lineno <= len(self.lines):
+            return self.lines[lineno - 1].strip()
+        return ""
+
+    def segment(self, node: ast.AST) -> str:
+        """Source text spanned by ``node`` (for comment-scanning rules)."""
+        lo = getattr(node, "lineno", 1)
+        hi = getattr(node, "end_lineno", lo)
+        return "\n".join(self.lines[lo - 1:hi])
+
+    def suppressed(self, lineno: int, rule_id: str) -> bool:
+        m = _SUPPRESS_RE.search(self.line(lineno))
+        if m is None:
+            return False
+        if m.group(1) is None:
+            return True
+        return rule_id in {r.strip() for r in m.group(1).split(",")}
+
+
+@dataclass
+class Project:
+    root: str
+    modules: List[Module] = field(default_factory=list)
+
+    def by_path(self, suffix: str) -> Optional[Module]:
+        for m in self.modules:
+            if m.path.endswith(suffix):
+                return m
+        return None
+
+    def finding(self, module: Module, rule_id: str, severity: str,
+                node_or_line, message: str) -> Optional[Finding]:
+        """Build a finding at an AST node (or a bare line number); returns
+        None when an inline comment suppresses it."""
+        lineno = getattr(node_or_line, "lineno", node_or_line)
+        if module.suppressed(lineno, rule_id):
+            return None
+        return Finding(rule=rule_id, severity=severity, path=module.path,
+                       line=int(lineno), message=message,
+                       snippet=module.line(lineno))
+
+
+def _module_name(rel_path: str) -> str:
+    parts = rel_path[:-3].split("/")            # strip .py
+    if parts and parts[0] == "src":
+        parts = parts[1:]
+    if parts and parts[-1] == "__init__":
+        parts = parts[:-1]
+    return ".".join(parts)
+
+
+def collect_files(paths: Sequence[str], root: str) -> List[str]:
+    """Every ``.py`` file under the given files/directories, sorted,
+    repo-relative to ``root``; hidden and cache dirs skipped."""
+    found = set()
+    for p in paths:
+        ap = os.path.join(root, p) if not os.path.isabs(p) else p
+        if os.path.isfile(ap) and ap.endswith(".py"):
+            found.add(os.path.relpath(ap, root))
+            continue
+        for dirpath, dirnames, filenames in os.walk(ap):
+            dirnames[:] = [d for d in dirnames
+                           if not d.startswith(".") and
+                           d != "__pycache__"]
+            for fn in filenames:
+                if fn.endswith(".py"):
+                    found.add(os.path.relpath(os.path.join(dirpath, fn),
+                                              root))
+    return sorted(f.replace(os.sep, "/") for f in found)
+
+
+def load_project(paths: Sequence[str], root: str = ".") -> Project:
+    root = os.path.abspath(root)
+    project = Project(root=root)
+    for rel in collect_files(paths, root):
+        full = os.path.join(root, rel)
+        with open(full, encoding="utf-8") as f:
+            source = f.read()
+        try:
+            tree = ast.parse(source, filename=rel)
+        except SyntaxError as e:
+            # a file the analyzer cannot parse is itself a finding target,
+            # but never a crash; surface it as a pseudo-module with an
+            # empty tree and let the syntax rule in rules/__init__ flag it
+            tree = ast.Module(body=[], type_ignores=[])
+            tree._syntax_error = e               # type: ignore[attr-defined]
+        project.modules.append(Module(path=rel, name=_module_name(rel),
+                                      source=source, tree=tree,
+                                      lines=source.splitlines()))
+    return project
+
+
+def run_rules(project: Project,
+              rules: Optional[Dict[str, object]] = None,
+              only: Optional[Sequence[str]] = None) -> List[Finding]:
+    """Run every registered rule (or the ``only`` subset) and return the
+    fingerprinted, source-ordered findings."""
+    from repro.analysis.rules import RULES
+    registry = dict(rules if rules is not None else RULES)
+    if only:
+        unknown = sorted(set(only) - set(registry))
+        if unknown:
+            raise KeyError(f"unknown rule ids {unknown}; have "
+                           f"{sorted(registry)}")
+        registry = {k: v for k, v in registry.items() if k in only}
+    findings: List[Finding] = []
+    for rule_id in sorted(registry):
+        info = registry[rule_id]
+        findings.extend(f for f in info.check(project) if f is not None)
+    return finalize_fingerprints(findings)
+
+
+def format_human(report, baseline_path: Optional[str] = None) -> str:
+    """The terminal report: new findings first (the gate), then a one-line
+    tally of the muted baseline and any expired entries."""
+    out = []
+    for f in report.new:
+        out.append(f.format())
+        if f.snippet:
+            out.append(f"    {f.snippet}")
+    if report.expired:
+        out.append(f"[analysis] {len(report.expired)} baseline entr"
+                   f"{'y is' if len(report.expired) == 1 else 'ies are'} "
+                   f"stale (fixed or moved) — refresh with "
+                   f"--update-baseline:")
+        for e in report.expired:
+            out.append(f"    {e.get('rule')} {e.get('path')}: "
+                       f"{e.get('message')}")
+    gate = "FAIL" if report.new else "OK"
+    base = f", {len(report.baselined)} baselined" if baseline_path else ""
+    out.append(f"[analysis] {gate}: {len(report.new)} new finding(s)"
+               f"{base}, {report.files_checked} files checked")
+    return "\n".join(out)

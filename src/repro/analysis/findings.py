@@ -1,0 +1,97 @@
+"""Typed findings: what a rule reports, how it serializes, and the
+line-number-stable fingerprint the baseline matches on.
+
+A :class:`Finding` is one (rule, severity, file:line, message, snippet)
+record.  Its ``fingerprint`` deliberately EXCLUDES the line number: it
+hashes ``rule | path | normalized snippet | occurrence index`` (the index
+disambiguates identical snippets in one file), so unrelated edits above a
+baselined finding don't expire it, while moving the code to another file
+or changing the flagged line itself does.
+"""
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass, field
+from typing import Any, Dict, List
+
+SEVERITIES = ("error", "warning")
+
+
+@dataclass(frozen=True)
+class Finding:
+    rule: str                    # e.g. "C001"
+    severity: str                # "error" | "warning"
+    path: str                    # repo-relative, forward slashes
+    line: int                    # 1-based
+    message: str
+    snippet: str = ""            # the flagged source line, stripped
+    fingerprint: str = ""        # filled by finalize_fingerprints
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {"rule": self.rule, "severity": self.severity,
+                "path": self.path, "line": self.line,
+                "message": self.message, "snippet": self.snippet,
+                "fingerprint": self.fingerprint}
+
+    def format(self) -> str:
+        return (f"{self.path}:{self.line}: {self.rule} "
+                f"[{self.severity}] {self.message}")
+
+
+def _digest(rule: str, path: str, snippet: str, occurrence: int) -> str:
+    norm = " ".join(snippet.split())
+    raw = f"{rule}|{path}|{norm}|{occurrence}"
+    return hashlib.sha1(raw.encode("utf-8")).hexdigest()[:16]
+
+
+def finalize_fingerprints(findings: List[Finding]) -> List[Finding]:
+    """Assign stable fingerprints: findings sharing (rule, path, snippet)
+    are numbered by source order so duplicates stay distinct."""
+    seen: Dict[tuple, int] = {}
+    out: List[Finding] = []
+    for f in sorted(findings, key=lambda f: (f.path, f.line, f.rule)):
+        key = (f.rule, f.path, " ".join(f.snippet.split()))
+        occ = seen.get(key, 0)
+        seen[key] = occ + 1
+        out.append(Finding(rule=f.rule, severity=f.severity, path=f.path,
+                           line=f.line, message=f.message, snippet=f.snippet,
+                           fingerprint=_digest(f.rule, f.path, f.snippet,
+                                               occ)))
+    return out
+
+
+@dataclass
+class RuleInfo:
+    """Registry entry: one rule id, its severity, and the checker."""
+    rule_id: str
+    severity: str
+    summary: str
+    check: Any                   # Callable[[Project], List[Finding]]
+    family: str = "general"
+
+    def __post_init__(self):
+        if self.severity not in SEVERITIES:
+            raise ValueError(f"bad severity {self.severity!r}")
+
+
+@dataclass
+class CheckReport:
+    """Everything one ``check`` run produced, pre-split against the
+    baseline (``new`` fails the gate; ``baselined`` is muted legacy;
+    ``expired`` names baseline entries no longer found in the code)."""
+    findings: List[Finding] = field(default_factory=list)
+    new: List[Finding] = field(default_factory=list)
+    baselined: List[Finding] = field(default_factory=list)
+    expired: List[Dict[str, Any]] = field(default_factory=list)
+    files_checked: int = 0
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {"version": 1,
+                "files_checked": self.files_checked,
+                "counts": {"total": len(self.findings),
+                           "new": len(self.new),
+                           "baselined": len(self.baselined),
+                           "expired": len(self.expired)},
+                "findings": [f.to_dict() for f in self.new],
+                "baselined": [f.to_dict() for f in self.baselined],
+                "expired": self.expired}

@@ -1,0 +1,329 @@
+"""Runtime lock-discipline mode: the dynamic twin of the static C002
+lock-order rule.
+
+``install()`` replaces ``threading.Lock`` / ``threading.RLock`` with
+factories returning *tracked* proxies.  Every acquisition is recorded
+against the acquiring thread's held-stack; holding lock A while
+acquiring lock B adds the edge ``site(A) -> site(B)`` to a global
+acquisition-order graph, where a lock's *site* is the ``file:line`` that
+allocated it (all instances from one allocation site share a node — the
+discipline is per-site, not per-instance, so ``ShardStore._lock`` is one
+node no matter how many stores a test builds).  A cycle in that graph is
+a latent deadlock even if this run interleaved safely —
+:func:`assert_acyclic` turns it into a hard failure.  Only locks
+allocated from repo code are tracked; stdlib / site-packages allocators
+get a plain untracked lock (their internal orderings are not this
+repo's discipline).
+
+Tests enable it with ``REPRO_LOCKCHECK=1`` (see ``tests/conftest.py``);
+the CI lockcheck job runs the tier-1 suite under it and fails on any
+ordering cycle.  Same-site edges (two instances of the same class locked
+in sequence) are not recorded: they are overwhelmingly the benign
+"iterate over stores" pattern, and the static rule still flags genuine
+nested self-acquisition of a non-reentrant lock.
+
+The proxies implement the full lock protocol including the private
+``_release_save`` / ``_acquire_restore`` / ``_is_owned`` hooks
+``threading.Condition`` uses, so wrapped locks work inside Condition,
+Future, Queue, and friends.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import sysconfig
+import threading
+from collections import defaultdict
+from typing import Any, Dict, List, Optional, Tuple
+
+_REAL_LOCK = threading.Lock
+_REAL_RLOCK = threading.RLock
+
+# locks allocated by the stdlib or third-party packages are NOT tracked:
+# their internal orderings (e.g. ThreadPoolExecutor's per-executor lock
+# vs. concurrent.futures' module-global shutdown lock) are CPython's
+# discipline to keep, not this repo's, and tracking them produces
+# false-positive cycles.  Only repo-allocated locks enter the graph.
+_STDLIB_PREFIX = sysconfig.get_paths()["stdlib"]
+
+
+class LockOrderError(RuntimeError):
+    """The acquisition-order graph has a cycle (latent deadlock)."""
+
+
+class _State:
+    def __init__(self) -> None:
+        self.mu = _REAL_LOCK()              # guards everything below
+        self.sites: Dict[str, int] = {}     # site -> locks allocated there
+        self.edges: Dict[Tuple[str, str], int] = defaultdict(int)
+        self.held: Dict[int, List[str]] = defaultdict(list)  # tid -> sites
+        self.acquisitions = 0
+
+
+_state: Optional[_State] = None
+_installed = False
+
+
+def _foreign(filename: str) -> bool:
+    """True when ``filename`` belongs to the stdlib or an installed
+    package rather than this repo — such allocation sites are untracked."""
+    fn = filename.replace(os.sep, "/")
+    return (filename.startswith(_STDLIB_PREFIX)
+            or "site-packages" in fn or "dist-packages" in fn
+            or filename.startswith("<"))
+
+
+def _allocation_site() -> Optional[str]:
+    """file:line of the frame that called the lock factory, skipping this
+    module and threading internals; paths shortened to their last three
+    components so sites are stable across checkouts.  Returns None for
+    foreign (stdlib / site-packages) allocators — those locks stay
+    untracked."""
+    f = sys._getframe(2)
+    while f is not None:
+        fn = f.f_code.co_filename
+        if not (fn.endswith("lockcheck.py") or fn.endswith("threading.py")
+                or fn.endswith("_weakrefset.py")):
+            if _foreign(fn):
+                return None
+            short = "/".join(fn.replace(os.sep, "/").split("/")[-3:])
+            return f"{short}:{f.f_lineno}"
+        f = f.f_back
+    return None
+
+
+def _record_acquire(site: str) -> None:
+    st = _state
+    if st is None:
+        return
+    tid = threading.get_ident()
+    with st.mu:
+        st.acquisitions += 1
+        stack = st.held[tid]
+        if stack and stack[-1] != site:
+            st.edges[(stack[-1], site)] += 1
+        stack.append(site)
+
+
+def _record_release(site: str) -> None:
+    st = _state
+    if st is None:
+        return
+    tid = threading.get_ident()
+    with st.mu:
+        stack = st.held.get(tid)
+        if stack is not None:
+            for i in range(len(stack) - 1, -1, -1):
+                if stack[i] == site:
+                    del stack[i]
+                    break
+            if not stack:
+                st.held.pop(tid, None)
+
+
+class _TrackedLock:
+    """Proxy over a real Lock/RLock recording acquisition order.  RLock
+    re-entries are counted per thread and only the outermost
+    acquire/release touch the graph."""
+
+    def __init__(self, inner: Any, site: str, reentrant: bool):
+        self._inner = inner
+        self._site = site
+        self._reentrant = reentrant
+        self._depth: Dict[int, int] = {}    # tid -> re-entry depth
+
+    # -- bookkeeping ---------------------------------------------------------
+
+    def _enter(self) -> None:
+        tid = threading.get_ident()
+        if self._reentrant:
+            d = self._depth.get(tid, 0)
+            self._depth[tid] = d + 1
+            if d:                           # re-entry: no new edge
+                return
+        _record_acquire(self._site)
+
+    def _exit(self) -> None:
+        tid = threading.get_ident()
+        if self._reentrant:
+            d = self._depth.get(tid, 1) - 1
+            if d > 0:
+                self._depth[tid] = d
+                return
+            self._depth.pop(tid, None)
+        _record_release(self._site)
+
+    # -- the lock protocol ---------------------------------------------------
+
+    def acquire(self, blocking: bool = True, timeout: float = -1) -> bool:
+        ok = self._inner.acquire(blocking, timeout)
+        if ok:
+            self._enter()
+        return ok
+
+    def release(self) -> None:
+        self._exit()
+        self._inner.release()
+
+    def locked(self) -> bool:
+        return self._inner.locked()
+
+    def __enter__(self):
+        self.acquire()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.release()
+
+    def __repr__(self) -> str:
+        return f"<tracked {self._inner!r} from {self._site}>"
+
+    def __getattr__(self, name: str):
+        # anything else of the lock protocol (_at_fork_reinit, ...) passes
+        # straight through to the real lock, untracked
+        return getattr(self._inner, name)
+
+    # -- Condition integration (private CPython protocol) --------------------
+
+    def _is_owned(self):
+        if hasattr(self._inner, "_is_owned"):
+            return self._inner._is_owned()
+        if self._inner.acquire(False):
+            self._inner.release()
+            return False
+        return True
+
+    def _release_save(self):
+        tid = threading.get_ident()
+        depth = self._depth.pop(tid, 0) if self._reentrant else 0
+        _record_release(self._site)
+        if hasattr(self._inner, "_release_save"):
+            return (self._inner._release_save(), depth)
+        self._inner.release()
+        return (None, depth)
+
+    def _acquire_restore(self, state) -> None:
+        saved, depth = state
+        if hasattr(self._inner, "_acquire_restore"):
+            self._inner._acquire_restore(saved)
+        else:
+            self._inner.acquire()
+        _record_acquire(self._site)
+        if self._reentrant and depth:
+            self._depth[threading.get_ident()] = depth
+
+
+def _tracked_lock_factory():
+    site = _allocation_site()
+    if site is None:
+        return _REAL_LOCK()
+    st = _state
+    if st is not None:
+        with st.mu:
+            st.sites[site] = st.sites.get(site, 0) + 1
+    return _TrackedLock(_REAL_LOCK(), site, reentrant=False)
+
+
+def _tracked_rlock_factory():
+    site = _allocation_site()
+    if site is None:
+        return _REAL_RLOCK()
+    st = _state
+    if st is not None:
+        with st.mu:
+            st.sites[site] = st.sites.get(site, 0) + 1
+    return _TrackedLock(_REAL_RLOCK(), site, reentrant=True)
+
+
+def install() -> None:
+    """Patch the ``threading`` lock factories; locks created *after* this
+    point are tracked (module-import-time locks are not, which is fine:
+    the interesting locks are per-object)."""
+    global _state, _installed
+    if _installed:
+        return
+    _state = _State()
+    threading.Lock = _tracked_lock_factory          # type: ignore
+    threading.RLock = _tracked_rlock_factory        # type: ignore
+    _installed = True
+
+
+def uninstall() -> None:
+    global _state, _installed
+    threading.Lock = _REAL_LOCK                     # type: ignore
+    threading.RLock = _REAL_RLOCK                   # type: ignore
+    _installed = False
+    _state = None
+
+
+def enabled() -> bool:
+    return _installed
+
+
+def _snapshot_edges() -> Dict[Tuple[str, str], int]:
+    st = _state
+    if st is None:
+        return {}
+    with st.mu:
+        return dict(st.edges)
+
+
+def find_cycles() -> List[List[str]]:
+    """Every elementary cycle-witness found by DFS over the current
+    acquisition-order graph (one witness per back edge)."""
+    edges = _snapshot_edges()
+    graph: Dict[str, List[str]] = defaultdict(list)
+    for a, b in edges:
+        graph[a].append(b)
+    WHITE, GREY, BLACK = 0, 1, 2
+    color = {n: WHITE for n in
+             set(graph) | {b for vs in graph.values() for b in vs}}
+    parent: Dict[str, str] = {}
+    cycles: List[List[str]] = []
+
+    def dfs(n: str) -> None:
+        color[n] = GREY
+        for nxt in graph.get(n, ()):
+            if color[nxt] == GREY:
+                cyc = [nxt, n]
+                cur = n
+                while cur != nxt:
+                    cur = parent[cur]
+                    cyc.append(cur)
+                cycles.append(list(reversed(cyc)))
+            elif color[nxt] == WHITE:
+                parent[nxt] = n
+                dfs(nxt)
+        color[n] = BLACK
+
+    for n in sorted(color):
+        if color[n] == WHITE:
+            dfs(n)
+    return cycles
+
+
+def report() -> Dict[str, Any]:
+    st = _state
+    locks = 0
+    acquisitions = 0
+    if st is not None:
+        with st.mu:
+            locks = sum(st.sites.values())
+            acquisitions = st.acquisitions
+    edges = _snapshot_edges()
+    return {"locks": locks, "sites": len(st.sites) if st else 0,
+            "acquisitions": acquisitions,
+            "edges": [{"from": a, "to": b, "count": c}
+                      for (a, b), c in sorted(edges.items())],
+            "cycles": find_cycles()}
+
+
+def assert_acyclic() -> None:
+    cycles = find_cycles()
+    if cycles:
+        lines = ["lock acquisition-order cycle(s) detected:"]
+        for cyc in cycles:
+            lines.append("  " + " -> ".join(cyc))
+        lines.append("acquire these locks in one global order "
+                     "(see repro.analysis rule C002)")
+        raise LockOrderError("\n".join(lines))

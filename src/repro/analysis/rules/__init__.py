@@ -1,0 +1,114 @@
+"""Rule registry + the AST helpers every rule family shares.
+
+A rule is registered with the :func:`rule` decorator and receives the
+whole :class:`~repro.analysis.engine.Project` — rules here are repo-aware
+(the lock-order graph spans modules; the kernel contract pairs
+``kernels/*.py`` with ``kernels/ref.py``), so per-file scoping would be
+the wrong shape.  Rule ids are stable API: they appear in baselines,
+suppression comments, and CI logs.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Tuple
+
+from repro.analysis.engine import Module, Project
+from repro.analysis.findings import Finding, RuleInfo
+
+RULES: Dict[str, RuleInfo] = {}
+
+
+def rule(rule_id: str, severity: str, summary: str, family: str):
+    def deco(fn):
+        if rule_id in RULES:
+            raise ValueError(f"duplicate rule id {rule_id}")
+        RULES[rule_id] = RuleInfo(rule_id=rule_id, severity=severity,
+                                  summary=summary, check=fn, family=family)
+        return fn
+    return deco
+
+
+# -- shared AST helpers ------------------------------------------------------
+
+def dotted(node: ast.AST) -> Optional[str]:
+    """``a.b.c`` for Name/Attribute chains, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def iter_functions(tree: ast.AST, qual: str = ""
+                   ) -> Iterator[Tuple[str, ast.FunctionDef]]:
+    """Every (qualname, def) in the module — top-level functions, methods,
+    and nested defs alike."""
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node.name, node
+
+
+def top_level_functions(tree: ast.Module) -> Dict[str, ast.FunctionDef]:
+    return {n.name: n for n in tree.body
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))}
+
+
+def local_calls(fn: ast.AST) -> List[str]:
+    """Names this function calls that could resolve locally: bare names
+    and ``self.method`` attributes."""
+    out = []
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call):
+            if isinstance(node.func, ast.Name):
+                out.append(node.func.id)
+            elif (isinstance(node.func, ast.Attribute)
+                  and isinstance(node.func.value, ast.Name)
+                  and node.func.value.id == "self"):
+                out.append(node.func.attr)
+    return out
+
+
+def transitive_closure(roots: List[str],
+                       graph: Dict[str, List[str]]) -> set:
+    seen = set()
+    stack = list(roots)
+    while stack:
+        f = stack.pop()
+        if f in seen:
+            continue
+        seen.add(f)
+        stack.extend(graph.get(f, ()))
+    return seen
+
+
+def call_graph(defs: Dict[str, ast.FunctionDef]) -> Dict[str, List[str]]:
+    return {name: [c for c in local_calls(fn) if c in defs]
+            for name, fn in defs.items()}
+
+
+# -- the one engine-level rule ----------------------------------------------
+
+@rule("S000", "error", "file fails to parse", family="general")
+def check_syntax(project: Project) -> List[Finding]:
+    out = []
+    for m in project.modules:
+        err = getattr(m.tree, "_syntax_error", None)
+        if err is not None:
+            out.append(Finding(rule="S000", severity="error", path=m.path,
+                               line=int(err.lineno or 1),
+                               message=f"syntax error: {err.msg}",
+                               snippet=m.line(int(err.lineno or 1))))
+    return out
+
+
+# Importing the families registers their rules.
+from repro.analysis.rules import concurrency   # noqa: E402,F401
+from repro.analysis.rules import jax_purity    # noqa: E402,F401
+from repro.analysis.rules import kernel_contract  # noqa: E402,F401
+
+__all__ = ["RULES", "rule", "dotted", "iter_functions",
+           "top_level_functions", "local_calls", "transitive_closure",
+           "call_graph", "Module", "Project"]

@@ -1,0 +1,360 @@
+"""Concurrency rules: the hand-rolled runtime (daemon pools, spilling
+store, span stacks, metrics registry) is all guarded by per-object
+``threading.Lock``s — these rules catch the three drift patterns that
+actually bite such code:
+
+C001  an attribute mutated both under ``with self._lock`` and bare —
+      the classic torn-update race.
+C002  inconsistent lock acquisition order across the codebase (a static
+      lock-order graph with cycle detection; the runtime twin is
+      :mod:`repro.analysis.lockcheck`), plus nested re-acquisition of a
+      known non-reentrant ``threading.Lock``.
+C003  concurrency results dropped on the floor: a ``.submit()`` Future
+      discarded (its exception is silently lost) or a non-daemon
+      ``threading.Thread`` that is never joined.
+
+Methods named ``*_locked``, ``__init__``/``__new__``/``__del__``, and
+methods whose text declares the convention ("caller holds the lock")
+count as lock-held for C001.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis.engine import Module, Project
+from repro.analysis.findings import Finding
+from repro.analysis.rules import dotted, rule
+
+_LOCK_FACTORIES = {"threading.Lock", "threading.RLock",
+                   "threading.Condition", "Lock", "RLock", "Condition"}
+_LOCK_NAME_RE = re.compile(r"(^|_)(lock|rlock|mutex|mu)$")
+_HELD_COMMENT_RE = re.compile(r"caller[\s\S]{0,60}?hold[\s\S]{0,60}?lock|"
+                              r"hold[\s\S]{0,40}?lock[\s\S]{0,40}?caller",
+                              re.IGNORECASE)
+_EXEMPT_METHODS = {"__init__", "__new__", "__del__", "__post_init__"}
+
+
+def _lock_attrs(cls: ast.ClassDef) -> Dict[str, str]:
+    """Attr name -> factory kind for every ``self.X = threading.Lock()``-
+    style assignment in the class, plus any ``with self.X`` whose name
+    looks lock-like (covers locks injected from outside)."""
+    locks: Dict[str, str] = {}
+    for node in ast.walk(cls):
+        if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+            kind = dotted(node.value.func)
+            if kind in _LOCK_FACTORIES:
+                for t in node.targets:
+                    if (isinstance(t, ast.Attribute)
+                            and isinstance(t.value, ast.Name)
+                            and t.value.id == "self"):
+                        locks[t.attr] = kind.split(".")[-1]
+        elif isinstance(node, ast.With):
+            for item in node.items:
+                e = item.context_expr
+                if (isinstance(e, ast.Attribute)
+                        and isinstance(e.value, ast.Name)
+                        and e.value.id == "self"
+                        and _LOCK_NAME_RE.search(e.attr)):
+                    locks.setdefault(e.attr, "unknown")
+    return locks
+
+
+def _mutated_attr(target: ast.AST) -> Optional[str]:
+    """The ``self.X`` attribute a store-target mutates, unwrapping
+    subscripts (``self.stats["k"] += 1`` mutates ``stats``) and slices."""
+    while isinstance(target, (ast.Subscript, ast.Starred)):
+        target = target.value
+    if (isinstance(target, ast.Attribute)
+            and isinstance(target.value, ast.Name)
+            and target.value.id == "self"):
+        return target.attr
+    return None
+
+
+def _is_lock_with(item: ast.withitem, lock_names: Set[str]) -> bool:
+    e = item.context_expr
+    return (isinstance(e, ast.Attribute) and isinstance(e.value, ast.Name)
+            and e.value.id == "self" and e.attr in lock_names)
+
+
+def _method_lock_context(module: Module, fn: ast.FunctionDef
+                         ) -> Optional[str]:
+    """"construct" for lifecycle methods whose mutations predate (or
+    postdate) sharing and count for neither side; "held" for methods the
+    code declares lock-held by convention (``*_locked`` names, "caller
+    holds the lock" comments), whose mutations count as locked; None for
+    ordinary methods."""
+    if fn.name in _EXEMPT_METHODS:
+        return "construct"
+    if fn.name.endswith("_locked"):
+        return "held"
+    if _HELD_COMMENT_RE.search(module.segment(fn)) is not None:
+        return "held"
+    return None
+
+
+def _scan_mutations(fn: ast.FunctionDef, lock_names: Set[str]
+                    ) -> List[Tuple[str, int, bool]]:
+    """(attr, line, under_lock) for every self-attribute store in the
+    method.  Nested function bodies are skipped: they run later, on a
+    thread we cannot see, so charging them to the lexical lock scope
+    would be wrong in both directions."""
+    out: List[Tuple[str, int, bool]] = []
+
+    def visit(node: ast.AST, locked: bool) -> None:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda)):
+            return
+        if isinstance(node, ast.With):
+            inner = locked or any(_is_lock_with(i, lock_names)
+                                  for i in node.items)
+            for child in node.body:
+                visit(child, inner)
+            return
+        targets: List[ast.AST] = []
+        if isinstance(node, ast.Assign):
+            targets = list(node.targets)
+        elif isinstance(node, (ast.AugAssign, ast.AnnAssign)):
+            targets = [node.target]
+        elif isinstance(node, ast.Delete):
+            targets = list(node.targets)
+        for t in targets:
+            if isinstance(t, ast.Tuple):
+                sub = list(t.elts)
+            else:
+                sub = [t]
+            for s in sub:
+                attr = _mutated_attr(s)
+                if attr is not None and attr not in lock_names:
+                    out.append((attr, node.lineno, locked))
+        for child in ast.iter_child_nodes(node):
+            visit(child, locked)
+
+    for stmt in fn.body:
+        visit(stmt, False)
+    return out
+
+
+@rule("C001", "error",
+      "attribute mutated both inside and outside the class's lock",
+      family="concurrency")
+def check_mixed_lock_discipline(project: Project) -> List[Finding]:
+    out: List[Finding] = []
+    for m in project.modules:
+        for cls in [n for n in ast.walk(m.tree)
+                    if isinstance(n, ast.ClassDef)]:
+            locks = _lock_attrs(cls)
+            if not locks:
+                continue
+            lock_names = set(locks)
+            locked_sites: Dict[str, List[int]] = {}
+            unlocked_sites: Dict[str, List[Tuple[str, int]]] = {}
+            for fn in [n for n in cls.body
+                       if isinstance(n, (ast.FunctionDef,
+                                         ast.AsyncFunctionDef))]:
+                ctx = _method_lock_context(m, fn)
+                for attr, line, locked in _scan_mutations(fn, lock_names):
+                    if ctx == "construct" and not locked:
+                        continue             # lifecycle: pre-sharing
+                    if locked or ctx == "held":
+                        locked_sites.setdefault(attr, []).append(line)
+                    else:
+                        unlocked_sites.setdefault(attr, []).append(
+                            (fn.name, line))
+            for attr in sorted(set(locked_sites) & set(unlocked_sites)):
+                guarded = min(locked_sites[attr])
+                for fn_name, line in unlocked_sites[attr]:
+                    out.append(project.finding(
+                        m, "C001", "error", line,
+                        f"'self.{attr}' of {cls.name} is mutated in "
+                        f"{fn_name}() without the lock, but under it at "
+                        f"line {guarded} — guard every mutation or mark "
+                        f"the method as lock-held"))
+    return [f for f in out if f is not None]
+
+
+# -- C002: static lock-order graph ------------------------------------------
+
+def _lock_node(module: Module, cls: Optional[str], func: str,
+               expr: ast.AST) -> Optional[str]:
+    """A stable cross-codebase id for a lock expression, or None when the
+    expression doesn't look like a lock.  ``self.X`` keys on the class
+    (every instance shares the discipline); bare names key on the
+    enclosing function."""
+    if isinstance(expr, ast.Attribute) and isinstance(expr.value, ast.Name):
+        if expr.value.id == "self" and _LOCK_NAME_RE.search(expr.attr):
+            scope = cls if cls is not None else func
+            return f"{module.name}.{scope}.{expr.attr}"
+        d = dotted(expr)
+        if d is not None and _LOCK_NAME_RE.search(expr.attr):
+            return f"{module.name}.{d}"
+    elif isinstance(expr, ast.Name) and _LOCK_NAME_RE.search(expr.id):
+        return f"{module.name}.{func}.{expr.id}"
+    return None
+
+
+def _walk_lock_nesting(module: Module, cls: Optional[str],
+                       fn: ast.FunctionDef, edges, self_nests) -> None:
+    def visit(node: ast.AST, held: List[str]) -> None:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda)) and node is not fn:
+            for child in ast.iter_child_nodes(node):
+                visit(child, [])            # deferred body: fresh stack
+            return
+        if isinstance(node, ast.With):
+            pushed = list(held)
+            for item in node.items:
+                nid = _lock_node(module, cls, fn.name, item.context_expr)
+                if nid is None:
+                    continue
+                if nid in pushed:
+                    self_nests.append((nid, module, node.lineno))
+                else:
+                    if pushed:
+                        edges.setdefault((pushed[-1], nid), []).append(
+                            (module, node.lineno))
+                    pushed.append(nid)
+            for child in node.body:
+                visit(child, pushed)
+            return
+        for child in ast.iter_child_nodes(node):
+            visit(child, held)
+
+    for stmt in fn.body:
+        visit(stmt, [])
+
+
+def _find_cycle(edges: Dict[Tuple[str, str], list]) -> Optional[List[str]]:
+    graph: Dict[str, List[str]] = {}
+    for a, b in edges:
+        graph.setdefault(a, []).append(b)
+    WHITE, GREY, BLACK = 0, 1, 2
+    color = {n: WHITE for n in
+             set(graph) | {b for vs in graph.values() for b in vs}}
+    parent: Dict[str, str] = {}
+
+    def dfs(n: str) -> Optional[List[str]]:
+        color[n] = GREY
+        for nxt in graph.get(n, ()):
+            if color[nxt] == GREY:           # back edge: reconstruct
+                cyc = [nxt, n]
+                cur = n
+                while cur != nxt:
+                    cur = parent[cur]
+                    cyc.append(cur)
+                return list(reversed(cyc))
+            if color[nxt] == WHITE:
+                parent[nxt] = n
+                got = dfs(nxt)
+                if got is not None:
+                    return got
+        color[n] = BLACK
+        return None
+
+    for n in sorted(color):
+        if color[n] == WHITE:
+            got = dfs(n)
+            if got is not None:
+                return got
+    return None
+
+
+def build_lock_order_graph(project: Project):
+    """(edges, self_nests): every lexical outer->inner lock nesting in the
+    project, and every re-entry of a lock already held.  Exposed for
+    tests and for cross-validation against the runtime lockcheck."""
+    edges: Dict[Tuple[str, str], list] = {}
+    self_nests: list = []
+    for m in project.modules:
+        classes = {id(fn): cls.name for cls in ast.walk(m.tree)
+                   if isinstance(cls, ast.ClassDef)
+                   for fn in cls.body
+                   if isinstance(fn, (ast.FunctionDef,
+                                      ast.AsyncFunctionDef))}
+        for node in m.tree.body:
+            stack = [(node, None)]
+            while stack:
+                cur, cls = stack.pop()
+                if isinstance(cur, ast.ClassDef):
+                    for child in cur.body:
+                        stack.append((child, cur.name))
+                elif isinstance(cur, (ast.FunctionDef,
+                                      ast.AsyncFunctionDef)):
+                    _walk_lock_nesting(m, cls or classes.get(id(cur)),
+                                       cur, edges, self_nests)
+    return edges, self_nests
+
+
+def _nonreentrant_locks(project: Project) -> Set[str]:
+    """Node ids known to be plain ``threading.Lock`` (not RLock)."""
+    out: Set[str] = set()
+    for m in project.modules:
+        for cls in [n for n in ast.walk(m.tree)
+                    if isinstance(n, ast.ClassDef)]:
+            for attr, kind in _lock_attrs(cls).items():
+                if kind == "Lock":
+                    out.add(f"{m.name}.{cls.name}.{attr}")
+    return out
+
+
+@rule("C002", "error",
+      "inconsistent lock acquisition order (cycle in the lock-order graph)",
+      family="concurrency")
+def check_lock_order(project: Project) -> List[Finding]:
+    edges, self_nests = build_lock_order_graph(project)
+    out: List[Finding] = []
+    nonreentrant = _nonreentrant_locks(project)
+    for nid, module, lineno in self_nests:
+        if nid in nonreentrant:
+            out.append(project.finding(
+                module, "C002", "error", lineno,
+                f"non-reentrant lock {nid} acquired while already held "
+                f"— this deadlocks at runtime"))
+    cycle = _find_cycle(edges)
+    if cycle is not None:
+        a, b = cycle[0], cycle[1]
+        module, lineno = edges[(a, b)][0]
+        out.append(project.finding(
+            module, "C002", "error", lineno,
+            "lock-order cycle: " + " -> ".join(cycle) +
+            " — acquire these locks in one global order"))
+    return [f for f in out if f is not None]
+
+
+# -- C003: dropped concurrency results --------------------------------------
+
+@rule("C003", "warning",
+      "thread/executor result consumed without join/result",
+      family="concurrency")
+def check_unconsumed_results(project: Project) -> List[Finding]:
+    out: List[Finding] = []
+    for m in project.modules:
+        for node in ast.walk(m.tree):
+            # a bare-statement submit: the Future (and its exception)
+            # is unreachable from that point on
+            if (isinstance(node, ast.Expr)
+                    and isinstance(node.value, ast.Call)
+                    and isinstance(node.value.func, ast.Attribute)
+                    and node.value.func.attr == "submit"):
+                out.append(project.finding(
+                    m, "C003", "warning", node,
+                    "Future from .submit() is discarded — its exception "
+                    "can never be observed; keep it and call .result() "
+                    "(or wait on it)"))
+            # a non-daemon Thread nobody joins outlives (and can hang)
+            # the process
+            if isinstance(node, ast.Call):
+                d = dotted(node.func)
+                if d in ("threading.Thread", "Thread"):
+                    daemon = any(k.arg == "daemon" and
+                                 isinstance(k.value, ast.Constant) and
+                                 k.value.value is True
+                                 for k in node.keywords)
+                    if not daemon and ".join(" not in m.source:
+                        out.append(project.finding(
+                            m, "C003", "warning", node,
+                            "non-daemon Thread is never joined in this "
+                            "module — pass daemon=True or join it"))
+    return [f for f in out if f is not None]

@@ -1,0 +1,213 @@
+"""JAX purity rules: traced code must be pure — a ``time.time()`` baked
+into a jitted function is a constant after the first trace, an unseeded
+``np.random`` call silently freezes, and a host side effect inside a
+``pallas_call`` body runs once at trace time (or not at all on TPU).
+
+J001  impure host calls (wall clocks, unseeded numpy RNG) lexically
+      reachable from a jitted function or a Pallas kernel body, via the
+      module-local call graph.
+J002  host side effects (print/open/os/logging/...) inside a Pallas
+      kernel body; ``jax.debug.*`` and ``pl.debug_print`` are the
+      sanctioned escape hatches and stay allowed.
+J003  tracer concretization: ``.item()`` in jit-reachable code, and
+      ``float()``/``int()``/``bool()`` applied directly to a positional
+      parameter of a jitted function (positional params are tracers;
+      keyword-only params are static and stay allowed).
+
+Reachability is per-module and name-based — deliberately conservative;
+the cross-module surface is covered by the kernel-contract rules and the
+runtime lockcheck's dynamic cousin philosophy: cheap, repo-tuned, zero
+false negatives on the patterns we actually shipped.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Set, Tuple
+
+from repro.analysis.engine import Module, Project
+from repro.analysis.findings import Finding
+from repro.analysis.rules import (call_graph, dotted, rule,
+                                  transitive_closure)
+
+_CLOCK_CALLS = {"time.time", "time.perf_counter", "time.monotonic",
+                "time.process_time", "datetime.now", "datetime.utcnow",
+                "datetime.datetime.now", "datetime.datetime.utcnow",
+                "datetime.date.today", "date.today"}
+_UNSEEDED_RNG = {"rand", "randn", "random", "normal", "uniform", "randint",
+                 "choice", "permutation", "shuffle", "random_sample",
+                 "standard_normal", "seed"}
+_HOST_EFFECT_CALLS = {"print", "open", "input", "breakpoint", "exec",
+                      "eval"}
+_HOST_EFFECT_PREFIXES = ("os.", "sys.", "logging.", "shutil.", "time.",
+                         "np.save", "np.load", "numpy.save", "numpy.load")
+_ALLOWED_DEBUG_PREFIXES = ("jax.debug.", "pl.debug_print", "pallas.debug")
+
+
+def _impure_call(d: str) -> bool:
+    if d in _CLOCK_CALLS:
+        return True
+    for prefix in ("np.random.", "numpy.random.", "random."):
+        if d.startswith(prefix) and d.rsplit(".", 1)[-1] in _UNSEEDED_RNG:
+            return True
+    return False
+
+
+def _is_jit_decorator(node: ast.AST) -> bool:
+    d = dotted(node)
+    if d in ("jax.jit", "jit"):
+        return True
+    if isinstance(node, ast.Call):
+        f = dotted(node.func)
+        if f in ("jax.jit", "jit"):
+            return True
+        if f in ("partial", "functools.partial") and node.args:
+            return dotted(node.args[0]) in ("jax.jit", "jit")
+    return False
+
+
+def _collect_roots(module: Module) -> Dict[str, str]:
+    """Function name -> why it's traced ("jit" | "kernel") for every
+    jit-decorated / jax.jit()-wrapped function and every function passed
+    as a ``pallas_call`` body (directly or through ``partial``)."""
+    methods = {n.name for n in ast.walk(module.tree)
+               if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))}
+    roots: Dict[str, str] = {}
+    for node in ast.walk(module.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            if any(_is_jit_decorator(dec) for dec in node.decorator_list):
+                roots[node.name] = "jit"
+        elif isinstance(node, ast.Call):
+            f = dotted(node.func)
+            if f in ("jax.jit", "jit") and node.args:
+                target = node.args[0]
+                if isinstance(target, ast.Name) and target.id in methods:
+                    roots.setdefault(target.id, "jit")
+            elif f is not None and f.endswith("pallas_call") and node.args:
+                target = node.args[0]
+                if (isinstance(target, ast.Call)
+                        and dotted(target.func) in ("partial",
+                                                    "functools.partial")
+                        and target.args):
+                    target = target.args[0]
+                if isinstance(target, ast.Name) and target.id in methods:
+                    roots[target.id] = "kernel"
+    return roots
+
+
+def _all_defs(module: Module) -> Dict[str, ast.FunctionDef]:
+    """name -> def for every function in the module (methods included;
+    last definition wins — conservative for reachability)."""
+    return {n.name: n for n in ast.walk(module.tree)
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))}
+
+
+def _reachable(module: Module, roots: Dict[str, str]
+               ) -> Tuple[Set[str], Dict[str, ast.FunctionDef]]:
+    defs = _all_defs(module)
+    graph = call_graph(defs)
+    return transitive_closure(list(roots), graph), defs
+
+
+@rule("J001", "error",
+      "impure host call (clock / unseeded RNG) reachable from traced code",
+      family="jax-purity")
+def check_impure_in_traced(project: Project) -> List[Finding]:
+    out: List[Finding] = []
+    for m in project.modules:
+        roots = _collect_roots(m)
+        if not roots:
+            continue
+        reach, defs = _reachable(m, roots)
+        for name in sorted(reach):
+            fn = defs.get(name)
+            if fn is None:
+                continue
+            for node in ast.walk(fn):
+                if not isinstance(node, ast.Call):
+                    continue
+                d = dotted(node.func)
+                if d is not None and _impure_call(d):
+                    why = roots.get(name, "traced code")
+                    out.append(project.finding(
+                        m, "J001", "error", node,
+                        f"impure call {d}() inside {name}() which is "
+                        f"reachable from {why} code — its value freezes "
+                        f"at trace time; pass it in as an argument"))
+    return [f for f in out if f is not None]
+
+
+@rule("J002", "error",
+      "host side effect inside a Pallas kernel body", family="jax-purity")
+def check_kernel_side_effects(project: Project) -> List[Finding]:
+    out: List[Finding] = []
+    for m in project.modules:
+        kernels = [name for name, why in _collect_roots(m).items()
+                   if why == "kernel"]
+        if not kernels:
+            continue
+        defs = _all_defs(m)
+        for name in kernels:
+            fn = defs.get(name)
+            if fn is None:
+                continue
+            for node in ast.walk(fn):
+                if not isinstance(node, ast.Call):
+                    continue
+                d = dotted(node.func)
+                if d is None:
+                    continue
+                if d.startswith(_ALLOWED_DEBUG_PREFIXES):
+                    continue
+                if (d in _HOST_EFFECT_CALLS
+                        or d.startswith(_HOST_EFFECT_PREFIXES)):
+                    out.append(project.finding(
+                        m, "J002", "error", node,
+                        f"host side effect {d}() inside Pallas kernel "
+                        f"body {name}() — kernels run on device; use "
+                        f"jax.debug / pl.debug_print or hoist it out"))
+    return [f for f in out if f is not None]
+
+
+@rule("J003", "error",
+      "tracer concretized (.item() / float() on a traced value)",
+      family="jax-purity")
+def check_tracer_concretization(project: Project) -> List[Finding]:
+    out: List[Finding] = []
+    for m in project.modules:
+        roots = _collect_roots(m)
+        if not roots:
+            continue
+        reach, defs = _reachable(m, roots)
+        for name in sorted(reach):
+            fn = defs.get(name)
+            if fn is None:
+                continue
+            # positional params of a traced ROOT are tracers for sure;
+            # reached helpers get only the .item() check (their args may
+            # be static python by the time they're called)
+            tracer_params: Set[str] = set()
+            if name in roots:
+                tracer_params = {a.arg for a in fn.args.args
+                                 if a.arg not in ("self", "cls")}
+            for node in ast.walk(fn):
+                if not isinstance(node, ast.Call):
+                    continue
+                if (isinstance(node.func, ast.Attribute)
+                        and node.func.attr == "item"
+                        and not node.args):
+                    out.append(project.finding(
+                        m, "J003", "error", node,
+                        f".item() inside traced {name}() forces the "
+                        f"tracer to a host scalar — this fails (or "
+                        f"silently constant-folds) under jit"))
+                elif (isinstance(node.func, ast.Name)
+                      and node.func.id in ("float", "int", "bool")
+                      and len(node.args) == 1
+                      and isinstance(node.args[0], ast.Name)
+                      and node.args[0].id in tracer_params):
+                    out.append(project.finding(
+                        m, "J003", "error", node,
+                        f"{node.func.id}() applied to traced parameter "
+                        f"'{node.args[0].id}' of {name}() concretizes a "
+                        f"tracer"))
+    return [f for f in out if f is not None]

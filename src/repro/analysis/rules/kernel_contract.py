@@ -1,0 +1,193 @@
+"""Kernel-contract rules: the repo's Pallas discipline, mechanized.
+
+Every kernel ships with three artifacts that drift independently: the
+kernel module (``kernels/<name>.py``), its pure-JAX oracle twin
+(``kernels/ref.py``), and the public padded wrapper (``kernels/ops.py``)
+that resolves tiles through the schedule layer.  These rules pin the
+triangle together:
+
+K001  every public kernel entry point (a top-level public function that
+      transitively calls ``pallas_call`` within its module) must have a
+      same-named oracle in ``kernels/ref.py``.
+K002  every public ``ops.py`` wrapper that dispatches into a kernel
+      module must route through ``ops._resolve`` (the one schedule /
+      legality / interpret-autodetect boilerplate site).
+K003  tile sizes are :class:`~repro.tune.Schedule` business: outside
+      ``kernels/`` and ``tune/``, a call passing a literal ``bm=``/
+      ``bn=``/``bq=``/``bk=`` (or a literal-shaped ``pl.BlockSpec``)
+      re-hardcodes what the autotuner owns.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Set
+
+from repro.analysis.engine import Module, Project
+from repro.analysis.findings import Finding
+from repro.analysis.rules import (call_graph, dotted, rule,
+                                  top_level_functions, transitive_closure)
+
+_KERNELS_DIR = "repro/kernels/"
+_EXEMPT_KERNEL_MODULES = {"__init__", "ops", "ref"}
+_TILE_KEYWORDS = {"bm", "bn", "bq", "bk"}
+_SCHEDULE_FREE_DIRS = ("repro/kernels/", "repro/tune/")
+
+
+def _kernel_modules(project: Project) -> List[Module]:
+    out = []
+    for m in project.modules:
+        if _KERNELS_DIR not in m.path:
+            continue
+        stem = m.path.rsplit("/", 1)[-1][:-3]
+        if stem not in _EXEMPT_KERNEL_MODULES:
+            out.append(m)
+    return out
+
+
+def _calls_pallas(fn: ast.AST) -> bool:
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call):
+            d = dotted(node.func)
+            if d is not None and d.endswith("pallas_call"):
+                return True
+    return False
+
+
+def _pallas_entry_points(module: Module) -> List[ast.FunctionDef]:
+    """Public top-level functions that reach a ``pallas_call`` through
+    module-local calls — the functions a ref twin must oracle."""
+    defs = top_level_functions(module.tree)
+    graph = call_graph(defs)
+    out = []
+    for name, fn in defs.items():
+        if name.startswith("_"):
+            continue
+        closure = transitive_closure([name], graph)
+        if any(_calls_pallas(defs[c]) for c in closure if c in defs):
+            out.append(fn)
+    return out
+
+
+@rule("K001", "error",
+      "Pallas kernel entry point has no ref.py oracle twin",
+      family="kernel-contract")
+def check_ref_twin(project: Project) -> List[Finding]:
+    ref = project.by_path("repro/kernels/ref.py")
+    out: List[Finding] = []
+    for m in _kernel_modules(project):
+        entries = _pallas_entry_points(m)
+        if not entries:
+            continue
+        if ref is None:
+            out.append(project.finding(
+                m, "K001", "error", entries[0],
+                "kernels/ref.py is missing — every Pallas kernel needs "
+                "its pure-JAX oracle twin"))
+            continue
+        ref_names = set(top_level_functions(ref.tree))
+        for fn in entries:
+            if fn.name not in ref_names:
+                f = project.finding(
+                    m, "K001", "error", fn,
+                    f"kernel entry point {fn.name}() has no same-named "
+                    f"oracle in kernels/ref.py — add the reference twin "
+                    f"(tests diff kernel vs oracle)")
+                if f is not None:
+                    out.append(f)
+    return out
+
+
+def _kernel_import_aliases(fn_or_mod: ast.AST) -> Set[str]:
+    """Local names bound to kernel modules by ``from repro.kernels
+    import X [as Y]`` anywhere in the given scope (``ref`` excluded —
+    calling the oracle is not a kernel dispatch)."""
+    out: Set[str] = set()
+    for node in ast.walk(fn_or_mod):
+        if (isinstance(node, ast.ImportFrom)
+                and node.module == "repro.kernels"):
+            for alias in node.names:
+                if alias.name not in ("ref", "ops"):
+                    out.add(alias.asname or alias.name)
+    return out
+
+
+@rule("K002", "error",
+      "ops.py kernel wrapper does not route through _resolve",
+      family="kernel-contract")
+def check_wrapper_resolves(project: Project) -> List[Finding]:
+    ops = project.by_path("repro/kernels/ops.py")
+    if ops is None:
+        return []
+    aliases = _kernel_import_aliases(ops.tree)
+    defs = top_level_functions(ops.tree)
+    graph = call_graph(defs)
+    out: List[Finding] = []
+    for name, fn in defs.items():
+        if name.startswith("_"):
+            continue
+        closure = transitive_closure([name], graph)
+        fns = [defs[c] for c in closure if c in defs]
+        local_aliases = set(aliases)
+        for f in fns:
+            local_aliases |= _kernel_import_aliases(f)
+        dispatches = False
+        resolves = False
+        for f in fns:
+            for node in ast.walk(f):
+                if isinstance(node, ast.Call):
+                    if (isinstance(node.func, ast.Attribute)
+                            and isinstance(node.func.value, ast.Name)
+                            and node.func.value.id in local_aliases):
+                        dispatches = True
+                    elif (isinstance(node.func, ast.Name)
+                          and node.func.id == "_resolve"):
+                        resolves = True
+        if dispatches and not resolves:
+            f = project.finding(
+                ops, "K002", "error", fn,
+                f"wrapper {name}() dispatches into a kernel module "
+                f"without calling _resolve() — tiles bypass the "
+                f"schedule layer's legality checks and cache")
+            if f is not None:
+                out.append(f)
+    return out
+
+
+@rule("K003", "warning",
+      "tile-size literal outside the schedule layer",
+      family="kernel-contract")
+def check_hardcoded_tiles(project: Project) -> List[Finding]:
+    out: List[Finding] = []
+    for m in project.modules:
+        if any(d in m.path for d in _SCHEDULE_FREE_DIRS):
+            continue
+        for node in ast.walk(m.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            d = dotted(node.func) or ""
+            for kw in node.keywords:
+                if (kw.arg in _TILE_KEYWORDS
+                        and isinstance(kw.value, ast.Constant)
+                        and isinstance(kw.value.value, int)):
+                    f = project.finding(
+                        m, "K003", "warning", node,
+                        f"hardcoded tile {kw.arg}={kw.value.value} — "
+                        f"tile sizes come from a tune.Schedule "
+                        f"(pass schedule=... or leave the default)")
+                    if f is not None:
+                        out.append(f)
+            if d.endswith("BlockSpec") and node.args:
+                shape = node.args[0]
+                if (isinstance(shape, ast.Tuple)
+                        and shape.elts
+                        and all(isinstance(e, ast.Constant)
+                                and isinstance(e.value, int)
+                                for e in shape.elts)):
+                    f = project.finding(
+                        m, "K003", "warning", node,
+                        "literal BlockSpec shape outside kernels/ — "
+                        "block shapes belong to the kernel module and "
+                        "its Schedule")
+                    if f is not None:
+                        out.append(f)
+    return out

@@ -10,10 +10,8 @@ on 512 devices restores fine on 8 (or vice versa) — restore simply
 ``device_put``s each leaf with the *current* sharding."""
 from __future__ import annotations
 
-import json
 import os
 import re
-import shutil
 import threading
 from typing import Any
 

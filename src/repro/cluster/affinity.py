@@ -44,10 +44,9 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core import laplacian as lp
-from repro.core import similarity as sim
 from repro.cluster.operator import NormalizedOperator
 from repro.cluster.registry import Registry
+from repro.core import laplacian as lp, similarity as sim
 from repro.distrib import mesh_utils
 
 AFFINITIES = Registry("affinity")

@@ -22,8 +22,8 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import kmeans as km
 from repro.cluster.registry import Registry
+from repro.core import kmeans as km
 
 ASSIGNERS = Registry("assigner")
 

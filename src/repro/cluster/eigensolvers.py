@@ -31,9 +31,8 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.core import chebdav as cd
-from repro.core import lanczos as lz
 from repro.cluster.registry import Registry
+from repro.core import chebdav as cd, lanczos as lz
 
 EIGENSOLVERS = Registry("eigensolver")
 

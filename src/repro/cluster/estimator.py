@@ -26,14 +26,12 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro import obs
-from repro.core import kmeans as km
-from repro.core import laplacian as lp
-from repro.core import similarity as sim
 from repro.cluster import serving
 from repro.cluster.affinity import AFFINITIES
 from repro.cluster.assigners import ASSIGNERS
 from repro.cluster.eigensolvers import EIGENSOLVERS
 from repro.cluster.operator import SpectralResult
+from repro.core import kmeans as km, laplacian as lp, similarity as sim
 from repro.distrib import mesh_utils
 
 # on-disk model layout version (est.save / SpectralClustering.load)

@@ -30,8 +30,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core import kmeans as km
-from repro.core import laplacian as lp
+from repro.core import kmeans as km, laplacian as lp
 from repro.distrib import mesh_utils
 
 TRANSFORM_PATHS = ("auto", "dense", "fused")

@@ -7,7 +7,7 @@ from __future__ import annotations
 
 import importlib
 
-from repro.models.config import ModelConfig, SHAPES_BY_NAME
+from repro.models.config import SHAPES_BY_NAME, ModelConfig
 
 ARCHS = (
     "gemma3-1b",

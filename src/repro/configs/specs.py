@@ -5,7 +5,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.models.config import ModelConfig, ShapeCell, SHAPES_BY_NAME
+from repro.models.config import SHAPES_BY_NAME, ModelConfig, ShapeCell
 
 
 def input_specs(cfg: ModelConfig, cell: ShapeCell | str) -> dict:

@@ -11,17 +11,16 @@ practice; plain random init frequently collapses on spectral embeddings).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.distrib import mesh_utils
 from repro.core.seeding import kmeans_plusplus_init  # noqa: F401  (shared
 # D^2-sampling seeder, re-exported: callers historically import it from here)
 from repro.core.similarity import pairwise_sq_dists
+from repro.distrib import mesh_utils
 
 
 @jax.tree_util.register_pytree_node_class

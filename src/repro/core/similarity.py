@@ -24,7 +24,6 @@ Two execution modes:
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
 from typing import Any
 

@@ -1,3 +1,4 @@
 from repro.data.chunked import ArrayChunks, BlobChunks
 from repro.data.graph_file import parse_topology, write_topology
-from repro.data.synthetic import blobs, rings, lm_batches, synthetic_graph
+from repro.data.synthetic import (blobs, lm_batches, rings,
+                                  synthetic_graph)

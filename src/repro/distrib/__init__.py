@@ -4,6 +4,6 @@ from repro.distrib.mesh_utils import (
     make_mesh,
     mesh_size,
     pad_to_multiple,
-    row_sharding,
     replicated,
+    row_sharding,
 )

@@ -21,7 +21,6 @@ partitioned module, so terms divide by per-chip peaks directly.
 """
 from __future__ import annotations
 
-import json
 import re
 from dataclasses import dataclass, field
 

@@ -54,9 +54,10 @@ def task_key(key: Union[int, Tuple[int, int], str]) -> str:
 
 
 class FaultPlan:
-    """A deterministic set of fault directives.  Thread-safe: directives
-    are armed at construction and checked (under a lock) from worker
-    threads; each fires at most once and is recorded in :attr:`fired`."""
+    """A deterministic set of fault directives.  Thread-safe: arming and
+    firing both take the plan's lock, so directives may even be armed
+    while a job runs; each fires at most once and is recorded in
+    :attr:`fired`."""
 
     _CORRUPT_MODES = ("truncate", "bitflip")
 
@@ -75,7 +76,8 @@ class FaultPlan:
              attempt: int = 0) -> "FaultPlan":
         """Raise :class:`InjectedFault` when ``attempt`` of the named task
         starts."""
-        self._fail[(stage, task_key(key), int(attempt))] = True
+        with self._lock:
+            self._fail[(stage, task_key(key), int(attempt))] = True
         return self
 
     def fail_n(self, stage: str, key, n: int) -> "FaultPlan":
@@ -99,7 +101,8 @@ class FaultPlan:
         if int(after_inputs) < 1:
             raise ValueError(f"after_inputs must be >= 1, "
                              f"got {after_inputs}")
-        self._midfold[(stage, task_key(key))] = int(after_inputs)
+        with self._lock:
+            self._midfold[(stage, task_key(key))] = int(after_inputs)
         return self
 
     def delay(self, stage: str, key, seconds: float,
@@ -107,7 +110,8 @@ class FaultPlan:
         """Sleep ``seconds`` at the start of ``attempt`` of the named task
         — the straggler injector (speculative backups run a different
         attempt number, so they dodge the delay)."""
-        self._delay[(stage, task_key(key), int(attempt))] = float(seconds)
+        with self._lock:
+            self._delay[(stage, task_key(key), int(attempt))] = float(seconds)
         return self
 
     def corrupt(self, store_key: str, mode: str = "bitflip") -> "FaultPlan":
@@ -118,7 +122,8 @@ class FaultPlan:
         if mode not in self._CORRUPT_MODES:
             raise ValueError(f"corrupt mode must be one of "
                              f"{self._CORRUPT_MODES}, got {mode!r}")
-        self._corrupt[store_key] = mode
+        with self._lock:
+            self._corrupt[store_key] = mode
         return self
 
     @classmethod

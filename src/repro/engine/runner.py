@@ -30,11 +30,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import obs
-from repro.core import kmeans as km
-from repro.core import lanczos as lz
-from repro.core import similarity as sim
-from repro.engine import kmeans as skm
-from repro.engine import tasks
+from repro.core import kmeans as km, lanczos as lz, similarity as sim
+from repro.engine import kmeans as skm, tasks
 from repro.engine.operator import (ShardedCSRGraph, make_normalized_operator)
 from repro.engine.plan import JobPlan, route_path
 from repro.engine.store import ShardStore

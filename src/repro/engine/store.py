@@ -221,7 +221,8 @@ class ShardStore:
     # -- background writer ---------------------------------------------------
 
     def _writer(self) -> ThreadPoolExecutor:
-        # single worker: all spill writes serialize in submission order, so
+        # caller holds the lock (only _spill_one calls this, mid-eviction).
+        # Single worker: all spill writes serialize in submission order, so
         # two spills of the same key can never race on one path
         if self._writer_pool is None:
             pool = ThreadPoolExecutor(max_workers=1,
@@ -482,6 +483,7 @@ class ShardStore:
             pass                  # a failed write still must not block close
         with self._lock:
             pool, self._writer_pool = self._writer_pool, None
+            fin, self._writer_finalizer = self._writer_finalizer, None
             paths = list(self._disk.values())
             self._disk.clear()
             self._ram.clear()
@@ -490,9 +492,8 @@ class ShardStore:
             self.ram_bytes = 0
         if pool is not None:
             pool.shutdown(wait=True)
-            if self._writer_finalizer is not None:
-                self._writer_finalizer.detach()
-                self._writer_finalizer = None
+        if fin is not None:
+            fin.detach()
         for path in paths:
             if os.path.exists(path):
                 os.remove(path)

@@ -42,8 +42,7 @@ import numpy as np
 
 from repro.engine.plan import JobPlan, producer_of
 from repro.engine.store import ShardStore
-from repro.kernels import ops as kops
-from repro.kernels import topt
+from repro.kernels import ops as kops, topt
 
 
 def _chunk_of(cols: np.ndarray, plan: JobPlan) -> np.ndarray:

@@ -16,10 +16,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import block_matvec as _mv
-from repro.kernels import kmeans_assign as _ka
-from repro.kernels import rbf_similarity as _rbf
-from repro.kernels import ref
+from repro.kernels import (block_matvec as _mv, kmeans_assign as _ka,
+                           rbf_similarity as _rbf, ref)
 
 
 _interpret_default = _mv.interpret_default   # one TPU-detection rule

@@ -23,7 +23,6 @@ from repro.checkpoint import CheckpointManager
 from repro.data import synthetic
 from repro.distrib import mesh_utils, sharding
 from repro.models import api
-from repro.models import params as pp
 from repro.train import optimizer as opt_lib
 from repro.train.step import (init_ef_state, make_compressed_train_step,
                               make_train_step)

@@ -8,8 +8,7 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
-from repro.models import encdec, ssm, transformer, xlstm
-from repro.models import params as pp
+from repro.models import encdec, params as pp, ssm, transformer, xlstm
 from repro.models.config import ModelConfig
 
 _FAMILIES = {

@@ -7,9 +7,6 @@ vocab, layers.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any
-
 import jax
 import jax.numpy as jnp
 from jax import lax

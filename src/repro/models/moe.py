@@ -18,10 +18,10 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.distrib import mesh_utils
 from repro.models.config import ModelConfig
 from repro.models.layers import _act
 from repro.models.params import Spec
-from repro.distrib import mesh_utils
 
 
 def moe_specs(cfg: ModelConfig, layers: int | None = None) -> dict:

@@ -9,7 +9,7 @@ into real arrays (smoke tests), abstract stand-ins (dry-run) or shardings
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Mapping
+from typing import Any, Mapping
 
 import jax
 import jax.numpy as jnp

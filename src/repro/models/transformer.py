@@ -12,16 +12,12 @@ pattern) rides along as scanned xs, not as separate programs.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any
-
 import jax
 import jax.numpy as jnp
 from jax import lax
 
 from repro.distrib import act_sharding
-from repro.models import layers as ll
-from repro.models import moe as moe_lib
+from repro.models import layers as ll, moe as moe_lib
 from repro.models.config import ModelConfig
 from repro.models.params import Spec
 

@@ -17,8 +17,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.models import layers as ll
-from repro.models import recurrent as rec
+from repro.models import layers as ll, recurrent as rec
 from repro.models.config import ModelConfig
 from repro.models.params import Spec
 

@@ -7,7 +7,7 @@ the data axis (ZeRO-1)."""
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

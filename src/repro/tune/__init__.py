@@ -17,13 +17,13 @@ Entry points:
   * ``python benchmarks/run.py tune_sweep [--quick]`` — sweep + cache
     write + BENCH_tune.json.
 """
-from repro.tune.schedule import (KERNELS, Schedule, ScheduleError,
-                                 KernelSpec, as_schedule, resolve, spec,
-                                 validate_spec)
+from repro.tune.autotune import autotune, candidates, tune_all
 from repro.tune.cache import (ScheduleCache, bucket, cache_key,
                               default_cache, default_cache_path,
                               device_kind)
-from repro.tune.autotune import autotune, candidates, tune_all
+from repro.tune.schedule import (KERNELS, KernelSpec, Schedule,
+                                 ScheduleError, as_schedule, resolve, spec,
+                                 validate_spec)
 
 __all__ = [
     "KERNELS", "Schedule", "ScheduleError", "KernelSpec", "as_schedule",

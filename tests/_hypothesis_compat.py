@@ -13,7 +13,6 @@ try:  # pragma: no cover - exercised when hypothesis is installed
     from hypothesis import given, settings, strategies as st  # noqa: F401
     HAVE_HYPOTHESIS = True
 except ImportError:
-    import functools
     import random
 
     HAVE_HYPOTHESIS = False

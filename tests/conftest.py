@@ -1,6 +1,12 @@
 """Shared fixtures.  NOTE: device count must stay 1 here (the dry-run sets
 its own 512-device flag in-process); multi-device tests spawn subprocesses
-with their own XLA_FLAGS."""
+with their own XLA_FLAGS.
+
+``REPRO_LOCKCHECK=1`` arms the runtime lock-discipline checker
+(:mod:`repro.analysis.lockcheck`) for the whole session: every
+``threading.Lock``/``RLock`` created after this point is tracked, and the
+session FAILS at exit if the recorded acquisition-order graph has a cycle
+(a latent deadlock), cross-validating the static C002 rule."""
 import os
 import subprocess
 import sys
@@ -9,6 +15,24 @@ import pytest
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SRC = os.path.join(REPO, "src")
+
+_LOCKCHECK = os.environ.get("REPRO_LOCKCHECK") == "1"
+if _LOCKCHECK:
+    if SRC not in sys.path:
+        sys.path.insert(0, SRC)
+    from repro.analysis import lockcheck
+    lockcheck.install()
+
+
+def pytest_sessionfinish(session, exitstatus):
+    if not _LOCKCHECK:
+        return
+    rep = lockcheck.report()
+    print(f"\n[lockcheck] {rep['locks']} locks from {rep['sites']} sites, "
+          f"{rep['acquisitions']} acquisitions, {len(rep['edges'])} "
+          f"order edges, {len(rep['cycles'])} cycles")
+    # an exception here fails the run — exactly what the CI gate wants
+    lockcheck.assert_acyclic()
 
 
 def run_with_devices(code: str, n_devices: int, timeout: int = 900) -> str:

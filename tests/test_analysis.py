@@ -1,0 +1,615 @@
+"""Tests for the static-analysis engine (repro.analysis): one positive
+(flags) and one negative (silent) fixture per rule, the baseline
+add/expire round-trip, the JSON report schema, inline suppression, and
+the runtime lockcheck's cycle detector (exercised in subprocesses so its
+global threading patch never leaks into this session)."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro import analysis
+from repro.analysis.__main__ import main as cli_main
+from repro.analysis.baseline import load_baseline, save_baseline
+from repro.analysis.rules import RULES
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+
+def run_check(tmp_path, files, only=None, baseline_path=None):
+    """Write the fixture tree under tmp_path and run the one-call API."""
+    for rel, src in files.items():
+        p = tmp_path / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(textwrap.dedent(src))
+    return analysis.check(sorted(files), root=str(tmp_path), only=only,
+                          baseline_path=baseline_path)
+
+
+def rules_of(report):
+    return sorted({f.rule for f in report.findings})
+
+
+# -- registry ----------------------------------------------------------------
+
+def test_registry_has_every_documented_rule():
+    assert {"S000", "C001", "C002", "C003",
+            "J001", "J002", "J003",
+            "K001", "K002", "K003"} <= set(RULES)
+    for info in RULES.values():
+        assert info.severity in ("error", "warning")
+        assert info.summary
+
+
+def test_syntax_error_is_a_finding_not_a_crash(tmp_path):
+    rep = run_check(tmp_path, {"bad.py": "def oops(:\n    pass\n"},
+                    only=["S000"])
+    assert rules_of(rep) == ["S000"]
+    assert rep.new[0].path == "bad.py"
+
+
+# -- C001: mixed lock discipline ---------------------------------------------
+
+C001_POS = """\
+    import threading
+
+    class Counter:
+        def __init__(self):
+            self._lock = threading.Lock()
+            self.n = 0
+
+        def bump(self):
+            with self._lock:
+                self.n += 1
+
+        def reset(self):
+            self.n = 0
+"""
+
+C001_NEG = """\
+    import threading
+
+    class Counter:
+        def __init__(self):
+            self._lock = threading.Lock()
+            self.n = 0
+
+        def bump(self):
+            with self._lock:
+                self.n += 1
+
+        def reset(self):
+            with self._lock:
+                self.n = 0
+
+        def _zero_locked(self):
+            self.n = 0
+"""
+
+
+def test_c001_flags_unguarded_mutation(tmp_path):
+    rep = run_check(tmp_path, {"m.py": C001_POS}, only=["C001"])
+    assert len(rep.new) == 1
+    f = rep.new[0]
+    assert f.rule == "C001" and "reset" in f.message and "'self.n'" in f.message
+
+
+def test_c001_silent_when_guarded_or_held_by_convention(tmp_path):
+    rep = run_check(tmp_path, {"m.py": C001_NEG}, only=["C001"])
+    assert rep.new == []
+
+
+def test_c001_subscript_mutation_counts(tmp_path):
+    src = C001_POS.replace("self.n = 0", 'self.n = {"k": 0}') \
+                  .replace("self.n += 1", 'self.n["k"] += 1')
+    rep = run_check(tmp_path, {"m.py": src}, only=["C001"])
+    assert len(rep.new) == 1
+
+
+# -- C002: lock-order cycle + non-reentrant self-nesting ----------------------
+
+C002_CYCLE = """\
+    def forward(a, b):
+        with a.mu:
+            with b.mu:
+                pass
+
+    def backward(a, b):
+        with b.mu:
+            with a.mu:
+                pass
+"""
+
+C002_ORDERED = """\
+    def forward(a, b):
+        with a.mu:
+            with b.mu:
+                pass
+
+    def also_forward(a, b):
+        with a.mu:
+            with b.mu:
+                pass
+"""
+
+C002_SELF_NEST = """\
+    import threading
+
+    class S:
+        def __init__(self):
+            self._lock = threading.Lock()
+
+        def outer(self):
+            with self._lock:
+                with self._lock:
+                    pass
+"""
+
+
+def test_c002_flags_lock_order_cycle(tmp_path):
+    rep = run_check(tmp_path, {"m.py": C002_CYCLE}, only=["C002"])
+    assert len(rep.new) == 1
+    assert "cycle" in rep.new[0].message
+
+
+def test_c002_silent_on_consistent_order(tmp_path):
+    rep = run_check(tmp_path, {"m.py": C002_ORDERED}, only=["C002"])
+    assert rep.new == []
+
+
+def test_c002_flags_nonreentrant_self_nesting(tmp_path):
+    rep = run_check(tmp_path, {"m.py": C002_SELF_NEST}, only=["C002"])
+    assert len(rep.new) == 1
+    assert "already held" in rep.new[0].message
+
+
+def test_c002_rlock_self_nesting_is_fine(tmp_path):
+    rep = run_check(tmp_path,
+                    {"m.py": C002_SELF_NEST.replace("Lock()", "RLock()")},
+                    only=["C002"])
+    assert rep.new == []
+
+
+# -- C003: dropped concurrency results ----------------------------------------
+
+C003_POS = """\
+    import threading
+
+    def fire(pool):
+        pool.submit(work)
+
+    def spawn():
+        t = threading.Thread(target=work)
+        t.start()
+
+    def work():
+        pass
+"""
+
+C003_NEG = """\
+    import threading
+
+    def fire(pool):
+        fut = pool.submit(work)
+        return fut.result()
+
+    def spawn():
+        t = threading.Thread(target=work, daemon=True)
+        t.start()
+
+    def work():
+        pass
+"""
+
+
+def test_c003_flags_dropped_future_and_unjoined_thread(tmp_path):
+    rep = run_check(tmp_path, {"m.py": C003_POS}, only=["C003"])
+    msgs = " | ".join(f.message for f in rep.new)
+    assert len(rep.new) == 2
+    assert "discarded" in msgs and "never joined" in msgs
+
+
+def test_c003_silent_when_consumed(tmp_path):
+    rep = run_check(tmp_path, {"m.py": C003_NEG}, only=["C003"])
+    assert rep.new == []
+
+
+# -- J001: impure calls reachable from traced code ----------------------------
+
+J001_POS = """\
+    import time
+    import jax
+
+    def _stamp():
+        return time.time()
+
+    @jax.jit
+    def f(x):
+        return x * _stamp()
+"""
+
+J001_NEG = """\
+    import time
+    import jax
+
+    @jax.jit
+    def f(x, t):
+        return x * t
+
+    def stamp_outside():
+        return time.time()
+"""
+
+
+def test_j001_flags_clock_reachable_from_jit(tmp_path):
+    rep = run_check(tmp_path, {"m.py": J001_POS}, only=["J001"])
+    assert len(rep.new) == 1
+    assert "time.time" in rep.new[0].message
+
+
+def test_j001_silent_for_host_side_clock(tmp_path):
+    rep = run_check(tmp_path, {"m.py": J001_NEG}, only=["J001"])
+    assert rep.new == []
+
+
+def test_j001_flags_unseeded_numpy_rng(tmp_path):
+    src = J001_POS.replace("import time", "import numpy as np") \
+                  .replace("time.time()", "np.random.rand()")
+    rep = run_check(tmp_path, {"m.py": src}, only=["J001"])
+    assert len(rep.new) == 1
+
+
+# -- J002: host side effects in kernel bodies ---------------------------------
+
+J002_POS = """\
+    from jax.experimental import pallas as pl
+
+    def _kernel(x_ref, o_ref):
+        print("trace me")
+        o_ref[...] = x_ref[...]
+
+    def run(x):
+        return pl.pallas_call(_kernel, out_shape=x)(x)
+"""
+
+
+def test_j002_flags_print_in_kernel(tmp_path):
+    rep = run_check(tmp_path, {"m.py": J002_POS}, only=["J002"])
+    assert len(rep.new) == 1
+    assert "print" in rep.new[0].message
+
+
+def test_j002_allows_pl_debug_print(tmp_path):
+    src = J002_POS.replace('print("trace me")',
+                           'pl.debug_print("x = {}", x_ref[0])')
+    rep = run_check(tmp_path, {"m.py": src}, only=["J002"])
+    assert rep.new == []
+
+
+# -- J003: tracer concretization ----------------------------------------------
+
+J003_POS = """\
+    import jax
+
+    @jax.jit
+    def f(x):
+        return float(x)
+"""
+
+J003_NEG = """\
+    import jax
+
+    @jax.jit
+    def f(x, *, scale):
+        return x * float(scale)
+"""
+
+
+def test_j003_flags_float_on_positional_param(tmp_path):
+    rep = run_check(tmp_path, {"m.py": J003_POS}, only=["J003"])
+    assert len(rep.new) == 1
+    assert "float()" in rep.new[0].message
+
+
+def test_j003_keyword_only_params_are_static(tmp_path):
+    rep = run_check(tmp_path, {"m.py": J003_NEG}, only=["J003"])
+    assert rep.new == []
+
+
+def test_j003_flags_item_in_reachable_helper(tmp_path):
+    src = """\
+        import jax
+
+        def _peek(x):
+            return x.item()
+
+        @jax.jit
+        def f(x):
+            return _peek(x)
+    """
+    rep = run_check(tmp_path, {"m.py": src}, only=["J003"])
+    assert len(rep.new) == 1
+    assert ".item()" in rep.new[0].message
+
+
+# -- K001: ref.py oracle twin -------------------------------------------------
+
+K_KERNEL = """\
+    from jax.experimental import pallas as pl
+
+    def _body(x_ref, o_ref):
+        o_ref[...] = x_ref[...]
+
+    def run(x):
+        return pl.pallas_call(_body, out_shape=x)(x)
+"""
+
+
+def test_k001_flags_missing_ref_twin(tmp_path):
+    rep = run_check(tmp_path, {
+        "src/repro/kernels/foo.py": K_KERNEL,
+        "src/repro/kernels/ref.py": "def other(x):\n    return x\n",
+    }, only=["K001"])
+    assert len(rep.new) == 1
+    assert "run()" in rep.new[0].message
+
+
+def test_k001_silent_with_ref_twin(tmp_path):
+    rep = run_check(tmp_path, {
+        "src/repro/kernels/foo.py": K_KERNEL,
+        "src/repro/kernels/ref.py": "def run(x):\n    return x\n",
+    }, only=["K001"])
+    assert rep.new == []
+
+
+# -- K002: ops.py wrappers route through _resolve -----------------------------
+
+K002_POS = """\
+    from repro.kernels import foo
+
+    def matmul(x):
+        return foo.run(x)
+"""
+
+K002_NEG = """\
+    from repro.kernels import foo
+
+    def _resolve(name, shape):
+        return None
+
+    def matmul(x):
+        sched = _resolve("matmul", x.shape)
+        return foo.run(x, sched)
+"""
+
+
+def test_k002_flags_wrapper_bypassing_resolve(tmp_path):
+    rep = run_check(tmp_path, {"src/repro/kernels/ops.py": K002_POS},
+                    only=["K002"])
+    assert len(rep.new) == 1
+    assert "_resolve" in rep.new[0].message
+
+
+def test_k002_silent_when_resolving(tmp_path):
+    rep = run_check(tmp_path, {"src/repro/kernels/ops.py": K002_NEG},
+                    only=["K002"])
+    assert rep.new == []
+
+
+# -- K003: tile literals outside the schedule layer ---------------------------
+
+K003_SRC = """\
+    def run(op):
+        return op(bm=128)
+"""
+
+
+def test_k003_flags_tile_literal_outside_kernels(tmp_path):
+    rep = run_check(tmp_path, {"src/repro/engine/glue.py": K003_SRC},
+                    only=["K003"])
+    assert len(rep.new) == 1
+    assert "bm=128" in rep.new[0].message
+
+
+def test_k003_silent_inside_kernels_and_tune(tmp_path):
+    rep = run_check(tmp_path, {
+        "src/repro/kernels/foo.py": K003_SRC,
+        "src/repro/tune/sched.py": K003_SRC,
+    }, only=["K003"])
+    assert rep.new == []
+
+
+# -- inline suppression -------------------------------------------------------
+
+def test_inline_suppression_mutes_named_rule(tmp_path):
+    src = C001_POS.replace("self.n = 0\n",
+                           "self.n = 0  # repro: ignore[C001]\n")
+    rep = run_check(tmp_path, {"m.py": src}, only=["C001"])
+    assert rep.new == []
+
+
+def test_inline_suppression_other_rule_still_fires(tmp_path):
+    src = C001_POS.replace("self.n = 0\n",
+                           "self.n = 0  # repro: ignore[K003]\n")
+    rep = run_check(tmp_path, {"m.py": src}, only=["C001"])
+    assert len(rep.new) == 1
+
+
+# -- baseline round-trip ------------------------------------------------------
+
+def test_baseline_add_then_expire_round_trip(tmp_path):
+    bl = str(tmp_path / "baseline.json")
+    rep = run_check(tmp_path, {"m.py": C001_POS}, only=["C001"])
+    assert len(rep.new) == 1 and rep.baselined == []
+
+    save_baseline(bl, rep.findings)
+    assert set(load_baseline(bl)) == {f.fingerprint for f in rep.findings}
+
+    # baselined: same finding no longer gates
+    rep2 = run_check(tmp_path, {"m.py": C001_POS}, only=["C001"],
+                     baseline_path=bl)
+    assert rep2.new == [] and len(rep2.baselined) == 1 and rep2.expired == []
+
+    # an edit ABOVE the finding must not expire it (line-stable fingerprint)
+    rep3 = run_check(tmp_path, {"m.py": "    import os  # padding\n"
+                                + C001_POS},
+                     only=["C001"], baseline_path=bl)
+    assert rep3.new == [] and len(rep3.baselined) == 1 and rep3.expired == []
+
+    # fixing the code expires the entry
+    rep4 = run_check(tmp_path, {"m.py": C001_NEG}, only=["C001"],
+                     baseline_path=bl)
+    assert rep4.new == [] and rep4.baselined == [] and len(rep4.expired) == 1
+
+
+def test_corrupt_baseline_version_is_an_error(tmp_path):
+    bl = tmp_path / "baseline.json"
+    bl.write_text(json.dumps({"version": 99, "findings": []}))
+    with pytest.raises(ValueError):
+        load_baseline(str(bl))
+
+
+# -- CLI + JSON schema --------------------------------------------------------
+
+def test_cli_json_report_schema_and_exit_codes(tmp_path, capsys):
+    (tmp_path / "m.py").write_text(textwrap.dedent(C001_POS))
+    rc = cli_main(["check", "m.py", "--root", str(tmp_path), "--json",
+                   "--rules", "C001"])
+    doc = json.loads(capsys.readouterr().out)
+    assert rc == 1
+    assert doc["version"] == 1
+    assert doc["counts"] == {"total": 1, "new": 1, "baselined": 0,
+                             "expired": 0}
+    f = doc["findings"][0]
+    assert set(f) == {"rule", "severity", "path", "line", "message",
+                      "snippet", "fingerprint"}
+    assert f["rule"] == "C001" and f["path"] == "m.py" and f["line"] > 0
+    assert len(f["fingerprint"]) == 16
+
+    # clean tree exits 0
+    (tmp_path / "m.py").write_text(textwrap.dedent(C001_NEG))
+    rc = cli_main(["check", "m.py", "--root", str(tmp_path), "--json",
+                   "--rules", "C001"])
+    capsys.readouterr()
+    assert rc == 0
+
+
+def test_cli_update_baseline_then_gate_passes(tmp_path, capsys):
+    (tmp_path / "m.py").write_text(textwrap.dedent(C001_POS))
+    bl = str(tmp_path / "bl.json")
+    rc = cli_main(["check", "m.py", "--root", str(tmp_path),
+                   "--baseline", bl, "--update-baseline"])
+    capsys.readouterr()
+    assert rc == 0
+    rc = cli_main(["check", "m.py", "--root", str(tmp_path),
+                   "--baseline", bl])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "OK: 0 new finding(s), 1 baselined" in out
+
+
+# -- dogfood: the repo itself gates clean against its baseline ----------------
+
+def test_repo_is_clean_against_committed_baseline():
+    rep = analysis.check(["src"], root=REPO,
+                         baseline_path=os.path.join(
+                             REPO, ".analysis-baseline.json"))
+    assert rep.new == [], "\n".join(f.format() for f in rep.new)
+    assert rep.expired == [], f"stale baseline entries: {rep.expired}"
+
+
+# -- runtime lockcheck (subprocess: its patch is process-global) --------------
+
+def _run_lockcheck_snippet(tmp_path, body: str) -> subprocess.CompletedProcess:
+    # runs from a real file, not -c: lockcheck only tracks locks whose
+    # allocation site is a repo-ish path, and "<string>" is foreign
+    script = tmp_path / "lockcheck_snippet.py"
+    script.write_text(textwrap.dedent("""\
+        import threading
+        from repro.analysis import lockcheck
+        lockcheck.install()
+    """) + textwrap.dedent(body))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    return subprocess.run([sys.executable, str(script)],
+                          capture_output=True, text=True, env=env,
+                          timeout=120)
+
+
+def test_lockcheck_detects_induced_cycle(tmp_path):
+    out = _run_lockcheck_snippet(tmp_path, """\
+        a = threading.Lock()
+        b = threading.Lock()
+        with a:
+            with b:
+                pass
+        with b:
+            with a:
+                pass
+        assert lockcheck.find_cycles(), "cycle not detected"
+        try:
+            lockcheck.assert_acyclic()
+        except lockcheck.LockOrderError as e:
+            print("CAUGHT:", e)
+        else:
+            raise SystemExit("assert_acyclic did not raise")
+    """)
+    assert out.returncode == 0, out.stderr
+    assert "CAUGHT:" in out.stdout and "cycle" in out.stdout
+
+
+def test_lockcheck_ordered_acquisition_passes(tmp_path):
+    out = _run_lockcheck_snippet(tmp_path, """\
+        a = threading.Lock()
+        b = threading.Lock()
+        for _ in range(3):
+            with a:
+                with b:
+                    pass
+        rep = lockcheck.report()
+        assert rep["locks"] == 2 and rep["cycles"] == []
+        assert len(rep["edges"]) == 1
+        lockcheck.assert_acyclic()
+        print("EDGE:", rep["edges"][0]["from"], "->", rep["edges"][0]["to"])
+    """)
+    assert out.returncode == 0, out.stderr
+    assert "EDGE:" in out.stdout
+
+
+def test_lockcheck_ignores_stdlib_allocated_locks(tmp_path):
+    # ThreadPoolExecutor's internal locks (allocated from the stdlib)
+    # must stay untracked: their orderings are CPython's business and
+    # produce false-positive cycles if recorded.
+    out = _run_lockcheck_snippet(tmp_path, """\
+        from concurrent.futures import ThreadPoolExecutor
+        mine = threading.Lock()
+        with ThreadPoolExecutor(max_workers=2) as pool:
+            for f in [pool.submit(lambda i=i: i * i) for i in range(8)]:
+                f.result()
+        rep = lockcheck.report()
+        assert all("concurrent" not in s["from"] and "concurrent" not in
+                   s["to"] for s in rep["edges"]), rep["edges"]
+        lockcheck.assert_acyclic()
+        print("SITES:", rep["sites"])
+    """)
+    assert out.returncode == 0, out.stderr
+    assert "SITES:" in out.stdout
+
+
+def test_lockcheck_rlock_reentry_is_not_an_edge(tmp_path):
+    out = _run_lockcheck_snippet(tmp_path, """\
+        r = threading.RLock()
+        with r:
+            with r:
+                pass
+        rep = lockcheck.report()
+        assert rep["edges"] == [], rep["edges"]
+        lockcheck.assert_acyclic()
+        print("OK")
+    """)
+    assert out.returncode == 0, out.stderr
+    assert "OK" in out.stdout

@@ -20,11 +20,8 @@ from _hypothesis_compat import given, settings, st
 
 from repro.cluster import SpectralClustering, ari
 from repro.cluster.affinity import AFFINITIES
-from repro.core import chebdav as cd
-from repro.core import lanczos as lz
-from repro.core import laplacian as lp
-from repro.core import seeding
-from repro.core import similarity as sim
+from repro.core import (chebdav as cd, lanczos as lz, laplacian as lp,
+                        seeding, similarity as sim)
 from repro.data import synthetic
 from repro.distrib import mesh_utils
 

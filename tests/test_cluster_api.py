@@ -9,8 +9,7 @@ import pytest
 
 from repro.cluster import (AFFINITIES, ASSIGNERS, EIGENSOLVERS,
                            SpectralClustering)
-from repro.core import similarity as sim
-from repro.core import spectral
+from repro.core import similarity as sim, spectral
 from repro.data import synthetic
 from repro.data.graph_file import adjacency_dense, parse_topology, write_topology
 

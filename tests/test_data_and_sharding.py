@@ -1,6 +1,5 @@
 """Data pipeline (paper §5.1 format) and sharding-rule unit tests."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P

@@ -1,9 +1,6 @@
 """Multi-device behaviour (subprocess with fake XLA devices): the
 distributed similarity schedule, sym_matvec, k-means MapReduce, and the
 full pipeline must match the dense oracle bit-for-bit-ish on 4/8 devices."""
-import pytest
-
-
 def test_triangular_similarity_4dev(subproc):
     out = subproc("""
 import numpy as np, jax, jax.numpy as jnp

@@ -20,7 +20,7 @@ import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.cluster import SpectralClustering, ari
-from repro.cluster.affinity import AFFINITIES, build_fused_rbf_operator
+from repro.cluster.affinity import AFFINITIES
 from repro.data import synthetic
 from repro.distrib import mesh_utils
 from repro.kernels import ops, ref

@@ -21,10 +21,9 @@ from __future__ import annotations
 import json
 import threading
 
+import jax.numpy as jnp
 import numpy as np
 import pytest
-
-import jax.numpy as jnp
 
 from repro import obs
 from repro.cluster import SpectralClustering

@@ -12,7 +12,6 @@ import os
 import pickle
 import threading
 import time
-from collections import deque
 
 import jax.numpy as jnp
 import numpy as np

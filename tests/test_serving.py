@@ -15,14 +15,12 @@ Contracts under test (ISSUE 5):
 """
 from __future__ import annotations
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
-import jax
-import jax.numpy as jnp
-
-from repro.cluster import SpectralClustering, ari
-from repro.cluster import serving
+from repro.cluster import SpectralClustering, ari, serving
 from repro.data import synthetic
 from repro.kernels import ops, ref
 from repro.launch.cluster_serve import ClusterServer, PredictRequest

@@ -6,11 +6,8 @@ import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, st
 
-from repro.core import kmeans as km
-from repro.core import lanczos as lz
-from repro.core import laplacian as lp
-from repro.core import similarity as sim
-from repro.core import spectral
+from repro.core import (kmeans as km, lanczos as lz, laplacian as lp,
+                        similarity as sim, spectral)
 from repro.data import synthetic
 
 
